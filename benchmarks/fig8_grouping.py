@@ -1,0 +1,66 @@
+"""Fig. 8 reproduction: sparse-tensor-engine speedup of the grouped
+(CSR-fixed-nnz) kernel over dense GEMM, vs matrix size and density.
+
+The paper's numbers come from Vitis-Analyzer simulation of one AIE; we
+drive the same published per-AIE rates with OUR Algorithm-1 grouping
+applied to random matrices of the same size/density, and compare the
+modeled speedups against the paper's reported 2.9x / 2.1x / 2.5x
+(sizes 64 / 32 / 16 at density 0.1).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cost_model import grouping_speedup
+from repro.core.grouping import group_rows, grouping_density
+
+PAPER_SPEEDUP_AT_01 = {64: 2.9, 32: 2.1, 16: 2.5}
+SIZES = (16, 32, 64)
+DENSITIES = (0.1, 0.2, 0.3, 0.4, 0.5, 0.6)
+
+
+def run(seed: int = 0, n_trials: int = 16, verbose: bool = True) -> dict:
+    rng = np.random.default_rng(seed)
+    results = {}
+    for size in SIZES:
+        for dens in DENSITIES:
+            pad_d, fixed, var = [], [], []
+            for _ in range(n_trials):
+                a = (rng.random((size, size)) < dens)
+                nnz = a.sum(axis=1)
+                groups = group_rows(nnz, tau=0.5)
+                pd = grouping_density(nnz, groups)
+                m = grouping_speedup(size, float(a.mean()), pd)
+                pad_d.append(pd)
+                fixed.append(m["speedup_fixed"])
+                var.append(m["speedup_variable"])
+            results[(size, dens)] = {
+                "padded_density": float(np.mean(pad_d)),
+                "speedup_csr_fixed": float(np.mean(fixed)),
+                "speedup_csr_variable": float(np.mean(var)),
+            }
+    if verbose:
+        print("== Fig. 8: sparse engine speedup vs dense (modeled with "
+              "measured Alg-1 grouping) ==")
+        print(f"{'size':>5} {'density':>8} {'pad-dens':>9} "
+              f"{'CSR-fixed':>10} {'CSR-var':>8}  paper@0.1")
+        for (size, dens), r in results.items():
+            ref = (f"{PAPER_SPEEDUP_AT_01[size]:.1f}x"
+                   if abs(dens - 0.1) < 1e-9 else "")
+            print(f"{size:>5} {dens:>8.1f} {r['padded_density']:>9.2f} "
+                  f"{r['speedup_csr_fixed']:>9.2f}x "
+                  f"{r['speedup_csr_variable']:>7.2f}x  {ref}")
+        # the paper's qualitative claims, checked quantitatively:
+        for size in SIZES:
+            s01 = results[(size, 0.1)]["speedup_csr_fixed"]
+            s06 = results[(size, 0.6)]["speedup_csr_fixed"]
+            v01 = results[(size, 0.1)]["speedup_csr_variable"]
+            print(f"  size {size}: fixed-nnz {s01:.2f}x at d=0.1 -> "
+                  f"{s06:.2f}x at d=0.6 (paper: speedup vanishes >=0.5); "
+                  f"variable-loop {v01:.2f}x (<1: slower than dense, as in "
+                  f"the paper)")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Render the EXPERIMENTS.md roofline table from dry-run JSON records.
+
+  python -m benchmarks.roofline_report results/dryrun_optimized.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_t(t):
+    if t == 0:
+        return "0"
+    if t >= 1:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t*1e3:.1f}ms"
+    return f"{t*1e6:.0f}us"
+
+
+def render(path, mesh_filter=None):
+    with open(path) as f:
+        recs = json.load(f)
+    recs = [r for r in recs if (mesh_filter is None
+                                or r.get("mesh") == mesh_filter)]
+    recs.sort(key=lambda r: (r.get("mesh", ""), r["arch"], r["cell"]))
+    print("| arch | cell | mesh | step | t_comp | t_mem | t_coll | "
+          "bound | useful | mfu@bound | mem/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") == "skip":
+            print(f"| {r['arch']} | {r['cell']} | {r.get('mesh','')} | "
+                  f"SKIP | - | - | - | - | - | - | - |")
+            continue
+        if r.get("status") == "error":
+            print(f"| {r['arch']} | {r['cell']} | {r.get('mesh','')} | "
+                  f"ERROR | - | - | - | - | - | - | - |")
+            continue
+        ma = r.get("memory_analysis", {})
+        mem = (ma.get("argument_size_in_bytes", 0)
+               + ma.get("temp_size_in_bytes", 0)) / 2**30
+        print(f"| {r['arch']} | {r['cell']} | {r['mesh']} | {r['step']} | "
+              f"{fmt_t(r['t_compute'])} | {fmt_t(r['t_memory'])} | "
+              f"{fmt_t(r['t_collective'])} | {r['bottleneck'][:4]} | "
+              f"{r['useful_flops_ratio']:.2f} | {r['mfu_bound']:.3f} | "
+              f"{mem:.1f}G |")
+
+
+if __name__ == "__main__":
+    render(sys.argv[1] if len(sys.argv) > 1 else
+           "results/dryrun_optimized.json",
+           sys.argv[2] if len(sys.argv) > 2 else None)

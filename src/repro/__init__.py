@@ -1,0 +1,2 @@
+"""repro: H-GCN (Versal ACAP) reproduced as a TPU-native JAX framework."""
+__version__ = "1.0.0"

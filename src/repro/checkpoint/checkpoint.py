@@ -1,0 +1,108 @@
+"""Fault-tolerant checkpointing: sharded npz, atomic rename, async writes.
+
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json, written to a
+``.tmp-`` directory first and atomically renamed — a crash mid-write can
+never corrupt the latest checkpoint. ``latest_step`` scans committed
+directories only. An async writer thread overlaps serialization with the
+next training step (standard large-cluster practice); ``wait()`` joins it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(p) for p in path) for path, _ in flat]
+    vals = [np.asarray(v) for _, v in flat]
+    return keys, vals, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save -----
+    def save(self, step: int, tree, extra: dict = None):
+        keys, vals, _ = _flatten(tree)
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, keys, vals, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, keys, vals, extra or {})
+
+    def _write(self, step, keys, vals, extra):
+        tmp = os.path.join(self.dir, f".tmp-step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{f"a{i}": v for i, v in enumerate(vals)})
+        manifest = {"step": step, "keys": keys, "time": time.time(),
+                    "extra": extra}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic commit
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # --------------------------------------------------------- restore -----
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_"):
+                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like):
+        """Restore into the structure of ``like`` (shape/dtype-checked)."""
+        path = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        vals = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+        keys, ref_vals, treedef = _flatten(like)
+        assert keys == manifest["keys"], "checkpoint/model structure mismatch"
+        for v, r in zip(vals, ref_vals):
+            assert v.shape == r.shape, (v.shape, r.shape)
+        leaves = [jax.numpy.asarray(v, r.dtype)
+                  for v, r in zip(vals, ref_vals)]
+        return jax.tree_util.tree_unflatten(treedef, leaves), manifest
+
+    def restore_latest(self, like):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return self.restore(step, like)

@@ -1,0 +1,19 @@
+"""Core H-GCN contribution: reordering, tri-partitioning, hybrid SpMM."""
+from .formats import (CSRMatrix, CooResidual, DenseTiles, EllTileBucket,
+                      PartitionMeta, TriPartition, csr_from_dense,
+                      csr_from_scipy, csr_to_scipy, partition_to_dense)
+from .grouping import Group, MovingAverage, group_rows, grouping_density
+from .hybrid_spmm import gcn_forward, gcn_layer, hybrid_spmm
+from .partition import PartitionConfig, analyze_and_partition, find_nnz
+from .reorder import (apply_permutation, bandwidth, compute_permutation,
+                      reorder, tile_density_histogram)
+
+__all__ = [
+    "CSRMatrix", "CooResidual", "DenseTiles", "EllTileBucket",
+    "PartitionMeta", "TriPartition", "csr_from_dense", "csr_from_scipy",
+    "csr_to_scipy", "partition_to_dense", "Group", "MovingAverage",
+    "group_rows", "grouping_density", "gcn_forward", "gcn_layer",
+    "hybrid_spmm", "PartitionConfig", "analyze_and_partition", "find_nnz",
+    "apply_permutation", "bandwidth", "compute_permutation", "reorder",
+    "tile_density_histogram",
+]

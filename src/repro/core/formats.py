@@ -1,0 +1,174 @@
+"""Sparse-matrix containers for the tri-engine H-GCN executor.
+
+All device-facing containers are NamedTuples of arrays (valid JAX pytrees).
+Static metadata (tile size, bucket widths, matrix shape) lives in
+`PartitionMeta`, a plain dataclass that is captured statically (closure /
+keyword argument), never traced.
+
+The three components mirror the paper's three engines:
+
+  * ``DenseTiles``  — tightly-clustered T×T tiles (dense AIE systolic array).
+  * ``EllBuckets``  — loosely-clustered tiles in tile-local ELLPACK form,
+                      bucketed by padded nnz-per-row K (sparse AIE engine,
+                      Algorithm 1 fixed-trip-count groups).
+  * ``CooResidual`` — scattered nnz in COO (PL row-wise SpMM engine).
+
+Invariant: dense + ell + coo exactly reconstructs A (padding values are 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class CSRMatrix(NamedTuple):
+    """Host-side CSR (numpy) — the preprocessing input format (paper §IV-C)."""
+
+    indptr: np.ndarray   # [n_rows + 1] int64
+    indices: np.ndarray  # [nnz] int32
+    data: np.ndarray     # [nnz] float32
+    shape: tuple         # (n_rows, n_cols) — static
+
+
+class DenseTiles(NamedTuple):
+    """Tightly-clustered tiles: block-sparse (BSR-like) dense tile stack."""
+
+    tiles: jnp.ndarray     # [n_tiles, T, T] float32 — dense tile values
+    tile_row: jnp.ndarray  # [n_tiles] int32 — block-row of each tile
+    tile_col: jnp.ndarray  # [n_tiles] int32 — block-col of each tile
+
+
+class EllTileBucket(NamedTuple):
+    """One fixed-K bucket of ELL *units* (Algorithm 1 groups, coalesced by K).
+
+    A unit is an R_BLOCK×K slab: R_BLOCK consecutive rows of one Algorithm-1
+    group restricted to one T×T tile, every row padded to exactly K
+    non-zeros. Padded entries have ``vals == 0`` and ``cols == 0`` (safe:
+    0 * B[0] == 0); padded *rows* carry the sentinel row id
+    ``n_row_tiles * T`` and are dropped by the output scatter. Column
+    indices are tile-local (< T) so a single B tile covers the gather.
+    """
+
+    cols: jnp.ndarray      # [n_units, R_BLOCK, K] int32 — tile-local cols
+    vals: jnp.ndarray      # [n_units, R_BLOCK, K] float32
+    rows: jnp.ndarray      # [n_units, R_BLOCK] int32 — global output rows
+    tile_col: jnp.ndarray  # [n_units] int32 — which T-wide column tile of B
+
+
+class CooResidual(NamedTuple):
+    """Scattered nnz — fully general COO, executed on the flexible path."""
+
+    rows: jnp.ndarray  # [nnz] int32 (global row index)
+    cols: jnp.ndarray  # [nnz] int32 (global col index)
+    vals: jnp.ndarray  # [nnz] float32
+
+
+class TriPartition(NamedTuple):
+    """The full heterogeneous decomposition of a sparse matrix A."""
+
+    dense: DenseTiles
+    ell: tuple            # tuple[EllTileBucket, ...] — one per distinct K
+    coo: CooResidual
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMeta:
+    """Static (non-traced) facts about a TriPartition."""
+
+    n_rows: int
+    n_cols: int
+    tile: int                  # T — tile edge (paper: 64; TPU default: 128)
+    ell_ks: tuple              # K of each ELL bucket, same order as part.ell
+    n_row_tiles: int
+    n_col_tiles: int
+    n_dense_tiles: int
+    nnz_dense: int
+    nnz_ell: int               # real (non-padding) nnz on the ELL path
+    nnz_ell_padded: int        # nnz incl. padding actually computed
+    nnz_coo: int
+    density_thresholds: tuple  # (d_dense, d_scatter)
+
+    @property
+    def nnz(self) -> int:
+        return self.nnz_dense + self.nnz_ell + self.nnz_coo
+
+    def summary(self) -> str:
+        tot = max(self.nnz, 1)
+        return (
+            f"TriPartition {self.n_rows}x{self.n_cols} T={self.tile} "
+            f"nnz={self.nnz} | dense {self.nnz_dense} ({self.nnz_dense/tot:.1%}) "
+            f"| ell {self.nnz_ell} ({self.nnz_ell/tot:.1%}, pad-overhead "
+            f"{(self.nnz_ell_padded - self.nnz_ell)/max(self.nnz_ell,1):.2f}x) "
+            f"| coo {self.nnz_coo} ({self.nnz_coo/tot:.1%}) "
+            f"| buckets K={list(self.ell_ks)}"
+        )
+
+
+def csr_from_dense(a: np.ndarray) -> CSRMatrix:
+    """Build a host CSR from a dense numpy matrix (tests / small graphs)."""
+    import scipy.sparse as sp
+
+    m = sp.csr_matrix(a.astype(np.float32))
+    return CSRMatrix(
+        indptr=m.indptr.astype(np.int64),
+        indices=m.indices.astype(np.int32),
+        data=m.data.astype(np.float32),
+        shape=m.shape,
+    )
+
+
+def csr_from_scipy(m) -> CSRMatrix:
+    m = m.tocsr().astype(np.float32)
+    m.sum_duplicates()
+    return CSRMatrix(
+        indptr=m.indptr.astype(np.int64),
+        indices=m.indices.astype(np.int32),
+        data=m.data.astype(np.float32),
+        shape=m.shape,
+    )
+
+
+def csr_to_scipy(m: CSRMatrix):
+    import scipy.sparse as sp
+
+    return sp.csr_matrix((m.data, m.indices, m.indptr), shape=m.shape)
+
+
+def partition_to_dense(part: TriPartition, meta: PartitionMeta) -> np.ndarray:
+    """Reassemble A from its tri-partition (correctness oracle for tests)."""
+    T = meta.tile
+    out = np.zeros((meta.n_row_tiles * T, meta.n_col_tiles * T), np.float32)
+
+    tiles = np.asarray(part.dense.tiles)
+    trow = np.asarray(part.dense.tile_row)
+    tcol = np.asarray(part.dense.tile_col)
+    for t in range(tiles.shape[0]):
+        r, c = int(trow[t]) * T, int(tcol[t]) * T
+        out[r : r + T, c : c + T] += tiles[t]
+
+    pad_row = meta.n_row_tiles * T
+    for bucket in part.ell:
+        cols = np.asarray(bucket.cols)
+        vals = np.asarray(bucket.vals)
+        rows = np.asarray(bucket.rows)
+        bcol = np.asarray(bucket.tile_col)
+        n_units, R, K = cols.shape
+        for u in range(n_units):
+            c0 = int(bcol[u]) * T
+            for r in range(R):
+                gr = int(rows[u, r])
+                if gr >= pad_row:
+                    continue
+                for k in range(K):
+                    v = vals[u, r, k]
+                    if v != 0.0:
+                        out[gr, c0 + cols[u, r, k]] += v
+
+    rows = np.asarray(part.coo.rows)
+    cols = np.asarray(part.coo.cols)
+    vals = np.asarray(part.coo.vals)
+    np.add.at(out, (rows, cols), vals)
+    return out[: meta.n_rows, : meta.n_cols]

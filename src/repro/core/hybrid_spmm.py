@@ -1,0 +1,157 @@
+"""The tri-engine heterogeneous SpMM executor (paper §IV-A/§IV-D/§IV-E).
+
+Computes ``Y = A @ B`` where A is a TriPartition, dispatching each
+component to its engine:
+
+  dense tiles -> MXU batched matmul        (dense systolic tensor array)
+  ELL buckets -> gather + FMA, static K    (sparse systolic tensor array)
+  COO residual-> take + segment_sum        (PL row-wise SpMM)
+
+Two backends:
+  * ``xla``    — pure jnp ops; used for CPU measurement and inside pjit'd
+                 distributed programs.
+  * ``pallas`` — routes dense tiles + ELL buckets through the Pallas
+                 kernels in ``repro.kernels`` (interpret=True on CPU,
+                 compiled Mosaic on TPU).
+
+All three partial products are exact; their sum equals A @ B bit-for-bit
+up to float addition order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .formats import PartitionMeta, TriPartition
+
+
+def _pad_b(b: jnp.ndarray, meta: PartitionMeta) -> jnp.ndarray:
+    """Pad B's rows up to n_col_tiles * T so tile gathers are in-bounds."""
+    want = meta.n_col_tiles * meta.tile
+    if b.shape[0] == want:
+        return b
+    return jnp.pad(b, ((0, want - b.shape[0]), (0, 0)))
+
+
+def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
+                       meta: PartitionMeta) -> jnp.ndarray:
+    """Dense-engine partial product, as padded [nrt*T, F]."""
+    T = meta.tile
+    nrt = meta.n_row_tiles
+    f = b.shape[1]
+    if part.dense.tiles.shape[0] == 0:
+        return jnp.zeros((nrt * T, f), b.dtype)
+    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+    rhs = jnp.take(bt, part.dense.tile_col, axis=0)          # [n_t, T, F]
+    prod = jnp.einsum("tij,tjf->tif", part.dense.tiles.astype(b.dtype), rhs,
+                      preferred_element_type=jnp.float32)
+    out = jax.ops.segment_sum(prod, part.dense.tile_row,
+                              num_segments=nrt)               # [nrt, T, F]
+    return out.reshape(nrt * T, f).astype(b.dtype)
+
+
+def ell_matmul(part: TriPartition, b: jnp.ndarray,
+               meta: PartitionMeta) -> jnp.ndarray:
+    """Sparse-engine partial product, as padded [nrt*T + 1, F] (last row is
+    the padding sentinel, dropped by the caller)."""
+    T = meta.tile
+    nrt = meta.n_row_tiles
+    f = b.shape[1]
+    n_out = nrt * T + 1
+    out = jnp.zeros((n_out, f), jnp.float32)
+    if not part.ell:
+        return out
+    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+    for bucket in part.ell:
+        u, r, k = bucket.cols.shape
+        btile = jnp.take(bt, bucket.tile_col, axis=0)         # [U, T, F]
+        acc = jnp.zeros((u, r, f), jnp.float32)
+        for kk in range(k):  # K is static per bucket — fixed trip count
+            gathered = jnp.take_along_axis(
+                btile, bucket.cols[:, :, kk][:, :, None], axis=1)  # [U,R,F]
+            acc = acc + bucket.vals[:, :, kk][:, :, None] * gathered
+        out = out.at[bucket.rows.reshape(-1)].add(acc.reshape(u * r, f))
+    return out
+
+
+def coo_matmul(part: TriPartition, b: jnp.ndarray,
+               meta: PartitionMeta) -> jnp.ndarray:
+    """Flexible-engine partial product (row-wise product SpMM), [nrt*T, F]."""
+    T = meta.tile
+    nrt = meta.n_row_tiles
+    f = b.shape[1]
+    if part.coo.vals.shape[0] == 0:
+        return jnp.zeros((nrt * T, f), jnp.float32)
+    bp = _pad_b(b, meta)
+    msgs = part.coo.vals[:, None] * jnp.take(bp, part.coo.cols, axis=0)
+    return jax.ops.segment_sum(msgs, part.coo.rows, num_segments=nrt * T)
+
+
+def hybrid_spmm(part: TriPartition, b: jnp.ndarray, *, meta: PartitionMeta,
+                backend: str = "xla") -> jnp.ndarray:
+    """Y = A @ B via the three engines. Returns [n_rows, F]."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        yd = kops.dense_tiles_matmul(part, b, meta)
+        ye = kops.ell_matmul(part, b, meta)
+    elif backend == "xla":
+        yd = dense_tiles_matmul(part, b, meta)
+        ye = ell_matmul(part, b, meta)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    yc = coo_matmul(part, b, meta)
+    y = yd.astype(jnp.float32) + ye[:-1] + yc
+    return y[: meta.n_rows].astype(b.dtype)
+
+
+def hybrid_spmm_ref(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: plain dense matmul."""
+    return a_dense @ b
+
+
+# ---------------------------------------------------------------------------
+# Combination-first chained SpMM with intra-layer pipelining (paper §IV-E).
+# ---------------------------------------------------------------------------
+
+def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
+              meta: PartitionMeta, backend: str = "xla",
+              block_cols: int = 0, activation=None) -> jnp.ndarray:
+    """One GCN layer  sigma(A @ (X @ W))  in combination-first order.
+
+    ``block_cols > 0`` enables the paper's fine-grained pipelining: W's
+    output columns are processed in blocks, and ``A @ (X @ W[:, blk])``
+    is emitted per block so the aggregation of block i never waits for
+    combination of block i+1 — on ACAP this overlaps the dense array with
+    the sparse array + PL; under XLA it makes the overlap structural so
+    the scheduler can interleave the two matmul families.
+    """
+    h = w.shape[1]
+    if block_cols and block_cols < h:
+        nblk = -(-h // block_cols)
+        pads = nblk * block_cols - h
+        wp = jnp.pad(w, ((0, 0), (0, pads)))
+        outs = []
+        for i in range(nblk):  # static unroll: each block is independent
+            wi = jax.lax.slice_in_dim(wp, i * block_cols, (i + 1) * block_cols,
+                                      axis=1)
+            bi = x @ wi                                   # combination (dense)
+            outs.append(hybrid_spmm(part, bi, meta=meta, backend=backend))
+        y = jnp.concatenate(outs, axis=1)[:, :h]
+    else:
+        y = hybrid_spmm(part, x @ w, meta=meta, backend=backend)
+    return activation(y) if activation is not None else y
+
+
+def gcn_forward(part: TriPartition, x: jnp.ndarray, weights, *,
+                meta: PartitionMeta, backend: str = "xla",
+                block_cols: int = 0) -> jnp.ndarray:
+    """The paper's 2-layer vanilla GCN:  softmax-free inference logits
+    X2 = A·relu(A·X·W1)·W2   (activation on hidden layer only)."""
+    h = x
+    for i, w in enumerate(weights):
+        act = jax.nn.relu if i < len(weights) - 1 else None
+        h = gcn_layer(part, h, w, meta=meta, backend=backend,
+                      block_cols=block_cols, activation=act)
+    return h

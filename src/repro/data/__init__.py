@@ -1,0 +1,2 @@
+"""Data substrates: synthetic graphs, neighbor sampler, token/click streams."""
+from . import graphs, recsys, sampler, tokens  # noqa: F401

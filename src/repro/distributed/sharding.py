@@ -1,0 +1,186 @@
+"""Per-family sharding rules (PartitionSpec trees for params/opt/batch).
+
+| family        | strategy                                                  |
+|---------------|-----------------------------------------------------------|
+| dense LM      | Megatron TP over `model` (heads + d_ff), DP over pod/data |
+| MoE, E >= |model| | expert parallelism: experts sharded over `model`      |
+| MoE, E <  |model| | tensor parallelism inside experts (d_ff over `model`) |
+| GNN           | weights replicated; nodes/edges sharded over all axes    |
+| recsys FM     | embedding rows sharded over ALL axes; batch over dp axes |
+
+Name-based rules keyed on the param path keep the rules readable and make
+hillclimbing a sharding change a one-line diff.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, RecsysConfig, TransformerConfig
+from repro.launch.mesh import all_axes, data_axes, model_axis
+from repro.train.optimizer import AdamWState
+
+
+def _match(path: str, rules):
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return P()
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def _tree_specs(tree, rules, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    specs = []
+    for path, leaf in flat:
+        p = "/".join(str(x) for x in path)
+        spec = _match(p, rules)
+        # drop spec entries that don't divide the dim evenly -> replicate
+        fixed = []
+        for i in range(leaf.ndim):
+            ax = spec[i] if i < len(spec) else None
+            if ax is not None and leaf.shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None
+            fixed.append(ax)
+        specs.append(P(*fixed))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def lm_param_rules(cfg: TransformerConfig, mesh, fsdp: bool = True,
+                   strategy: str = None):
+    """TP over `model` + (fsdp=True) ZeRO-3: the non-TP dim of every
+    weight is sharded over the data axes, so no device ever holds a full
+    DP replica of params/optimizer state. XLA all-gathers weights per
+    layer (amortized against the layer's compute; overlappable by the
+    latency-hiding scheduler)."""
+    mdl = model_axis(mesh)
+    dp = data_axes(mesh)
+    strategy = strategy or getattr(cfg, "parallelism", "tp_fsdp")
+    if strategy == "fsdp":
+        # pure ZeRO-3: no tensor axis; weights fully sharded over every
+        # mesh axis, batch over every mesh axis, no per-layer activation
+        # collectives (hillclimb result for dense <=10B models: the
+        # Megatron SP AG/RS tax exceeds the FSDP weight-gather volume)
+        mdl = None
+        fs = tuple(dp) + (model_axis(mesh),) if model_axis(mesh) else dp
+    else:
+        fs = dp if fsdp else None
+    lyr = r"\['layers'\].*"
+    rules = [
+        (r"\['embed'\]", P(fs, None)),
+        (r"\['lm_head'\]", P(fs, mdl)),
+        (r"_norm", P()),
+        (lyr + r"\['w[qkv]'\]", P(None, fs, mdl)),
+        (lyr + r"\['wo'\]", P(None, mdl, fs)),
+        (lyr + r"\['router'\]", P()),
+    ]
+    if cfg.moe:
+        ep = cfg.n_experts % mesh.shape[mdl] == 0 if mdl else False
+        if ep:   # expert parallelism (qwen3-moe: 128 experts / 16)
+            rules += [
+                (lyr + r"\['w_(gate|up|down)'\]", P(None, mdl, fs, None)),
+            ]
+        else:    # TP inside experts (mixtral: 8 experts < 16 devices)
+            rules += [
+                (lyr + r"\['w_(gate|up)'\]", P(None, None, fs, mdl)),
+                (lyr + r"\['w_down'\]", P(None, None, mdl, fs)),
+            ]
+    else:
+        rules += [
+            (lyr + r"\['w_(gate|up)'\]", P(None, fs, mdl)),
+            (lyr + r"\['w_down'\]", P(None, mdl, fs)),
+        ]
+    return rules
+
+
+def lm_param_specs(cfg: TransformerConfig, mesh, params_shape,
+                   strategy: str = None):
+    return _tree_specs(params_shape,
+                       lm_param_rules(cfg, mesh, strategy=strategy), mesh)
+
+
+def gnn_param_specs(cfg: GNNConfig, mesh, params_shape):
+    return _tree_specs(params_shape, [(r".*", P())], mesh)
+
+
+def fm_param_specs(cfg: RecsysConfig, mesh, params_shape):
+    rows = P(all_axes(mesh), None)
+    return _tree_specs(params_shape, [
+        (r"\['v'\]", rows),
+        (r"\['w'\]", rows),
+        (r".*", P()),
+    ], mesh)
+
+
+def opt_state_specs(param_specs):
+    """AdamW state mirrors param shardings; step is replicated."""
+    return AdamWState(P(), param_specs, param_specs)
+
+
+def param_specs_for(cfg, mesh, params_shape):
+    if isinstance(cfg, TransformerConfig):
+        return lm_param_specs(cfg, mesh, params_shape)
+    if isinstance(cfg, GNNConfig):
+        return gnn_param_specs(cfg, mesh, params_shape)
+    if isinstance(cfg, RecsysConfig):
+        return fm_param_specs(cfg, mesh, params_shape)
+    raise TypeError(type(cfg))
+
+
+# ------------------------------------------------------- batch specs -------
+def lm_batch_specs(mesh):
+    dp = data_axes(mesh)
+    return {"tokens": P(dp, None), "labels": P(dp, None)}
+
+
+def lm_cache_specs(mesh):
+    dp = data_axes(mesh)
+    return {"k": P(None, dp, None, None, None),
+            "v": P(None, dp, None, None, None),
+            "pos": P(dp, None), "index": P()}
+
+
+def graph_batch_specs(mesh, keys):
+    """Full-graph: shard nodes/edges over every axis (1-D distribution)."""
+    ax = all_axes(mesh)
+    spec = {}
+    for k in keys:
+        if k in ("senders", "receivers", "edge_mask", "edge_weights",
+                 "edge_src", "edge_dst", "trip_kj", "trip_ji"):
+            spec[k] = P(ax)
+        elif k in ("node_feat", "edge_feat", "pos"):
+            spec[k] = P(ax, None)
+        elif k in ("labels", "node_mask", "z", "mol_id", "energy"):
+            spec[k] = P(ax)
+        else:
+            spec[k] = P()
+    return spec
+
+
+def minibatch_specs(mesh, keys):
+    """Sampled subgraphs: leading batch dim over data axes."""
+    dp = data_axes(mesh)
+    spec = {}
+    for k in keys:
+        spec[k] = P(dp, None) if k != "n_mols" else P()
+    return spec
+
+
+def fm_batch_specs(mesh):
+    dp = data_axes(mesh)
+    return {"idx": P(dp, None), "labels": P(dp)}
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,72 @@
+"""Sparse systolic tensor engine — ELL-bucket SpMM Pallas kernel.
+
+The ACAP sparse tensor PE executes a *fixed* number K of MACs per row
+(Algorithm 1's padded groups) so the VLIW compiler can pipeline. The TPU
+translation: a bucket of ELL units with static K gives a python-unrolled
+K-step gather+FMA loop over a VMEM-resident B tile — static shapes that
+Mosaic can vectorize, the exact same compiler contract.
+
+B-tile selection per unit uses the scalar-prefetch block-sparse pattern
+(`PrefetchScalarGridSpec`): ``tile_col[u]`` is known before the body runs,
+so the pipeline can prefetch the right (T, bf) block of B from HBM.
+
+Grid: (n_units, F / bf). Output is per-unit [U, R, bf] partial products;
+the caller scatter-adds them over the unit row ids (the flexible engine's
+job — on ACAP the PL collects STPE results the same way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BF = 128
+
+
+def _ell_kernel(tile_col_ref, cols_ref, vals_ref, b_ref, o_ref, *, k: int):
+    del tile_col_ref  # consumed by the index maps
+    b = b_ref[0]                                     # [T, bf]
+    cols = cols_ref[0]                               # [R, K]
+    vals = vals_ref[0].astype(jnp.float32)           # [R, K]
+    acc = jnp.zeros((cols.shape[0], b.shape[1]), jnp.float32)
+    for kk in range(k):                              # static trip count
+        g = jnp.take(b, cols[:, kk], axis=0)         # [R, bf] row gather
+        acc = acc + vals[:, kk][:, None] * g.astype(jnp.float32)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray, tile_col: jnp.ndarray,
+             b_tiles: jnp.ndarray, *, bf: int = DEFAULT_BF,
+             interpret: bool = False) -> jnp.ndarray:
+    """Per-unit ELL products.
+
+    cols [U, R, K] int32 (tile-local), vals [U, R, K], tile_col [U] int32,
+    b_tiles [nct, T, F]  ->  [U, R, F] float32.
+    """
+    u, r, k = cols.shape
+    nct, t, f = b_tiles.shape
+    bf_ = min(bf, f)
+    fp = -(-f // bf_) * bf_
+    b_p = jnp.pad(b_tiles, ((0, 0), (0, 0), (0, fp - f))) if fp != f else b_tiles
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(u, fp // bf_),
+        in_specs=[
+            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
+            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
+            pl.BlockSpec((1, t, bf_), lambda i, j, tc: (tc[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, r, bf_), lambda i, j, tc: (i, 0, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_ell_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, r, fp), jnp.float32),
+        interpret=interpret,
+    )(tile_col, cols, vals, b_p)
+    return out[:, :, :f]

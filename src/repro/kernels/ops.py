@@ -1,0 +1,59 @@
+"""Jit'd wrappers routing TriPartition components through the Pallas
+kernels. On CPU the kernels run in interpret mode (Mosaic targets TPU);
+on TPU they compile to MXU/VPU programs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import PartitionMeta, TriPartition
+
+from . import bsr_spmm as _bsr
+from . import ell_spmm as _ell
+from . import tile_matmul as _mm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
+    kw.setdefault("interpret", not _on_tpu())
+    return _mm.tile_matmul(a, b, **kw)
+
+
+def _pad_b(b: jnp.ndarray, meta: PartitionMeta) -> jnp.ndarray:
+    want = meta.n_col_tiles * meta.tile
+    if b.shape[0] == want:
+        return b
+    return jnp.pad(b, ((0, want - b.shape[0]), (0, 0)))
+
+
+def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
+                       meta: PartitionMeta) -> jnp.ndarray:
+    T, nrt = meta.tile, meta.n_row_tiles
+    f = b.shape[1]
+    if part.dense.tiles.shape[0] == 0:
+        return jnp.zeros((nrt * T, f), b.dtype)
+    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+    prod = _bsr.bsr_spmm(part.dense.tiles, part.dense.tile_col, bt,
+                         interpret=not _on_tpu())
+    out = jax.ops.segment_sum(prod, part.dense.tile_row, num_segments=nrt)
+    return out.reshape(nrt * T, f).astype(b.dtype)
+
+
+def ell_matmul(part: TriPartition, b: jnp.ndarray,
+               meta: PartitionMeta) -> jnp.ndarray:
+    T, nrt = meta.tile, meta.n_row_tiles
+    f = b.shape[1]
+    out = jnp.zeros((nrt * T + 1, f), jnp.float32)
+    if not part.ell:
+        return out
+    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+    for bucket in part.ell:
+        u, r, _ = bucket.cols.shape
+        prod = _ell.ell_spmm(bucket.cols, bucket.vals, bucket.tile_col, bt,
+                             interpret=not _on_tpu())
+        out = out.at[bucket.rows.reshape(-1)].add(prod.reshape(u * r, f))
+    return out

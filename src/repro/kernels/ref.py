@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against
+(tests/test_kernels_*.py sweep shapes and dtypes with assert_allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tile_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def bsr_spmm_ref(tiles: jnp.ndarray, tile_col: jnp.ndarray,
+                 b_tiles: jnp.ndarray) -> jnp.ndarray:
+    """Per-tile products of a BSR stack against tile-sliced B.
+
+    tiles    [n_t, T, T], tile_col [n_t], b_tiles [nct, T, F]
+    returns  [n_t, T, F]  (caller segment-sums over tile_row)
+    """
+    rhs = jnp.take(b_tiles, tile_col, axis=0)
+    return jnp.einsum("tij,tjf->tif", tiles, rhs,
+                      preferred_element_type=jnp.float32)
+
+
+def ell_spmm_ref(cols: jnp.ndarray, vals: jnp.ndarray,
+                 tile_col: jnp.ndarray, b_tiles: jnp.ndarray) -> jnp.ndarray:
+    """Per-unit ELL products (fixed K — Algorithm 1's fixed trip count).
+
+    cols [U, R, K] tile-local, vals [U, R, K], tile_col [U],
+    b_tiles [nct, T, F]; returns [U, R, F] f32
+    (caller scatter-adds over the unit row ids).
+    """
+    u, r, k = cols.shape
+    f = b_tiles.shape[-1]
+    bt = jnp.take(b_tiles, tile_col, axis=0)              # [U, T, F]
+    acc = jnp.zeros((u, r, f), jnp.float32)
+    for kk in range(k):
+        g = jnp.take_along_axis(bt, cols[:, :, kk][:, :, None], axis=1)
+        acc = acc + vals[:, :, kk][:, :, None].astype(jnp.float32) * g
+    return acc

@@ -1,0 +1,61 @@
+"""Elastic scaling: re-mesh a live training state when the device pool
+changes (node failure shrinks it; repaired nodes grow it).
+
+Protocol at 1000+ nodes:
+  1. the straggler/health watchdog (distributed.fault_tolerance) marks a
+     host dead -> the job controller picks the largest good mesh shape,
+  2. every param/opt leaf is resharded onto the new mesh with the same
+     PartitionSpec rules (specs are mesh-shape-agnostic by construction:
+     rules degrade to replication when a dim stops dividing evenly),
+  3. the data stream re-seeds by step id, training resumes — no
+     checkpoint round-trip needed when the state survives in host RAM;
+     otherwise restore-from-latest (CheckpointManager) is the fallback.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def reshard_to_mesh(tree, new_mesh, spec_tree):
+    """Reshard every leaf onto ``new_mesh`` with its PartitionSpec,
+    replicating dims that no longer divide evenly."""
+    def fit(spec, leaf):
+        fixed = []
+        for i in range(leaf.ndim):
+            ax = spec[i] if i < len(spec) else None
+            if ax is not None:
+                size = new_mesh.shape[ax] if not isinstance(ax, tuple) else 1
+                if isinstance(ax, tuple):
+                    size = 1
+                    for a in ax:
+                        size *= new_mesh.shape[a]
+                if leaf.shape[i] % size != 0:
+                    ax = None
+            fixed.append(ax)
+        return P(*fixed)
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    specs = jax.tree_util.tree_leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+    # bounce through host memory: correct for any (old mesh, new mesh)
+    # pair, including meshes over disjoint device sets after a failover
+    moved = [jax.device_put(jax.device_get(l),
+                            NamedSharding(new_mesh, fit(s, l)))
+             for l, s in zip(leaves, specs)]
+    return jax.tree_util.tree_unflatten(treedef, moved)
+
+
+def shrink_mesh(mesh, keep_devices):
+    """Build the largest (data, model)-shaped mesh from surviving devices."""
+    import numpy as np
+    devs = list(keep_devices)
+    n = len(devs)
+    model = 1
+    for m in range(int(np.sqrt(n)), 0, -1):
+        if n % m == 0:
+            model = m
+            break
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs).reshape(n // model, model),
+                ("data", "model"))

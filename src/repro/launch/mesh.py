@@ -1,0 +1,33 @@
+"""Production mesh builders (single-pod 16x16 and 2-pod 2x16x16).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init; the dry-run sets
+XLA_FLAGS before importing anything else).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests use small CPU meshes, e.g. (4, 2))."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axes(mesh) -> tuple:
+    """All batch-parallel axes of a mesh ('pod' is outer data parallelism)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh):
+    return "model" if "model" in mesh.axis_names else None
+
+
+def all_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)

@@ -1,0 +1,444 @@
+"""Build (step_fn, arg ShapeDtypeStructs, in/out shardings) per grid cell.
+
+This is the single source of truth the dry-run, the roofline analysis and
+the launcher all consume. Nothing here allocates device memory: params and
+optimizer state are ``jax.eval_shape`` trees, batches are ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import Arch, get_arch
+from repro.configs.base import (GNNConfig, RecsysConfig, ShapeCell,
+                                TransformerConfig)
+from repro.distributed import sharding as shd
+from repro.launch.mesh import all_axes, data_axes
+from repro.models import dimenet as dimenet_m
+from repro.models import fm as fm_m
+from repro.models import gnn as gnn_m
+from repro.models import nequip as nequip_m
+from repro.models import transformer as tfm
+from repro.train import steps as steps_m
+from repro.train.optimizer import AdamW
+
+F32, BF16, I32, BOOL = jnp.float32, jnp.bfloat16, jnp.int32, jnp.bool_
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _axis_size(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in ax]))
+    return int(mesh.shape[ax])
+
+
+def make_gnn_constrain(mesh):
+    """Pin edge/node/triplet intermediates to a 1-D layout over all mesh
+    axes. Without this, XLA replicates segment_sum outputs and gathered
+    message tensors per device (measured 389 GiB/device on
+    dimenet/ogb_products)."""
+    from jax.sharding import NamedSharding
+    total = int(mesh.devices.size)
+    ax = all_axes(mesh)
+
+    def constrain(x, kind):
+        if x.ndim >= 1 and x.shape[0] % total == 0:
+            spec = P(ax, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+
+    return constrain
+
+
+def make_moe_shardings(cfg, mesh):
+    """Dispatch-buffer shardings: EP shards experts over `model`; TP mode
+    keeps experts whole and shards d_ff over `model`; capacity dim is
+    data-sharded in both."""
+    from jax.sharding import NamedSharding
+    from repro.launch.mesh import model_axis
+    mdl = model_axis(mesh)
+    dp = data_axes(mesh)
+    ep = cfg.n_experts % mesh.shape[mdl] == 0 if mdl else False
+    if ep:
+        # REFUTED iteration (kept as a record): constraining the dispatch
+        # buffers made GSPMD emit "involuntary full rematerialization"
+        # (qwen3-moe train temp 125 -> 379 GiB). Landed fix: explicit
+        # shard_map expert-parallel dispatch (models/moe_ep.py) — local
+        # compaction per expert-rank + one psum over the model axis.
+        return {"ep_mesh": mesh, "dp": dp, "mdl": mdl}
+    xs = P(None, dp, None)
+    h = P(None, dp, mdl)
+    return {"xs": NamedSharding(mesh, xs), "h": NamedSharding(mesh, h),
+            "flat": NamedSharding(mesh, P((*(dp if isinstance(dp, tuple)
+                                             else (dp,)),
+                                           *((mdl,) if mdl else ())), None)),
+            "tokens": NamedSharding(mesh, P(dp, None))}
+
+
+def fit_specs(spec_tree, struct_tree, mesh):
+    """Replicate any spec dim that does not divide the array dim evenly
+    (batch=1 decode, scalar energies, ...)."""
+    def fit(spec, struct):
+        if not isinstance(spec, P):
+            return spec
+        fixed = []
+        for i in range(len(struct.shape)):
+            ax = spec[i] if i < len(spec) else None
+            if ax is not None and struct.shape[i] % _axis_size(mesh, ax) != 0:
+                ax = None
+            fixed.append(ax)
+        return P(*fixed)
+
+    return jax.tree.map(fit, spec_tree, struct_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class CellProgram:
+    arch: str
+    cell: str
+    step_name: str                 # train_step | prefill_step | serve_step
+    fn: object
+    args: tuple                    # ShapeDtypeStructs (pytrees)
+    in_specs: tuple
+    out_specs: object              # pytree of PartitionSpec or None
+    donate: tuple = ()
+    model_flops: float = 0.0       # 6·N·D-style useful flops (per step)
+
+
+# ------------------------------------------------------------ LM -----------
+def _lm_param_structs(cfg: TransformerConfig):
+    return jax.eval_shape(
+        functools.partial(tfm.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def _lm_flops(cfg: TransformerConfig, n_tokens: int, train: bool) -> float:
+    n_active = cfg.n_params_active
+    mult = 6.0 if train else 2.0
+    return mult * n_active * n_tokens
+
+
+def build_lm_cell(arch: Arch, cell: ShapeCell, mesh, *,
+                  layer_mode: str = "scan") -> CellProgram:
+    cfg: TransformerConfig = arch.config
+    # the pure-FSDP strategy presumes global_batch >= chip count; serving
+    # cells (batch 32/128/1) keep the TP+SP layout
+    strategy = (getattr(cfg, "parallelism", "tp_fsdp")
+                if cell.kind == "train" else "tp_fsdp")
+    p_structs = _lm_param_structs(cfg)
+    p_specs = shd.lm_param_specs(cfg, mesh, p_structs, strategy=strategy)
+    dp = data_axes(mesh)
+
+    if cell.kind == "train":
+        opt = AdamW(lr=1e-4, weight_decay=0.01)
+        o_structs = jax.eval_shape(opt.init, p_structs)
+        o_specs = shd.opt_state_specs(p_specs)
+        batch = {"tokens": sds((cell.global_batch, cell.seq_len), I32),
+                 "labels": sds((cell.global_batch, cell.seq_len), I32)}
+        from jax.sharding import NamedSharding
+        from repro.launch.mesh import model_axis
+        pure_fsdp = strategy == "fsdp"
+        if pure_fsdp:
+            b_specs = fit_specs({"tokens": P(all_axes(mesh), None),
+                                 "labels": P(all_axes(mesh), None)},
+                                batch, mesh)
+            # one full sequence per device: batch-shard the residual
+            # stream (without this the scan carries collapse to
+            # replicated — 578 GiB/device, measured)
+            act = NamedSharding(mesh, P(all_axes(mesh), None, None))
+        else:
+            b_specs = shd.lm_batch_specs(mesh)
+            act = NamedSharding(mesh, P(dp, model_axis(mesh), None))
+        moe_sh = make_moe_shardings(cfg, mesh) if cfg.moe else None
+        fn = steps_m.make_lm_train_step(cfg, opt, remat=True,
+                                        q_chunk=512, k_chunk=1024,
+                                        xent_chunk=256,
+                                        layer_mode=layer_mode,
+                                        act_constraint=act,
+                                        moe_shardings=moe_sh)
+        return CellProgram(
+            arch.name, cell.name, "train_step", fn,
+            (p_structs, o_structs, batch),
+            (p_specs, o_specs, b_specs),
+            (p_specs, o_specs, {"loss": P()}),
+            donate=(0, 1),
+            model_flops=_lm_flops(cfg, cell.global_batch * cell.seq_len,
+                                  True))
+
+    # serving checkpoints are bf16 (halves weight HBM + doubles effective
+    # memory bandwidth for the weight-streaming decode regime)
+    def _bf16(structs):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, BF16)
+            if x.dtype == F32 else x, structs)
+
+    if cell.kind == "prefill":
+        moe_sh = make_moe_shardings(cfg, mesh) if cfg.moe else None
+        fn = steps_m.make_lm_prefill_step(cfg, max_len=cell.seq_len,
+                                          q_chunk=512, k_chunk=1024,
+                                          layer_mode=layer_mode,
+                                          moe_shardings=moe_sh)
+        tokens = sds((cell.global_batch, cell.seq_len), I32)
+        return CellProgram(
+            arch.name, cell.name, "prefill_step", fn,
+            (_bf16(p_structs), tokens),
+            (p_specs, P(dp, None)),
+            None,
+            model_flops=_lm_flops(cfg, cell.global_batch * cell.seq_len,
+                                  False))
+
+    if cell.kind == "decode":
+        t_buf = tfm.cache_len(cfg, cell.seq_len)
+        cache = {
+            "k": sds((cfg.n_layers, cell.global_batch, t_buf,
+                      cfg.n_kv_heads, cfg.d_head), BF16),
+            "v": sds((cfg.n_layers, cell.global_batch, t_buf,
+                      cfg.n_kv_heads, cfg.d_head), BF16),
+            "pos": sds((cell.global_batch, t_buf), I32),
+            "index": sds((), I32),
+        }
+        c_specs = fit_specs(shd.lm_cache_specs(mesh), cache, mesh)
+        tokens = sds((cell.global_batch, 1), I32)
+        tok_spec = fit_specs(P(dp, None), tokens, mesh)
+        moe_sh = make_moe_shardings(cfg, mesh) if cfg.moe else None
+        fn = steps_m.make_lm_decode_step(cfg, k_chunk=min(t_buf, 2048),
+                                         layer_mode=layer_mode,
+                                         moe_shardings=moe_sh)
+        # explicit out shardings == input cache shardings -> donation can
+        # alias the (L,B,T,KV,D) cache instead of copying it (the copy was
+        # 26 GiB/device on smollm decode_32k)
+        logit_spec = fit_specs(P(dp, None, None),
+                               sds((cell.global_batch, 1, cfg.vocab), F32),
+                               mesh)
+        return CellProgram(
+            arch.name, cell.name, "serve_step", fn,
+            (_bf16(p_structs), cache, tokens),
+            (p_specs, c_specs, tok_spec),
+            (logit_spec, c_specs), donate=(1,),
+            model_flops=_lm_flops(cfg, cell.global_batch, False))
+
+    raise ValueError(cell.kind)
+
+
+# ------------------------------------------------------------ GNN ----------
+def _pad_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _graph_sizes(cell: ShapeCell, pad: int = 8192):
+    """Node/edge counts padded to shard evenly over 512 devices; padding
+    rows are masked (node_mask / sentinel segment ids), standard practice
+    for static-shape graph batching."""
+    if cell.kind == "graph_batched":       # molecule: batch of small graphs
+        n = cell.n_nodes * cell.global_batch
+        e = cell.n_edges * cell.global_batch
+        return _pad_to(n, pad), _pad_to(e, pad), cell.global_batch
+    return _pad_to(cell.n_nodes, pad), _pad_to(cell.n_edges, pad), 1
+
+
+def _gnn_batch_structs(cfg: GNNConfig, cell: ShapeCell):
+    """Full-graph / batched-molecule flat batch (no leading subgraph dim)."""
+    n, e, n_mols = _graph_sizes(cell)
+    d_feat = max(cell.d_feat, 1)
+    if cfg.kind in ("gcn", "gatedgcn", "meshgraphnet"):
+        b = {"senders": sds((e,), I32), "receivers": sds((e,), I32),
+             "node_feat": sds((n, d_feat), F32),
+             "edge_feat": sds((e, 4), F32),
+             "labels": sds((n,), I32), "node_mask": sds((n,), BOOL)}
+    else:  # geometric models ignore d_feat: inputs are species + positions
+        t = 2 * e if cell.n_nodes > 10_000 else 4 * e
+        b = {"z": sds((n,), I32), "pos": sds((n, 3), F32),
+             "edge_src": sds((e,), I32), "edge_dst": sds((e,), I32),
+             "mol_id": sds((n,), I32), "energy": sds((n_mols,), F32)}
+        if cfg.kind == "dimenet":
+            b["trip_kj"] = sds((t,), I32)
+            b["trip_ji"] = sds((t,), I32)
+    return b, n_mols
+
+
+def _gnn_params(cfg: GNNConfig, cell: ShapeCell):
+    d_feat = max(cell.d_feat, 1)
+    key = jax.random.PRNGKey(0)
+    if cfg.kind == "gcn":
+        return jax.eval_shape(
+            functools.partial(gnn_m.gcn_init, cfg, d_feat), key)
+    if cfg.kind == "gatedgcn":
+        return jax.eval_shape(
+            functools.partial(gnn_m.gatedgcn_init, cfg, d_feat, 4), key)
+    if cfg.kind == "meshgraphnet":
+        return jax.eval_shape(
+            functools.partial(gnn_m.meshgraphnet_init, cfg, d_feat, 4), key)
+    if cfg.kind == "dimenet":
+        return jax.eval_shape(functools.partial(dimenet_m.dimenet_init, cfg),
+                              key)
+    if cfg.kind == "nequip":
+        return jax.eval_shape(functools.partial(nequip_m.nequip_init, cfg),
+                              key)
+    raise ValueError(cfg.kind)
+
+
+def _gnn_flops(cfg: GNNConfig, n: int, e: int, d_feat: int,
+               train: bool) -> float:
+    d = cfg.d_hidden
+    if cfg.kind == "gcn":
+        f = 2 * n * d_feat * d + 2 * e * d
+    elif cfg.kind == "gatedgcn":
+        f = cfg.n_layers * (2 * n * 5 * d * d + 2 * e * d * 3)
+    elif cfg.kind == "meshgraphnet":
+        mlp_e = 2 * (3 * d) * d + 2 * d * d
+        mlp_n = 2 * (2 * d) * d + 2 * d * d
+        f = cfg.n_layers * (e * mlp_e + n * mlp_n)
+    elif cfg.kind == "dimenet":
+        t = 2 * e if n > 10_000 else 4 * e
+        sr = cfg.n_spherical * cfg.n_radial
+        f = cfg.n_layers * (2 * t * sr * cfg.n_bilinear * d
+                            + 2 * e * 4 * d * d)
+    else:  # nequip
+        paths = (cfg.l_max + 1) ** 3
+        f = cfg.n_layers * (2 * e * paths * cfg.d_hidden * 9
+                            + 2 * n * (cfg.l_max + 1) * d * d)
+    return f * (3.0 if train else 1.0)
+
+
+def build_gnn_cell(arch: Arch, cell: ShapeCell, mesh) -> CellProgram:
+    cfg: GNNConfig = arch.config
+    p_structs = _gnn_params(cfg, cell)
+    p_specs = shd.gnn_param_specs(cfg, mesh, p_structs)
+    opt = AdamW(lr=1e-3)
+    o_structs = jax.eval_shape(opt.init, p_structs)
+    o_specs = shd.opt_state_specs(p_specs)
+
+    if cell.kind == "graph_minibatch":
+        # sampled-subgraph training: leading dim = one subgraph per data
+        # group; inner sizes from the fanout worst case (sampler.max_sizes)
+        from repro.data.sampler import max_sizes
+        n_sub = int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+        mn, me = max_sizes(cell.batch_nodes, cell.fanout)
+        inner = dataclasses.replace(cell, kind="graph_full", n_nodes=mn,
+                                    n_edges=me)
+        flat, n_mols = _gnn_batch_structs(cfg, inner)
+        batch = {k: sds((n_sub,) + v.shape, v.dtype) for k, v in flat.items()}
+        b_specs = fit_specs(shd.minibatch_specs(mesh, batch.keys()), batch,
+                            mesh)
+
+        def train_step(params, opt_state, batch):
+            # vmapped loss over subgraphs, single optimizer update
+            def per_graph_loss(p, b):
+                if cfg.kind == "dimenet":
+                    return steps_m.energy_loss_dimenet(p, b, cfg)
+                if cfg.kind == "nequip":
+                    return steps_m.energy_loss_nequip(p, b, cfg)
+                return steps_m.gnn_node_loss(p, b, cfg)
+
+            def mean_loss(p, bb):
+                losses = jax.vmap(lambda b: per_graph_loss(p, b))(bb)
+                return losses.mean()
+
+            loss, grads = jax.value_and_grad(mean_loss)(params, batch)
+            params, opt_state = opt.update(grads, opt_state, params)
+            return params, opt_state, {"loss": loss}
+
+        flops = n_sub * _gnn_flops(cfg, mn, me, max(cell.d_feat, 1), True)
+        return CellProgram(arch.name, cell.name, "train_step", train_step,
+                           (p_structs, o_structs, batch),
+                           (p_specs, o_specs, b_specs),
+                           (p_specs, o_specs, {"loss": P()}),
+                           donate=(0, 1), model_flops=flops)
+
+    flat, n_mols = _gnn_batch_structs(cfg, cell)
+    b_specs = fit_specs(shd.graph_batch_specs(mesh, flat.keys()), flat, mesh)
+    n, e, _ = _graph_sizes(cell)
+    train = True  # all remaining GNN shapes are training regimes
+    from repro.distributed.halo import make_halo_ops
+    fn = steps_m.make_gnn_train_step(
+        cfg, opt, constrain=make_gnn_constrain(mesh),
+        gops=make_halo_ops(mesh, all_axes(mesh)), remat=True)
+    flops = _gnn_flops(cfg, n, e, max(cell.d_feat, 1), train)
+    return CellProgram(arch.name, cell.name, "train_step", fn,
+                       (p_structs, o_structs, flat),
+                       (p_specs, o_specs, b_specs),
+                       (p_specs, o_specs, {"loss": P()}),
+                       donate=(0, 1), model_flops=flops)
+
+
+# --------------------------------------------------------- recsys ----------
+def build_fm_cell(arch: Arch, cell: ShapeCell, mesh) -> CellProgram:
+    cfg: RecsysConfig = arch.config
+    p_structs = jax.eval_shape(functools.partial(fm_m.fm_init, cfg),
+                               jax.random.PRNGKey(0))
+    p_specs = shd.fm_param_specs(cfg, mesh, p_structs)
+    dp = data_axes(mesh)
+    f = cfg.n_sparse
+    total_rows = int(sum(cfg.vocab_sizes))
+
+    if cell.kind == "rec_train":
+        opt = AdamW(lr=1e-3)
+        o_structs = jax.eval_shape(opt.init, p_structs)
+        o_specs = shd.opt_state_specs(p_specs)
+        batch = {"idx": sds((cell.global_batch, f), I32),
+                 "labels": sds((cell.global_batch,), F32)}
+        fn = steps_m.make_fm_train_step(cfg, opt)
+        flops = 2.0 * cell.global_batch * f * cfg.embed_dim * 3 * 3
+        return CellProgram(arch.name, cell.name, "train_step", fn,
+                           (p_structs, o_structs, batch),
+                           (p_specs, o_specs, shd.fm_batch_specs(mesh)),
+                           (p_specs, o_specs, {"loss": P()}),
+                           donate=(0, 1), model_flops=flops)
+
+    if cell.kind == "rec_serve":
+        batch = {"idx": sds((cell.global_batch, f), I32)}
+        fn = steps_m.make_fm_serve_step(cfg)
+        flops = 2.0 * cell.global_batch * f * cfg.embed_dim * 3
+        return CellProgram(arch.name, cell.name, "serve_step", fn,
+                           (p_structs, batch),
+                           (p_specs, {"idx": P(dp, None)}),
+                           None, model_flops=flops)
+
+    # retrieval: one user context against n_candidates items (padded up
+    # to a 512-divisible count; padding candidates score as junk rows)
+    n_user = 20
+    n_cand_f = f - n_user
+    fn = steps_m.make_fm_retrieval_step(cfg, n_user)
+    user = sds((n_user,), I32)
+    n_cand = -(-cell.n_candidates // 1024) * 1024
+    cand = sds((n_cand, n_cand_f), I32)
+    flops = 2.0 * cell.n_candidates * n_cand_f * cfg.embed_dim * 3
+    return CellProgram(arch.name, cell.name, "serve_step", fn,
+                       (p_structs, user, cand),
+                       (p_specs, P(), P(all_axes(mesh), None)),
+                       None, model_flops=flops)
+
+
+# ---------------------------------------------------------- entry ----------
+def build_cell(arch_name: str, cell_name: str, mesh, *,
+               layer_mode: str = "scan",
+               n_layers_override: int = 0) -> CellProgram:
+    arch = get_arch(arch_name)
+    cell = next(c for c in arch.shapes if c.name == cell_name)
+    if cell.skip:
+        raise SkippedCell(f"{arch_name}/{cell_name}: {cell.skip}")
+    if isinstance(arch.config, TransformerConfig):
+        if n_layers_override:
+            arch = dataclasses.replace(arch, config=dataclasses.replace(
+                arch.config, n_layers=n_layers_override))
+        return build_lm_cell(arch, cell, mesh, layer_mode=layer_mode)
+    if isinstance(arch.config, GNNConfig):
+        return build_gnn_cell(arch, cell, mesh)
+    if isinstance(arch.config, RecsysConfig):
+        return build_fm_cell(arch, cell, mesh)
+    raise TypeError(type(arch.config))
+
+
+class SkippedCell(Exception):
+    pass

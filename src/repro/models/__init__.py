@@ -1,0 +1,2 @@
+"""Model zoo: transformers (dense/MoE), GNNs, equivariant nets, recsys."""
+from . import common, dimenet, fm, gnn, nequip, so3, transformer  # noqa: F401

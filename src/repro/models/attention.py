@@ -1,0 +1,167 @@
+"""Flash attention in pure jnp with a custom VJP (TPU-memory-sane).
+
+Forward: online-softmax over (q_chunk x k_chunk) tiles via lax.scan.
+Backward: FlashAttention-style — saves only (q, k, v, out, lse); the
+probability tiles are *recomputed* per chunk pair. Without the custom VJP,
+jax.lax.scan's backward saves every exp(scores) tile and a 4k-context
+train step needs ~50 GiB/device of temps (measured in the dry-run); with
+it, attention backward memory is O(inputs).
+
+Supports GQA (kv heads < q heads), causal masking, sliding windows, and
+ring-buffer caches via absolute (q_pos, kv_pos) + kv_valid masking.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _mask(qpos_i, kpos_j, kval_j, causal, window):
+    """[B, qc, kc] mask from absolute positions."""
+    m = kval_j[:, None, :]
+    if causal:
+        m = m & (kpos_j[:, None, :] <= qpos_i[None, :, None])
+    if window is not None:
+        m = m & ((qpos_i[None, :, None] - kpos_j[:, None, :]) < window)
+    return m
+
+
+def _chunk(x, n, c, axis):
+    shape = list(x.shape)
+    shape[axis:axis + 1] = [n, c]
+    return jnp.moveaxis(x.reshape(shape), axis, 0)
+
+
+def chunked_attention(q, k, v, *, q_pos, kv_pos, kv_valid=None,
+                      causal=True, window: Optional[int] = None,
+                      q_chunk: int = 512, k_chunk: int = 1024):
+    """q [B,S,H,Dh]; k,v [B,T,KV,Dh]; q_pos [S]; kv_pos [T] or [B,T].
+    Returns [B,S,H,Dh]."""
+    b, s, h, dh = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(dh)
+
+    if kv_pos.ndim == 1:
+        kv_pos = jnp.broadcast_to(kv_pos[None, :], (b, t))
+    if kv_valid is None:
+        kv_valid = jnp.ones((b, t), bool)
+
+    qc, kc = min(q_chunk, s), min(k_chunk, t)
+    sp, tp = -(-s // qc) * qc, -(-t // kc) * kc
+    nq, nk = sp // qc, tp // kc
+
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, (0, sp - s))
+    kpos = jnp.pad(kv_pos, ((0, 0), (0, tp - t)))
+    kval = jnp.pad(kv_valid, ((0, 0), (0, tp - t)))
+
+    # chunked views: leading axis = chunk index
+    qs = _chunk(qp.reshape(b, sp, kvh, g, dh), nq, qc, 1)   # [nq,B,qc,KV,G,D]
+    ks = _chunk(kp, nk, kc, 1)                              # [nk,B,kc,KV,D]
+    vs = _chunk(vp, nk, kc, 1)
+    qposs = qpos.reshape(nq, qc)
+    kposs = _chunk(kpos, nk, kc, 1)                         # [nk,B,kc]
+    kvals = _chunk(kval, nk, kc, 1)
+
+    def fwd_impl(qs, ks, vs, qposs, kposs, kvals):
+        def q_step(_, qin):
+            qi, qpos_i = qin
+
+            def k_step(carry, kin):
+                m, l, acc = carry
+                ki, vi, kpos_j, kval_j = kin
+                sc = jnp.einsum("bqkgd,btkd->bqkgt", qi, ki,
+                                preferred_element_type=jnp.float32) * scale
+                msk = _mask(qpos_i, kpos_j, kval_j, causal,
+                            window)[:, :, None, None, :]
+                sc = jnp.where(msk, sc, NEG_INF)
+                m_new = jnp.maximum(m, sc.max(axis=-1))
+                corr = jnp.exp(m - m_new)
+                p = jnp.exp(sc - m_new[..., None])
+                l_new = l * corr + p.sum(axis=-1)
+                # p is cast down to the kv dtype for the MXU matmul and
+                # accumulated in f32 (flash-standard). Casting vi UP would
+                # make XLA hoist a whole-cache f32 convert out of the loop
+                # (measured: 2x10 GiB/device on decode_32k).
+                pv = jnp.einsum("bqkgt,btkd->bqkgd", p.astype(vi.dtype), vi,
+                                preferred_element_type=jnp.float32)
+                return (m_new, l_new, acc * corr[..., None] + pv), None
+
+            m0 = jnp.full((b, qc, kvh, g), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, qc, kvh, g), jnp.float32)
+            a0 = jnp.zeros((b, qc, kvh, g, dh), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                          (ks, vs, kposs, kvals))
+            l_safe = jnp.maximum(l, 1e-30)
+            out = (acc / l_safe[..., None]).astype(q.dtype)
+            lse = m + jnp.log(l_safe)
+            return None, (out, lse)
+
+        _, (outs, lses) = jax.lax.scan(q_step, None, (qs, qposs))
+        return outs, lses                  # [nq,B,qc,KV,G,D], [nq,B,qc,KV,G]
+
+    def _f0(x):
+        return np.zeros(x.shape, jax.dtypes.float0)
+
+    @jax.custom_vjp
+    def attn(qs, ks, vs, qposs, kposs, kvals):
+        return fwd_impl(qs, ks, vs, qposs, kposs, kvals)[0]
+
+    def attn_fwd(qs, ks, vs, qposs, kposs, kvals):
+        outs, lses = fwd_impl(qs, ks, vs, qposs, kposs, kvals)
+        return outs, (qs, ks, vs, qposs, kposs, kvals, outs, lses)
+
+    def attn_bwd(res, g_out):
+        qs_, ks_, vs_, qposs, kposs, kvals, outs, lses = res
+        delta = jnp.sum(g_out.astype(jnp.float32)
+                        * outs.astype(jnp.float32), axis=-1)  # [nq,B,qc,KV,G]
+
+        def k_step(dq_acc, kin):
+            ki, vi, kpos_j, kval_j = kin
+
+            def q_step(carry, qin):
+                dk_j, dv_j = carry
+                qi, go_i, lse_i, delta_i, qpos_i = qin
+                sc = jnp.einsum("bqkgd,btkd->bqkgt", qi, ki,
+                                preferred_element_type=jnp.float32) * scale
+                msk = _mask(qpos_i, kpos_j, kval_j, causal,
+                            window)[:, :, None, None, :]
+                sc = jnp.where(msk, sc, NEG_INF)
+                p = jnp.exp(sc - lse_i[..., None])            # recomputed
+                pl = p.astype(vi.dtype)
+                dv_j = dv_j + jnp.einsum("bqkgt,bqkgd->btkd", pl, go_i,
+                                         preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bqkgd,btkd->bqkgt", go_i, vi,
+                                preferred_element_type=jnp.float32)
+                ds = (p * (dp - delta_i[..., None]) * scale)
+                dsl = ds.astype(ki.dtype)
+                dq_i = jnp.einsum("bqkgt,btkd->bqkgd", dsl, ki,
+                                  preferred_element_type=jnp.float32)
+                dk_j = dk_j + jnp.einsum("bqkgt,bqkgd->btkd", dsl, qi,
+                                         preferred_element_type=jnp.float32)
+                return (dk_j, dv_j), dq_i
+
+            z = jnp.zeros((b, kc, kvh, dh), jnp.float32)
+            (dk_j, dv_j), dq_js = jax.lax.scan(
+                q_step, (z, z), (qs_, g_out, lses, delta, qposs))
+            return dq_acc + dq_js, (dk_j, dv_j)
+
+        dq0 = jnp.zeros(qs_.shape, jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(k_step, dq0,
+                                      (ks_, vs_, kposs, kvals))
+        return (dq.astype(q.dtype), dks.astype(k.dtype),
+                dvs.astype(v.dtype), _f0(qposs), _f0(kposs), _f0(kvals))
+
+    attn.defvjp(attn_fwd, attn_bwd)
+
+    outs = attn(qs, ks, vs, qposs, kposs, kvals)   # [nq,B,qc,KV,G,D]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, h, dh)
+    return out[:, :s]

@@ -1,0 +1,100 @@
+"""Shared building blocks for the model zoo (pure-functional JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return jax.random.uniform(key, shape, dtype, -s, s)
+
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale + bias).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def mlp(x, params, activation=jax.nn.relu, final_activation=False):
+    """Simple MLP: params = [(w, b), ...]."""
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i < n - 1 or final_activation:
+            x = activation(x)
+    return x
+
+
+def init_mlp(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [(uniform_init(k, (di, do), dtype=dtype), jnp.zeros((do,), dtype))
+            for k, di, do in zip(ks, dims[:-1], dims[1:])]
+
+
+# ----------------------------------------------------------------- RoPE ----
+def apply_rope(x, positions, theta: float = 1e6):
+    """Rotary embedding computed on the fly (no [max_pos, D/2] tables —
+    at 524k context a table would be a quarter-GB HLO constant).
+
+    x [..., S, H, D]; positions broadcastable to [..., S].
+    """
+    d = x.shape[-1]
+    inv = jnp.asarray(1.0 / (theta ** (np.arange(0, d, 2) / d)), jnp.float32)
+    freqs = positions[..., None].astype(jnp.float32) * inv   # [..., S, D/2]
+    c = jnp.cos(freqs)[..., None, :]                         # [..., S, 1, D/2]
+    s = jnp.sin(freqs)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------- segment ops (GNN/FM) ----
+def segment_softmax(logits, segment_ids, num_segments):
+    mx = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    ex = jnp.exp(logits - jnp.take(mx, segment_ids, axis=0))
+    den = jax.ops.segment_sum(ex, segment_ids, num_segments=num_segments)
+    return ex / (jnp.take(den, segment_ids, axis=0) + 1e-9)
+
+
+def embedding_bag(table, indices, offsets=None, mode="sum"):
+    """torch.nn.EmbeddingBag equivalent: gather + segment-reduce.
+
+    indices [N] flat ids; offsets [B] bag starts (None -> one id per bag).
+    JAX has no native EmbeddingBag — this IS the implementation (gather +
+    segment_sum), as required for the recsys substrate.
+    """
+    if offsets is None:
+        return jnp.take(table, indices, axis=0)
+    n = indices.shape[0]
+    bag_ids = jnp.cumsum(
+        jnp.zeros(n, jnp.int32).at[offsets[1:]].add(1)) if offsets.shape[0] > 1 \
+        else jnp.zeros(n, jnp.int32)
+    emb = jnp.take(table, indices, axis=0)
+    out = jax.ops.segment_sum(emb, bag_ids, num_segments=offsets.shape[0])
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones(n), bag_ids,
+                                  num_segments=offsets.shape[0])
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    return out
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))

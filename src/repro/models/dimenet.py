@@ -1,0 +1,162 @@
+"""DimeNet [arXiv:2003.03123] — directional message passing over triplets.
+
+The kernel regime here is the (i,j,k) *triplet gather*: messages live on
+directed edges, and each interaction block updates edge kj's message from
+all edges (k->j) sharing its target, weighted by a joint radial+angular
+basis of (d_kj, angle(kj, ji)). This is NOT expressible as SpMM — it is a
+gather over a triplet index list + segment reduction, which is exactly how
+we lower it to TPU (take + segment_sum).
+
+Simplification recorded in DESIGN.md: the spherical Bessel/Legendre joint
+basis is replaced by an equivalent-rank separable basis
+  rbf_n(d) = env(d) * sin((n+1) pi d / c) / d,   cbf_l(a) = cos(l * a)
+which preserves shapes, sparsity pattern and FLOP structure (n_radial x
+n_spherical bilinear expansion) without scipy's Bessel roots.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig
+from .common import init_mlp, mlp, normal_init, uniform_init
+
+N_SPECIES = 16  # atomic-number embedding rows (H..S for molecule bench)
+
+
+class MoleculeBatch(NamedTuple):
+    """Batched small molecules, flattened with segment ids."""
+
+    z: jnp.ndarray          # [N] atom types
+    pos: jnp.ndarray        # [N, 3]
+    edge_src: jnp.ndarray   # [E]  (k in k->j)
+    edge_dst: jnp.ndarray   # [E]  (j)
+    trip_kj: jnp.ndarray    # [T] edge index of (k->j)
+    trip_ji: jnp.ndarray    # [T] edge index of (j->i)
+    mol_id: jnp.ndarray     # [N] molecule segment of each atom
+    n_mols: int             # static
+
+
+def build_triplets(edge_src: np.ndarray, edge_dst: np.ndarray):
+    """All ordered pairs of edges (k->j, j->i) with k != i (host-side)."""
+    kj, ji = [], []
+    by_src = {}
+    for eid, s in enumerate(edge_src):
+        by_src.setdefault(int(s), []).append(eid)
+    for e_kj, (k, j) in enumerate(zip(edge_src, edge_dst)):
+        for e_ji in by_src.get(int(j), ()):
+            if int(edge_dst[e_ji]) != int(k):   # exclude backtracking k->j->k
+                kj.append(e_kj)
+                ji.append(e_ji)
+    return (np.asarray(kj, np.int32), np.asarray(ji, np.int32))
+
+
+def envelope(d, cutoff, p=6):
+    """DimeNet polynomial envelope u(d) with u(c)=u'(c)=u''(c)=0."""
+    x = d / cutoff
+    a, b, c = -(p + 1) * (p + 2) / 2, p * (p + 2), -p * (p + 1) / 2
+    return (1 / jnp.maximum(x, 1e-9) + a * x ** (p - 1) + b * x ** p
+            + c * x ** (p + 1)) * (x < 1.0)
+
+
+def radial_basis(d, n_radial, cutoff):
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    env = envelope(d, cutoff)[:, None]
+    return env * jnp.sin(n[None, :] * jnp.pi * d[:, None] / cutoff) \
+        * np.sqrt(2.0 / cutoff)
+
+
+def angular_basis(d, angle, n_spherical, n_radial, cutoff):
+    """Separable radial x angular expansion [T, n_spherical * n_radial]."""
+    rb = radial_basis(d, n_radial, cutoff)                 # [T, R]
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    cb = jnp.cos(l[None, :] * angle[:, None])              # [T, S]
+    return (rb[:, None, :] * cb[:, :, None]).reshape(d.shape[0], -1)
+
+
+def dimenet_init(cfg: GNNConfig, key):
+    d = cfg.d_hidden
+    nr, ns, nb = cfg.n_radial, cfg.n_spherical, cfg.n_bilinear
+    ks = jax.random.split(key, 6 + 6 * cfg.n_layers)
+    p = {
+        "emb_z": normal_init(ks[0], (N_SPECIES, d)),
+        "emb_rbf": uniform_init(ks[1], (nr, d)),
+        "emb_msg": init_mlp(ks[2], [3 * d, d]),
+        "out_rbf": uniform_init(ks[3], (nr, d)),
+        "out_mlp": init_mlp(ks[4], [d, d, 1]),
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        bk = jax.random.split(ks[5 + i], 6)
+        p["blocks"].append({
+            "w_rbf": uniform_init(bk[0], (nr, d)),
+            "w_src": init_mlp(bk[1], [d, d]),
+            "w_pre": init_mlp(bk[2], [d, nb]),          # down-project msg
+            "w_sbf": uniform_init(bk[3], (ns * nr, nb, d)),  # bilinear
+            "w_upd": init_mlp(bk[4], [d, d, d]),
+            "w_res": init_mlp(bk[5], [d, d]),
+        })
+    return p
+
+
+def dimenet_forward(params, batch: MoleculeBatch, cfg: GNNConfig,
+                    constrain=None, gops=None, remat=False):
+    """Returns per-molecule energies [n_mols]."""
+    from repro.models.gnn import default_gops
+    c = constrain or (lambda x, kind: x)
+    tk, seg = gops or default_gops()
+    vec = tk(batch.pos, batch.edge_src) \
+        - tk(batch.pos, batch.edge_dst)                    # [E, 3]
+    d = jnp.sqrt(jnp.sum(vec ** 2, axis=-1) + 1e-12)
+    rbf = radial_basis(d, cfg.n_radial, cfg.cutoff)        # [E, R]
+
+    # triplet angle between edge kj and edge ji
+    v_kj = tk(vec, batch.trip_kj)
+    v_ji = tk(vec, batch.trip_ji)
+    cosang = jnp.sum(v_kj * v_ji, axis=-1) / (
+        jnp.linalg.norm(v_kj, axis=-1) * jnp.linalg.norm(v_ji, axis=-1)
+        + 1e-9)
+    angle = jnp.arccos(jnp.clip(cosang, -1.0, 1.0))
+    sbf = angular_basis(tk(d, batch.trip_kj), angle,
+                        cfg.n_spherical, cfg.n_radial, cfg.cutoff)
+
+    # embedding block: directed edge message m_kj  (emb_z is a tiny
+    # replicated table -> plain take, not a halo gather)
+    zs = jnp.take(params["emb_z"], batch.z, axis=0)
+    m = mlp(jnp.concatenate([tk(zs, batch.edge_src),
+                             tk(zs, batch.edge_dst),
+                             rbf @ params["emb_rbf"]], axis=-1),
+            params["emb_msg"], activation=jax.nn.silu)     # [E, d]
+
+    n_edges = m.shape[0]
+    sbf = c(sbf, "edge")
+    m = c(m, "edge")
+
+    def block(m, blk):
+        # directional interaction: gather messages of k->j, expand in the
+        # joint basis, reduce onto edge j->i  (the triplet-gather kernel)
+        m_kj = tk(m, batch.trip_kj)                        # [T, d]
+        pre = mlp(m_kj, blk["w_pre"], activation=jax.nn.silu)  # [T, nb]
+        # bilinear: [T,SR] x [SR,nb,d] x [T,nb] -> [T, d]
+        t_msg = c(jnp.einsum("ts,sbd,tb->td", sbf, blk["w_sbf"], pre),
+                  "edge")
+        agg = c(seg(t_msg, batch.trip_ji, n_edges), "edge")
+        upd = (rbf @ blk["w_rbf"]) * mlp(m, blk["w_src"],
+                                         activation=jax.nn.silu) + agg
+        return c(mlp(m + mlp(upd, blk["w_upd"], activation=jax.nn.silu),
+                     blk["w_res"], activation=jax.nn.silu), "edge")
+
+    f = jax.checkpoint(block) if remat else block
+    for blk in params["blocks"]:
+        m = f(m, blk)
+
+    # output block: edges -> atoms -> molecule energy
+    per_atom = c(seg((rbf @ params["out_rbf"]) * m, batch.edge_dst,
+                     batch.z.shape[0]), "node")
+    energy_atom = mlp(per_atom, params["out_mlp"],
+                      activation=jax.nn.silu)[:, 0]
+    return jax.ops.segment_sum(energy_atom, batch.mol_id,
+                               num_segments=batch.n_mols)

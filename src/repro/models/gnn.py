@@ -1,0 +1,177 @@
+"""Message-passing GNNs: vanilla GCN (the paper's model), GatedGCN, and
+MeshGraphNet. JAX sparse is BCOO-only, so message passing is implemented
+via edge-index gathers + ``jax.ops.segment_sum`` — that scatter path is
+itself the "flexible engine" of the tri-hybrid executor; the GCN can
+alternatively run its aggregation through the paper's TriPartition
+(core.hybrid_spmm) when the graph has been preprocessed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from .common import init_mlp, layer_norm, mlp, normal_init, uniform_init
+
+
+class Graph(NamedTuple):
+    """COO edge-list graph. senders/receivers [E]; features optional."""
+
+    senders: jnp.ndarray
+    receivers: jnp.ndarray
+    node_feat: jnp.ndarray                 # [N, F]
+    edge_feat: Optional[jnp.ndarray] = None  # [E, Fe]
+
+    @property
+    def n_nodes(self):
+        return self.node_feat.shape[0]
+
+    @property
+    def n_edges(self):
+        return self.senders.shape[0]
+
+
+def default_gops():
+    """(take, segment_sum) — generic XLA gather/scatter. Full-graph
+    distributed cells swap in repro.distributed.halo.make_halo_ops."""
+    return (lambda x, i: jnp.take(x, i, axis=0),
+            lambda v, i, n: jax.ops.segment_sum(v, i, num_segments=n))
+
+
+def symmetric_normalized_weights(g: Graph, gops=None) -> jnp.ndarray:
+    """GCN edge weights  d_i^{-1/2} d_j^{-1/2}  (self-loops NOT added here)."""
+    tk, seg = gops or default_gops()
+    n = g.n_nodes
+    deg = seg(jnp.ones_like(g.senders, jnp.float32), g.receivers, n)
+    dinv = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+    return tk(dinv, g.senders) * tk(dinv, g.receivers)
+
+
+# ------------------------------------------------------------- GCN ---------
+def gcn_init(cfg: GNNConfig, d_in: int, key):
+    dims = [d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {"w": [uniform_init(k, (di, do))
+                  for k, di, do in zip(ks, dims[:-1], dims[1:])]}
+
+
+def gcn_forward(params, g: Graph, cfg: GNNConfig,
+                edge_weights: Optional[jnp.ndarray] = None, constrain=None,
+                gops=None):
+    """Combination-first  A_norm @ (X @ W)  per layer (paper §II-A)."""
+    c = constrain or (lambda x, kind: x)
+    tk, seg = gops or default_gops()
+    n = g.n_nodes
+    w_e = edge_weights if edge_weights is not None \
+        else symmetric_normalized_weights(g, gops)
+    h = g.node_feat
+    for i, w in enumerate(params["w"]):
+        h = c(h @ w, "node")                              # combination first
+        msgs = c(w_e[:, None] * tk(h, g.senders), "edge")
+        h = c(seg(msgs, g.receivers, n), "node") + h
+        if i < len(params["w"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# --------------------------------------------------------- GatedGCN --------
+def gatedgcn_init(cfg: GNNConfig, d_in: int, d_edge_in: int, key):
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(ks[4 + i], 8)
+        layers.append({
+            "A": uniform_init(lk[0], (d, d)), "B": uniform_init(lk[1], (d, d)),
+            "C": uniform_init(lk[2], (d, d)), "U": uniform_init(lk[3], (d, d)),
+            "V": uniform_init(lk[4], (d, d)),
+            "ln_h_s": jnp.ones((d,)), "ln_h_b": jnp.zeros((d,)),
+            "ln_e_s": jnp.ones((d,)), "ln_e_b": jnp.zeros((d,)),
+        })
+    return {
+        "embed_h": uniform_init(ks[0], (d_in, d)),
+        "embed_e": uniform_init(ks[1], (max(d_edge_in, 1), d)),
+        "readout": uniform_init(ks[2], (d, cfg.n_classes)),
+        "layers": layers,
+    }
+
+
+def gatedgcn_forward(params, g: Graph, cfg: GNNConfig, constrain=None,
+                     gops=None, remat=False):
+    c = constrain or (lambda x, kind: x)
+    tk, seg = gops or default_gops()
+    n = g.n_nodes
+    h = g.node_feat @ params["embed_h"]
+    e = (g.edge_feat if g.edge_feat is not None
+         else jnp.ones((g.n_edges, 1))) @ params["embed_e"]
+
+    def layer(carry, lp):
+        h, e = carry
+        h = c(h, "node")   # also pins the bwd scatter-add's cotangent
+        hs = tk(h, g.senders)
+        hr = tk(h, g.receivers)
+        e_hat = c(hr @ lp["A"] + hs @ lp["B"] + e @ lp["C"], "edge")
+        e = e + jax.nn.relu(layer_norm(e_hat, lp["ln_e_s"], lp["ln_e_b"]))
+        eta = jax.nn.sigmoid(e_hat)                       # [E, d] vector gates
+        num = c(seg(eta * (hs @ lp["V"]), g.receivers, n), "node")
+        den = c(seg(eta, g.receivers, n), "node") + 1e-6
+        agg = h @ lp["U"] + num / den
+        h = h + jax.nn.relu(layer_norm(agg, lp["ln_h_s"], lp["ln_h_b"]))
+        return (h, e)
+
+    f = jax.checkpoint(layer) if remat else layer
+    for lp in params["layers"]:
+        h, e = f((h, e), lp)
+    return h @ params["readout"]
+
+
+# ----------------------------------------------------- MeshGraphNet --------
+def _mgn_mlp_init(key, d_in, d_hidden, d_out, n_hidden=2):
+    dims = [d_in] + [d_hidden] * n_hidden + [d_out]
+    return init_mlp(key, dims)
+
+
+def meshgraphnet_init(cfg: GNNConfig, d_in: int, d_edge_in: int, key):
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 3 + 2 * cfg.n_layers)
+    p = {
+        "enc_h": _mgn_mlp_init(ks[0], d_in, d, d, cfg.mlp_layers),
+        "enc_e": _mgn_mlp_init(ks[1], max(d_edge_in, 1), d, d,
+                               cfg.mlp_layers),
+        "dec": _mgn_mlp_init(ks[2], d, d, cfg.n_classes, cfg.mlp_layers),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        p["layers"].append({
+            "edge": _mgn_mlp_init(ks[3 + 2 * i], 3 * d, d, d, cfg.mlp_layers),
+            "node": _mgn_mlp_init(ks[4 + 2 * i], 2 * d, d, d, cfg.mlp_layers),
+        })
+    return p
+
+
+def meshgraphnet_forward(params, g: Graph, cfg: GNNConfig, constrain=None,
+                         gops=None, remat=False):
+    c = constrain or (lambda x, kind: x)
+    tk, seg = gops or default_gops()
+    n = g.n_nodes
+    h = mlp(g.node_feat, params["enc_h"])
+    e_in = g.edge_feat if g.edge_feat is not None else jnp.ones((g.n_edges, 1))
+    e = mlp(e_in, params["enc_e"])
+
+    def layer(carry, lp):
+        h, e = carry
+        h = c(h, "node")   # also pins the bwd scatter-add's cotangent
+        hs = tk(h, g.senders)
+        hr = tk(h, g.receivers)
+        e = e + c(mlp(jnp.concatenate([e, hs, hr], axis=-1), lp["edge"]),
+                  "edge")
+        agg = c(seg(e, g.receivers, n), "node")
+        h = h + mlp(jnp.concatenate([h, agg], axis=-1), lp["node"])
+        return (h, e)
+
+    f = jax.checkpoint(layer) if remat else layer
+    for lp in params["layers"]:
+        h, e = f((h, e), lp)
+    return mlp(h, params["dec"])

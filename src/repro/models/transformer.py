@@ -1,0 +1,344 @@
+"""Decoder-only transformer family (dense + MoE) in pure functional JAX.
+
+Covers all five assigned LM architectures: GQA, qk-norm (qwen3), sliding-
+window attention (mixtral), MoE top-k routing with capacity-based gather
+dispatch (mixtral 8e top-2, qwen3-moe 128e top-8), RoPE, SwiGLU, RMSNorm,
+scan-over-layers with optional remat, KV-cache prefill/decode with a ring
+buffer for SWA (which is what makes mixtral's long_500k decode O(window)).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TransformerConfig
+from .attention import chunked_attention
+from .common import apply_rope, normal_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------ params -------
+def init_layer_params(cfg: TransformerConfig, key):
+    d, dh = cfg.d_model, cfg.d_head
+    h, kv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    p = {
+        "attn_norm": jnp.ones((d,), jnp.float32),
+        "ffn_norm": jnp.ones((d,), jnp.float32),
+        "wq": normal_init(ks[0], (d, h * dh)),
+        "wk": normal_init(ks[1], (d, kv * dh)),
+        "wv": normal_init(ks[2], (d, kv * dh)),
+        "wo": normal_init(ks[3], (h * dh, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    if cfg.moe:
+        e = cfg.n_experts
+        p["router"] = normal_init(ks[4], (d, e))
+        p["w_gate"] = normal_init(ks[5], (e, d, f))
+        p["w_up"] = normal_init(ks[6], (e, d, f))
+        p["w_down"] = normal_init(ks[7], (e, f, d))
+    else:
+        p["w_gate"] = normal_init(ks[5], (d, f))
+        p["w_up"] = normal_init(ks[6], (d, f))
+        p["w_down"] = normal_init(ks[7], (f, d))
+    return p
+
+
+def init_params(cfg: TransformerConfig, key):
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(cfg, k))(layer_keys)
+    params = {
+        "embed": normal_init(k_emb, (cfg.vocab, cfg.d_model)),
+        "layers": layers,                       # stacked [L, ...]
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(k_head, (cfg.d_model, cfg.vocab))
+    return params
+
+
+# attention lives in attention.py (flash fwd + custom-vjp bwd)
+
+
+# -------------------------------------------------------------- MoE --------
+def moe_ffn(x, p, cfg: TransformerConfig, capacity: Optional[int] = None,
+            shardings=None):
+    """Capacity-based top-k MoE with gather dispatch (no [T,E,C] one-hots).
+
+    x [T, D] flattened tokens -> [T, D]. ``shardings`` (optional dict with
+    'xs' and 'h' NamedShardings) pins the dispatch buffers: without it XLA
+    replicates the [E, C, D] gathered-token buffer on every device
+    (~300 GiB/device for mixtral train_4k, measured in the dry-run).
+    """
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # [T, E]
+    topv, topi = jax.lax.top_k(probs, k)                    # [T, k]
+    topv = topv / topv.sum(axis=-1, keepdims=True)
+
+    if capacity is None:
+        capacity = int(np.ceil(t * k / e * cfg.capacity_factor))
+    c = max(capacity, 1)
+
+    e_flat = topi.reshape(-1)                               # [T*k]
+    w_flat = topv.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)     # [T*k, E]
+    rank = jnp.cumsum(onehot, axis=0) - 1                   # rank in expert
+    rank = jnp.sum(rank * onehot, axis=-1)                  # [T*k]
+    keep = rank < c
+    dest = jnp.where(keep, e_flat * c + rank, e * c)        # dump slot at end
+
+    slot_tok = jnp.zeros((e * c + 1,), jnp.int32).at[dest].set(tok_flat)
+    slot_w = jnp.zeros((e * c + 1,), jnp.float32).at[dest].set(w_flat)
+    slot_tok = slot_tok[: e * c].reshape(e, c)
+    slot_w = slot_w[: e * c].reshape(e, c)
+
+    xs = jnp.take(x, slot_tok, axis=0)                      # [E, C, D]
+    if shardings is not None:
+        xs = jax.lax.with_sharding_constraint(xs, shardings["xs"])
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+    if shardings is not None:
+        h = jax.lax.with_sharding_constraint(h, shardings["h"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # [E, C, D]
+    if shardings is not None:
+        y = jax.lax.with_sharding_constraint(y, shardings["xs"])
+
+    # combine in the compute dtype: a f32 combine makes every dispatch
+    # cotangent f32 (2x bytes) and XLA then materializes f32 [E*C, D]
+    # buffers (measured 40 GiB/device each on mixtral train_4k)
+    y = (y * slot_w[..., None].astype(y.dtype)).reshape(e * c, d)
+    if shardings is not None:
+        y = jax.lax.with_sharding_constraint(y, shardings["flat"])
+    out = jax.ops.segment_sum(y, slot_tok.reshape(-1), num_segments=t)
+    if shardings is not None:
+        out = jax.lax.with_sharding_constraint(out, shardings["tokens"])
+    return out.astype(x.dtype)
+
+
+def dense_ffn(x, p):
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def _cast_layer(lp, dtype):
+    """bf16 compute from f32 master params (norm scales stay f32 — the
+    norms accumulate in f32 internally anyway)."""
+    if dtype is None:
+        return lp
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, lp)
+
+
+def _ffn(h, lp, cfg, moe_shardings=None):
+    b, s, d = h.shape
+    hn = rms_norm(h, lp["ffn_norm"], cfg.norm_eps)
+    if cfg.moe:
+        if isinstance(moe_shardings, dict) and "ep_mesh" in moe_shardings:
+            from .moe_ep import moe_ffn_ep
+            out = moe_ffn_ep(hn.reshape(b * s, d), lp, cfg,
+                             moe_shardings["ep_mesh"],
+                             dp_axes=moe_shardings["dp"],
+                             mdl_axis=moe_shardings["mdl"])
+            return out.reshape(b, s, d)
+        return moe_ffn(hn.reshape(b * s, d), lp, cfg,
+                       shardings=moe_shardings).reshape(b, s, d)
+    return dense_ffn(hn, lp)
+
+
+def _project_qkv(hn, lp, cfg, q_pos):
+    b, s, _ = hn.shape
+    q = (hn @ lp["wq"]).reshape(b, s, cfg.n_heads, cfg.d_head)
+    kk = (hn @ lp["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    vv = (hn @ lp["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        kk = rms_norm(kk, lp["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    kk = apply_rope(kk, q_pos, cfg.rope_theta)
+    return q, kk, vv
+
+
+# ----------------------------------------------------------- forward -------
+def _layer_slice(layers, i):
+    return jax.tree.map(lambda x: x[i], layers)
+
+
+def forward(params, tokens, cfg: TransformerConfig, *, remat: bool = True,
+            q_chunk: int = 512, k_chunk: int = 1024,
+            layer_mode: str = "scan", compute_dtype=jnp.bfloat16,
+            act_constraint=None, moe_shardings=None):
+    """Training forward: tokens [B, S] -> normed hidden [B, S, D].
+
+    ``layer_mode="unroll"`` replaces the layer scan with a python loop —
+    used by the dry-run's cost probes (XLA cost_analysis counts a while
+    body once, so scanned programs under-report flops by ~n_layers).
+    """
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        compute_dtype or jnp.float32)
+    q_pos = jnp.arange(s)
+
+    def layer(h, lp):
+        if act_constraint is not None:
+            # sequence-parallel residual stream: the remat-saved per-layer
+            # carry is sharded over (data, model) instead of data only —
+            # cuts saved-activation HBM by the model-axis size
+            h = jax.lax.with_sharding_constraint(h, act_constraint)
+        lp = _cast_layer(lp, compute_dtype)
+        hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, kk, vv = _project_qkv(hn, lp, cfg, q_pos)
+        attn = chunked_attention(q, kk, vv, q_pos=q_pos, kv_pos=q_pos,
+                                 causal=True, window=cfg.sliding_window,
+                                 q_chunk=q_chunk, k_chunk=k_chunk)
+        h = h + attn.reshape(b, s, -1) @ lp["wo"]
+        return h + _ffn(h, lp, cfg, moe_shardings), None
+
+    f = jax.checkpoint(layer) if remat else layer
+    # cast the stacked (still-sharded) layer params ONCE, outside the
+    # scan: the per-layer FSDP all-gather then moves bf16, not f32 —
+    # halves the dominant collective term of pure-FSDP training
+    layers = _cast_layer(params["layers"], compute_dtype)
+    if layer_mode == "unroll":
+        for i in range(cfg.n_layers):
+            h, _ = f(h, _layer_slice(layers, i))
+    else:
+        h, _ = jax.lax.scan(f, h, layers)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def logits_fn(params, h, cfg: TransformerConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head
+
+
+# --------------------------------------------------------- KV cache --------
+def cache_len(cfg: TransformerConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Ring-buffer KV cache. For SWA models the buffer is only
+    ``sliding_window`` long — that is the sub-quadratic long-context story."""
+    t = cache_len(cfg, max_len)
+    shape = (cfg.n_layers, batch, t, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((batch, t), -1, jnp.int32),  # absolute pos per slot
+        "index": jnp.zeros((), jnp.int32),           # count of tokens so far
+    }
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig, *,
+                k_chunk: int = 2048, layer_mode: str = "scan",
+                compute_dtype=jnp.bfloat16, moe_shardings=None):
+    """One decode step: tokens [B, 1] -> (logits [B, 1, V], new cache)."""
+    b = tokens.shape[0]
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        compute_dtype or jnp.float32)
+    t_buf = cache["k"].shape[2]
+    pos = cache["index"]                       # absolute position of token
+    q_pos = pos[None].astype(jnp.int32)        # [1]
+    slot = jnp.mod(pos, t_buf)
+
+    new_pos = cache["pos"].at[:, slot].set(pos.astype(jnp.int32))
+    kv_valid = new_pos >= 0
+
+    def layer_step(h, xs):
+        lp, kc, vc = xs
+        lp = _cast_layer(lp, compute_dtype)
+        hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, kk, vv = _project_qkv(hn, lp, cfg, q_pos)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, kk.astype(kc.dtype),
+                                                 slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, vv.astype(vc.dtype),
+                                                 slot, axis=1)
+        attn = chunked_attention(q, kc, vc, q_pos=q_pos, kv_pos=new_pos,
+                                 kv_valid=kv_valid, causal=True,
+                                 window=cfg.sliding_window,
+                                 q_chunk=1, k_chunk=k_chunk)
+        h = h + attn.reshape(b, 1, -1) @ lp["wo"]
+        return h + _ffn(h, lp, cfg, moe_shardings), (kc, vc)
+
+    if layer_mode == "unroll":
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            h, (kc, vc) = layer_step(
+                h, (_layer_slice(params["layers"], i), cache["k"][i],
+                    cache["v"][i]))
+            ks.append(kc)
+            vs.append(vc)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (k_new, v_new) = jax.lax.scan(
+            layer_step, h, (params["layers"], cache["k"], cache["v"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, h, cfg)
+    new_cache = {"k": k_new, "v": v_new, "pos": new_pos, "index": pos + 1}
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: TransformerConfig, *, max_len: int,
+            q_chunk: int = 512, k_chunk: int = 1024,
+            cache_dtype=jnp.bfloat16, layer_mode: str = "scan",
+            compute_dtype=jnp.bfloat16, moe_shardings=None):
+    """Prefill the prompt, return (normed hidden [B,S,D], cache)."""
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0).astype(
+        compute_dtype or jnp.float32)
+    q_pos = jnp.arange(s)
+    t_buf = cache_len(cfg, max_len)
+    keep = min(t_buf, s)
+
+    # Ring invariant shared with decode_step: absolute position p lives at
+    # slot p % t_buf. The trailing `keep` tokens go to slots 0..keep, then
+    # a static roll by (s - keep) % t_buf restores the invariant.
+    shift = (s - keep) % t_buf
+
+    def layer(h, lp):
+        lp = _cast_layer(lp, compute_dtype)
+        hn = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        q, kk, vv = _project_qkv(hn, lp, cfg, q_pos)
+        attn = chunked_attention(q, kk, vv, q_pos=q_pos, kv_pos=q_pos,
+                                 causal=True, window=cfg.sliding_window,
+                                 q_chunk=q_chunk, k_chunk=k_chunk)
+        h = h + attn.reshape(b, s, -1) @ lp["wo"]
+        kcache = jnp.zeros((b, t_buf, cfg.n_kv_heads, cfg.d_head),
+                           cache_dtype)
+        kcache = kcache.at[:, :keep].set(kk[:, s - keep:].astype(cache_dtype))
+        vcache = jnp.zeros_like(kcache)
+        vcache = vcache.at[:, :keep].set(vv[:, s - keep:].astype(cache_dtype))
+        if shift:
+            kcache = jnp.roll(kcache, shift, axis=1)
+            vcache = jnp.roll(vcache, shift, axis=1)
+        return h + _ffn(h, lp, cfg, moe_shardings), (kcache, vcache)
+
+    if layer_mode == "unroll":
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            h, (kc, vc) = layer(h, _layer_slice(params["layers"], i))
+            ks.append(kc)
+            vs.append(vc)
+        k_all, v_all = jnp.stack(ks), jnp.stack(vs)
+    else:
+        h, (k_all, v_all) = jax.lax.scan(layer, h, params["layers"])
+    slots = jnp.full((t_buf,), -1, jnp.int32)
+    slots = slots.at[:keep].set(jnp.arange(s - keep, s))
+    if shift:
+        slots = jnp.roll(slots, shift)
+    pos = jnp.broadcast_to(slots[None, :], (b, t_buf)).astype(jnp.int32)
+    cache = {"k": k_all, "v": v_all, "pos": pos,
+             "index": jnp.asarray(s, jnp.int32)}
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, cache

@@ -1,0 +1,1 @@
+from . import optimizer, steps  # noqa: F401

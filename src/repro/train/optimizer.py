@@ -1,0 +1,108 @@
+"""Optimizers from scratch (no optax): AdamW + SGD-momentum, global-norm
+clipping, warmup-cosine schedule. All pure pytree transforms, shardable
+under pjit (optimizer state inherits param shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        z = jax.tree.map(jnp.zeros_like, params)
+        return AdamWState(jnp.zeros((), jnp.int32), z,
+                          jax.tree.map(jnp.zeros_like, params))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        sf = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** sf
+        bc2 = 1 - b2 ** sf
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            return (p - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                              + self.weight_decay * p)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu)
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    mom: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: float = 0.0
+
+    def init(self, params) -> SGDState:
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads, state: SGDState, params):
+        if self.clip_norm:
+            grads = clip_by_global_norm(grads, self.clip_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        mom = jax.tree.map(lambda m, g: self.momentum * m + g,
+                           state.mom, grads)
+        new_params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                                  params, mom)
+        return new_params, SGDState(step, mom)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return schedule

@@ -1,0 +1,234 @@
+"""train_step / serve_step factories for every model family.
+
+These are the functions the launcher jits (optionally under a mesh with
+in/out shardings) and the dry-run lowers. Losses avoid materializing
+[B, S, V] logits via a sequence-chunked fused xent (the V=151936 archs
+would otherwise need 40 GB of logits).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (GNNConfig, RecsysConfig, ShapeCell,
+                                TransformerConfig)
+from repro.models import dimenet as dimenet_m
+from repro.models import fm as fm_m
+from repro.models import gnn as gnn_m
+from repro.models import nequip as nequip_m
+from repro.models import transformer as tfm
+
+
+# ------------------------------------------------------------- LM ----------
+def chunked_cross_entropy(h, head, labels, *, chunk: int = 256):
+    """Mean token xent without a full [B,S,V] logits tensor.
+
+    h [B,S,D], head [D,V], labels [B,S] -> scalar. Scans over S chunks;
+    within a chunk the [B,c,V] logits live only transiently (and V is
+    sharded over the model axis under pjit).
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    sp = -(-s // c) * c
+    hp = jnp.pad(h, ((0, 0), (0, sp - s), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, sp - s)), constant_values=-1)
+    hp = hp.reshape(b, sp // c, c, d).swapaxes(0, 1)      # [n, B, c, D]
+    lp = lp.reshape(b, sp // c, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # checkpointed: without it, scan-backward saves a [B, c, V] f32
+        # logits tensor per chunk (~13 GiB/device at V=151936)
+        tot, cnt = carry
+        hc, lc = xs
+        logits = (hc @ head).astype(jnp.float32)          # [B, c, V]
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lz - tgt) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hp, lp))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params, batch, cfg: TransformerConfig, *, remat=True,
+            q_chunk=512, k_chunk=1024, xent_chunk=256, layer_mode="scan",
+            act_constraint=None, moe_shardings=None):
+    h = tfm.forward(params, batch["tokens"], cfg, remat=remat,
+                    q_chunk=q_chunk, k_chunk=k_chunk, layer_mode=layer_mode,
+                    act_constraint=act_constraint,
+                    moe_shardings=moe_shardings)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return chunked_cross_entropy(h, head, batch["labels"], chunk=xent_chunk)
+
+
+def make_lm_train_step(cfg: TransformerConfig, optimizer, *, remat=True,
+                       q_chunk=512, k_chunk=1024, xent_chunk=256,
+                       compress=None, layer_mode="scan",
+                       act_constraint=None, moe_shardings=None):
+    loss_fn = functools.partial(lm_loss, cfg=cfg, remat=remat,
+                                q_chunk=q_chunk, k_chunk=k_chunk,
+                                xent_chunk=xent_chunk, layer_mode=layer_mode,
+                                act_constraint=act_constraint,
+                                moe_shardings=moe_shardings)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress is not None:
+            grads = compress(grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_lm_prefill_step(cfg: TransformerConfig, *, max_len,
+                         q_chunk=512, k_chunk=1024, layer_mode="scan",
+                         moe_shardings=None):
+    def prefill_step(params, tokens):
+        h, cache = tfm.prefill(params, tokens, cfg, max_len=max_len,
+                               q_chunk=q_chunk, k_chunk=k_chunk,
+                               layer_mode=layer_mode,
+                               moe_shardings=moe_shardings)
+        logits = tfm.logits_fn(params, h[:, -1:], cfg)
+        return logits, cache
+    return prefill_step
+
+
+def make_lm_decode_step(cfg: TransformerConfig, *, k_chunk=2048,
+                        layer_mode="scan", moe_shardings=None):
+    def serve_step(params, cache, tokens):
+        return tfm.decode_step(params, cache, tokens, cfg, k_chunk=k_chunk,
+                               layer_mode=layer_mode,
+                               moe_shardings=moe_shardings)
+    return serve_step
+
+
+# ------------------------------------------------------------- GNN ---------
+def gnn_apply(params, graph, cfg: GNNConfig, constrain=None, gops=None,
+              remat=False):
+    if cfg.kind == "gcn":
+        return gnn_m.gcn_forward(params, graph, cfg, constrain=constrain,
+                                 gops=gops)
+    if cfg.kind == "gatedgcn":
+        return gnn_m.gatedgcn_forward(params, graph, cfg,
+                                      constrain=constrain, gops=gops,
+                                      remat=remat)
+    if cfg.kind == "meshgraphnet":
+        return gnn_m.meshgraphnet_forward(params, graph, cfg,
+                                          constrain=constrain, gops=gops,
+                                          remat=remat)
+    raise ValueError(cfg.kind)
+
+
+def gnn_node_loss(params, batch, cfg: GNNConfig, constrain=None,
+                  gops=None, remat=False):
+    """Masked node-classification xent (padding-safe)."""
+    graph = gnn_m.Graph(batch["senders"], batch["receivers"],
+                        batch["node_feat"], batch.get("edge_feat"))
+    logits = gnn_apply(params, graph, cfg, constrain=constrain, gops=gops,
+                       remat=remat).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("node_mask",
+                     jnp.ones(labels.shape[0], bool)).astype(jnp.float32)
+    lz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[:, None],
+                              axis=-1)[:, 0]
+    return jnp.sum((lz - tgt) * mask) / jnp.maximum(mask.sum(), 1.0)
+
+
+def energy_loss_dimenet(params, batch, cfg: GNNConfig, constrain=None,
+                        gops=None, remat=False):
+    n_mols = batch["energy"].shape[0]       # static from the target's shape
+    mb = dimenet_m.MoleculeBatch(
+        **{k: batch[k] for k in dimenet_m.MoleculeBatch._fields
+           if k != "n_mols"}, n_mols=n_mols)
+    e = dimenet_m.dimenet_forward(params, mb, cfg, constrain=constrain,
+                                  gops=gops, remat=remat)
+    return jnp.mean(jnp.square(e - batch["energy"]))
+
+
+def energy_loss_nequip(params, batch, cfg: GNNConfig, constrain=None,
+                       gops=None, remat=False):
+    n_mols = batch["energy"].shape[0]
+    ag = nequip_m.AtomGraph(
+        **{k: batch[k] for k in nequip_m.AtomGraph._fields
+           if k != "n_mols"}, n_mols=n_mols)
+    e = nequip_m.nequip_forward(params, ag, cfg, constrain=constrain,
+                                gops=gops, remat=remat)
+    return jnp.mean(jnp.square(e - batch["energy"]))
+
+
+def make_gnn_train_step(cfg: GNNConfig, optimizer, compress=None,
+                        constrain=None, gops=None, remat=False):
+    if cfg.kind == "dimenet":
+        loss_fn = functools.partial(energy_loss_dimenet, cfg=cfg,
+                                    constrain=constrain, gops=gops,
+                                    remat=remat)
+    elif cfg.kind == "nequip":
+        loss_fn = functools.partial(energy_loss_nequip, cfg=cfg,
+                                    constrain=constrain, gops=gops,
+                                    remat=remat)
+    else:
+        loss_fn = functools.partial(gnn_node_loss, cfg=cfg,
+                                    constrain=constrain, gops=gops,
+                                    remat=remat)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if compress is not None:
+            grads = compress(grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step
+
+
+def make_gnn_serve_step(cfg: GNNConfig, n_mols: int = 1):
+    def serve_step(params, batch):
+        if cfg.kind == "dimenet":
+            mb = dimenet_m.MoleculeBatch(
+                **{k: batch[k] for k in dimenet_m.MoleculeBatch._fields
+                   if k != "n_mols"}, n_mols=n_mols)
+            return dimenet_m.dimenet_forward(params, mb, cfg)
+        if cfg.kind == "nequip":
+            ag = nequip_m.AtomGraph(
+                **{k: batch[k] for k in nequip_m.AtomGraph._fields
+                   if k != "n_mols"}, n_mols=n_mols)
+            return nequip_m.nequip_forward(params, ag, cfg)
+        graph = gnn_m.Graph(batch["senders"], batch["receivers"],
+                            batch["node_feat"], batch.get("edge_feat"))
+        return gnn_apply(params, graph, cfg)
+    return serve_step
+
+
+# ---------------------------------------------------------- recsys ---------
+def make_fm_train_step(cfg: RecsysConfig, optimizer, compress=None):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(fm_m.fm_loss)(
+            params, batch["idx"], batch["labels"], cfg)
+        if compress is not None:
+            grads = compress(grads)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+    return train_step
+
+
+def make_fm_serve_step(cfg: RecsysConfig):
+    def serve_step(params, batch):
+        return fm_m.fm_score(params, batch["idx"], cfg)
+    return serve_step
+
+
+def make_fm_retrieval_step(cfg: RecsysConfig, n_user_fields: int):
+    def serve_step(params, user_idx, cand_idx):
+        return fm_m.retrieval_score(params, user_idx, cand_idx, cfg,
+                                    n_user_fields)
+    return serve_step

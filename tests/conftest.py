@@ -1,0 +1,25 @@
+import numpy as np
+import pytest
+
+
+def make_heterogeneous_matrix(n: int, seed: int = 0,
+                              dense_frac: float = 0.27,
+                              medium_frac: float = 0.3,
+                              scatter_density: float = 0.003) -> np.ndarray:
+    """A matrix with the paper's three regimes: a tightly-clustered block,
+    a loosely-clustered block, and scattered nnz."""
+    rng = np.random.default_rng(seed)
+    a = np.zeros((n, n), np.float32)
+    d = max(int(n * dense_frac), 4)
+    m = max(int(n * medium_frac), 8)
+    a[:d, :d] = (rng.random((d, d)) < 0.9) * rng.standard_normal((d, d))
+    a[d:d + m, d:d + m] = ((rng.random((m, m)) < 0.15)
+                           * rng.standard_normal((m, m)))
+    a += ((rng.random((n, n)) < scatter_density)
+          * rng.standard_normal((n, n))).astype(np.float32)
+    return a.astype(np.float32)
+
+
+@pytest.fixture
+def hetero300():
+    return make_heterogeneous_matrix(300, seed=0)

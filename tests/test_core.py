@@ -1,0 +1,207 @@
+"""Unit + property tests for the paper's core algorithms."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PartitionConfig, analyze_and_partition, bandwidth,
+                        compute_permutation, csr_from_dense, group_rows,
+                        grouping_density, hybrid_spmm, partition_to_dense,
+                        reorder)
+from repro.core.grouping import groups_cover_exactly, padded_ops
+from repro.core.partition import find_nnz
+from repro.core.reorder import STRATEGIES, apply_permutation
+
+from conftest import make_heterogeneous_matrix
+
+
+# ---------------------------------------------------------------- Alg 1 ----
+class TestGrouping:
+    def test_empty(self):
+        assert group_rows([]) == []
+
+    def test_uniform_rows_single_group(self):
+        gs = group_rows([5] * 100, tau=0.5)
+        assert len(gs) == 1 and gs[0].k == 5
+        assert groups_cover_exactly(gs, 100)
+
+    def test_step_change_splits(self):
+        nnz = [2] * 50 + [40] * 50
+        gs = group_rows(nnz, tau=0.5)
+        assert len(gs) >= 2
+        assert groups_cover_exactly(gs, 100)
+        # padding waste must be far below the single-group worst case
+        assert padded_ops(nnz, gs) < 100 * 40 * 0.6
+
+    def test_density_bounds(self):
+        nnz = [1, 1, 1, 30, 30, 30]
+        gs = group_rows(nnz, tau=0.3)
+        d = grouping_density(nnz, gs)
+        assert 0.0 < d <= 1.0
+
+    @given(st.lists(st.integers(0, 64), min_size=1, max_size=300),
+           st.floats(0.05, 2.0))
+    @settings(max_examples=100, deadline=None)
+    def test_property_cover_and_pad(self, nnz, tau):
+        gs = group_rows(nnz, tau=tau)
+        assert groups_cover_exactly(gs, len(nnz))
+        # group k is the max within the group: padding never truncates
+        for g in gs:
+            assert g.k == max(nnz[g.start:g.stop])
+        assert padded_ops(nnz, gs) >= sum(nnz)
+
+
+class TestFindNnz:
+    def test_covers_percentage(self):
+        vals = np.array([1, 2, 3, 4, 100])
+        assert find_nnz(vals, 0.8) == 4       # 80% of tiles fit in width 4
+        assert find_nnz(vals, 1.0) == 100
+        assert find_nnz(np.array([], dtype=int), 0.9) == 0
+
+
+# ---------------------------------------------------------------- Alg 2 ----
+class TestPartition:
+    @pytest.mark.parametrize("tile", [32, 64, 128])
+    def test_exact_reconstruction(self, hetero300, tile):
+        part, meta, _ = analyze_and_partition(
+            csr_from_dense(hetero300), PartitionConfig(tile=tile))
+        rec = partition_to_dense(part, meta)
+        np.testing.assert_allclose(rec, hetero300, rtol=0, atol=0)
+
+    def test_nnz_conservation(self, hetero300):
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        assert meta.nnz == np.count_nonzero(hetero300)
+
+    def test_three_engines_used(self, hetero300):
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        assert meta.nnz_dense > 0, "tightly-clustered block must hit dense"
+        assert meta.nnz_ell > 0, "loosely-clustered block must hit ELL"
+        assert meta.nnz_coo > 0, "scattered nnz must hit COO"
+
+    def test_thresholds_move_work(self, hetero300):
+        csr = csr_from_dense(hetero300)
+        _, hi, _ = analyze_and_partition(
+            csr, PartitionConfig(tile=64, d_scatter=0.10))
+        _, lo, _ = analyze_and_partition(
+            csr, PartitionConfig(tile=64, d_scatter=0.001))
+        assert hi.nnz_coo >= lo.nnz_coo
+
+    def test_empty_matrix(self):
+        a = np.zeros((100, 100), np.float32)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                              PartitionConfig(tile=64))
+        assert meta.nnz == 0
+
+    def test_all_dense(self):
+        rng = np.random.default_rng(3)
+        a = rng.standard_normal((64, 64)).astype(np.float32)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                              PartitionConfig(tile=64))
+        assert meta.nnz_dense == np.count_nonzero(a)
+        np.testing.assert_allclose(partition_to_dense(part, meta), a)
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=25, deadline=None)
+    def test_property_partition_exact(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(30, 200))
+        a = make_heterogeneous_matrix(n, seed=seed,
+                                      scatter_density=float(rng.uniform(0, .02)))
+        part, meta, _ = analyze_and_partition(
+            csr_from_dense(a), PartitionConfig(tile=int(rng.choice([32, 64]))))
+        np.testing.assert_allclose(partition_to_dense(part, meta), a)
+
+
+# ------------------------------------------------------------- reorder -----
+class TestReorder:
+    @pytest.mark.parametrize("strategy", STRATEGIES)
+    def test_is_permutation(self, hetero300, strategy):
+        csr = csr_from_dense(np.abs(hetero300) + np.abs(hetero300).T)
+        kw = {"labels": np.arange(300) // 50} if strategy == "labels" else {}
+        perm = compute_permutation(csr, strategy, **kw)
+        assert sorted(perm.tolist()) == list(range(300))
+
+    def test_spectrum_preserved(self):
+        rng = np.random.default_rng(7)
+        a = (rng.random((60, 60)) < 0.1).astype(np.float32)
+        a = a + a.T
+        csr = csr_from_dense(a)
+        a2, perm, _ = reorder(csr, "rcm")
+        from repro.core import csr_to_scipy
+        e1 = np.sort(np.linalg.eigvalsh(a))
+        e2 = np.sort(np.linalg.eigvalsh(csr_to_scipy(a2).toarray()))
+        np.testing.assert_allclose(e1, e2, atol=1e-4)
+
+    def test_rcm_reduces_bandwidth_on_community_graph(self):
+        # two communities with a few cross edges, shuffled
+        rng = np.random.default_rng(11)
+        n = 200
+        a = np.zeros((n, n), np.float32)
+        a[:100, :100] = rng.random((100, 100)) < 0.2
+        a[100:, 100:] = rng.random((100, 100)) < 0.2
+        cross = rng.random((n, n)) < 0.002
+        a = np.maximum(a, cross).astype(np.float32)
+        a = np.maximum(a, a.T)
+        sh = rng.permutation(n)
+        a = a[sh][:, sh]
+        csr = csr_from_dense(a)
+        a2, _, _ = reorder(csr, "rcm")
+        assert bandwidth(a2) < bandwidth(csr)
+
+    def test_apply_permutation_roundtrip(self, hetero300):
+        csr = csr_from_dense(hetero300)
+        perm = compute_permutation(csr, "degree")
+        a2 = apply_permutation(csr, perm)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(len(perm))
+        a3 = apply_permutation(a2, inv)
+        from repro.core import csr_to_scipy
+        np.testing.assert_allclose(csr_to_scipy(a3).toarray(), hetero300)
+
+
+# --------------------------------------------------------- hybrid spmm -----
+class TestHybridSpmm:
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_matches_dense(self, hetero300, backend):
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        rng = np.random.default_rng(0)
+        b = rng.standard_normal((300, 32)).astype(np.float32)
+        y = np.asarray(hybrid_spmm(part, jnp.asarray(b), meta=meta,
+                                   backend=backend))
+        want = hetero300 @ b
+        np.testing.assert_allclose(y, want, rtol=2e-5, atol=2e-4)
+
+    @given(st.integers(0, 10_000), st.sampled_from([8, 17, 64]))
+    @settings(max_examples=20, deadline=None)
+    def test_property_spmm_equals_dense(self, seed, f):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(40, 180))
+        a = make_heterogeneous_matrix(n, seed=seed)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                              PartitionConfig(tile=64))
+        b = rng.standard_normal((n, f)).astype(np.float32)
+        y = np.asarray(hybrid_spmm(part, jnp.asarray(b), meta=meta))
+        np.testing.assert_allclose(y, a @ b, rtol=2e-5, atol=2e-4)
+
+    def test_pipelined_chain_matches(self, hetero300):
+        from repro.core import gcn_forward
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        rng = np.random.default_rng(0)
+        x = rng.standard_normal((300, 96)).astype(np.float32)
+        w1 = (rng.standard_normal((96, 64)) * 0.1).astype(np.float32)
+        w2 = (rng.standard_normal((64, 10)) * 0.1).astype(np.float32)
+        y_full = np.asarray(gcn_forward(part, jnp.asarray(x),
+                                        [jnp.asarray(w1), jnp.asarray(w2)],
+                                        meta=meta, block_cols=0))
+        y_pipe = np.asarray(gcn_forward(part, jnp.asarray(x),
+                                        [jnp.asarray(w1), jnp.asarray(w2)],
+                                        meta=meta, block_cols=32))
+        np.testing.assert_allclose(y_pipe, y_full, rtol=1e-4, atol=1e-4)
+        # oracle
+        h = np.maximum(hetero300 @ (x @ w1), 0)
+        want = hetero300 @ (h @ w2)
+        np.testing.assert_allclose(y_full, want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.ell_spmm import ell_spmm
+from repro.kernels.tile_matmul import tile_matmul
+
+RNG = np.random.default_rng(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-4)
+
+
+class TestTileMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 8, 8), (128, 128, 128), (256, 512, 128),
+        (100, 70, 30), (257, 129, 65), (1, 128, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, m, k, n, dtype):
+        a = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+        b = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+        got = tile_matmul(a, b, bm=128, bn=128, bk=128, interpret=True)
+        want = ref.tile_matmul_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("bm,bn,bk", [(64, 64, 64), (128, 256, 64)])
+    def test_block_shapes(self, bm, bn, bk):
+        a = jnp.asarray(RNG.standard_normal((192, 160)), jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((160, 96)), jnp.float32)
+        got = tile_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                                   rtol=2e-5, atol=2e-4)
+
+    @given(st.integers(1, 150), st.integers(1, 150), st.integers(1, 150))
+    @settings(max_examples=15, deadline=None)
+    def test_property_any_shape(self, m, k, n):
+        a = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(RNG.standard_normal((k, n)), jnp.float32)
+        got = tile_matmul(a, b, bm=64, bn=64, bk=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                                   rtol=2e-4, atol=2e-3)
+
+
+class TestBsrSpmm:
+    @pytest.mark.parametrize("n_t,t,nct,f", [
+        (1, 64, 1, 32), (5, 64, 3, 128), (7, 128, 4, 96), (3, 32, 2, 8),
+    ])
+    def test_sweep(self, n_t, t, nct, f):
+        tiles = jnp.asarray(RNG.standard_normal((n_t, t, t)), jnp.float32)
+        tcol = jnp.asarray(RNG.integers(0, nct, n_t), jnp.int32)
+        btiles = jnp.asarray(RNG.standard_normal((nct, t, f)), jnp.float32)
+        got = bsr_spmm(tiles, tcol, btiles, interpret=True)
+        want = ref.bsr_spmm_ref(tiles, tcol, btiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-4)
+
+
+class TestEllSpmm:
+    @pytest.mark.parametrize("u,r,k,nct,t,f", [
+        (1, 8, 1, 1, 64, 32), (6, 8, 5, 3, 64, 128),
+        (4, 8, 17, 2, 128, 64), (2, 8, 64, 2, 64, 8),
+    ])
+    def test_sweep(self, u, r, k, nct, t, f):
+        cols = jnp.asarray(RNG.integers(0, t, (u, r, k)), jnp.int32)
+        vals = jnp.asarray(RNG.standard_normal((u, r, k)), jnp.float32)
+        tcol = jnp.asarray(RNG.integers(0, nct, u), jnp.int32)
+        btiles = jnp.asarray(RNG.standard_normal((nct, t, f)), jnp.float32)
+        got = ell_spmm(cols, vals, tcol, btiles, interpret=True)
+        want = ref.ell_spmm_ref(cols, vals, tcol, btiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-4)
+
+    def test_zero_padding_is_noop(self):
+        # padded entries: vals==0, cols==0 must contribute nothing
+        u, r, k, t, f = 2, 8, 4, 64, 16
+        cols = jnp.zeros((u, r, k), jnp.int32)
+        vals = jnp.zeros((u, r, k), jnp.float32)
+        tcol = jnp.zeros(u, jnp.int32)
+        btiles = jnp.asarray(RNG.standard_normal((1, t, f)), jnp.float32)
+        got = ell_spmm(cols, vals, tcol, btiles, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+    @given(st.integers(0, 5000))
+    @settings(max_examples=15, deadline=None)
+    def test_property_random(self, seed):
+        rng = np.random.default_rng(seed)
+        u = int(rng.integers(1, 6))
+        k = int(rng.integers(1, 20))
+        nct = int(rng.integers(1, 4))
+        f = int(rng.integers(1, 140))
+        cols = jnp.asarray(rng.integers(0, 64, (u, 8, k)), jnp.int32)
+        vals = jnp.asarray(rng.standard_normal((u, 8, k)), jnp.float32)
+        tcol = jnp.asarray(rng.integers(0, nct, u), jnp.int32)
+        btiles = jnp.asarray(rng.standard_normal((nct, 64, f)), jnp.float32)
+        got = ell_spmm(cols, vals, tcol, btiles, interpret=True)
+        want = ref.ell_spmm_ref(cols, vals, tcol, btiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-4)

@@ -1,0 +1,152 @@
+"""Deeper LM model tests: decode==forward, SWA ring buffer, flash
+attention vs naive oracle, MoE dispatch properties, chunked xent."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import transformer as tfm
+from repro.models.attention import chunked_attention
+from repro.train.steps import chunked_cross_entropy
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _decode_matches_forward(cfg, s=24):
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no drops
+    params = tfm.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, s), 0, cfg.vocab)
+    h = tfm.forward(params, toks, cfg, remat=False, q_chunk=8, k_chunk=8,
+                    compute_dtype=None)
+    logits_full = tfm.logits_fn(params, h, cfg)
+    _, cache = tfm.prefill(params, toks[:, : s - 1], cfg, max_len=s + 4,
+                           q_chunk=8, k_chunk=8, cache_dtype=jnp.float32,
+                           compute_dtype=None)
+    lg, _ = tfm.decode_step(params, cache, toks[:, s - 1: s], cfg,
+                            compute_dtype=None)
+    return float(jnp.abs(lg[:, 0] - logits_full[:, s - 1]).max())
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "qwen3-moe-235b-a22b",
+                                  "granite-8b", "qwen3-0.6b", "smollm-360m"])
+def test_decode_matches_forward(arch):
+    err = _decode_matches_forward(get_arch(arch).smoke)
+    assert err < 5e-5, err
+
+
+def test_swa_ring_buffer_long_decode():
+    """Decode far past the window: ring buffer must match a full-cache
+    reference at every step."""
+    cfg = get_arch("mixtral-8x7b").smoke          # window 16
+    cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    full = dataclasses.replace(cfg, sliding_window=None)
+    params = tfm.init_params(cfg, KEY)
+    n_steps, b = 40, 2
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, n_steps), 0,
+                              cfg.vocab)
+
+    cache_ring = tfm.init_cache(cfg, b, max_len=n_steps, dtype=jnp.float32)
+    assert cache_ring["k"].shape[2] == cfg.sliding_window  # ring is small
+    cache_full = tfm.init_cache(full, b, max_len=n_steps, dtype=jnp.float32)
+
+    for t in range(n_steps):
+        lr, cache_ring = tfm.decode_step(params, cache_ring, toks[:, t:t+1],
+                                         cfg, compute_dtype=None)
+        # full cache but windowed masking == ground truth sliding window
+        lf, cache_full = tfm.decode_step(params, cache_full, toks[:, t:t+1],
+                                         cfg if False else
+                                         dataclasses.replace(
+                                             full,
+                                             sliding_window=cfg.sliding_window),
+                                         compute_dtype=None)
+        err = float(jnp.abs(lr - lf).max())
+        assert err < 1e-4, (t, err)
+
+
+def test_flash_attention_vs_naive_random_lengths():
+    rng = np.random.default_rng(0)
+    for trial in range(3):
+        b, s, kv, g, d = 2, int(rng.integers(5, 40)), 2, 3, 8
+        h = kv * g
+        q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+        pos = jnp.arange(s)
+        out = chunked_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True,
+                                q_chunk=7, k_chunk=5)
+        qq = q.reshape(b, s, kv, g, d)
+        sc = jnp.einsum("bqkgd,btkd->bqkgt", qq, k) / np.sqrt(d)
+        msk = pos[None, :] <= pos[:, None]
+        sc = jnp.where(msk[None, :, None, None, :], sc, -1e30)
+        want = jnp.einsum("bqkgt,btkd->bqkgd", jax.nn.softmax(sc, -1),
+                          v).reshape(b, s, h, d)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestMoE:
+    def test_no_drop_combines_to_softmax_mixture(self):
+        cfg = dataclasses.replace(get_arch("mixtral-8x7b").smoke,
+                                  capacity_factor=50.0)
+        lp = tfm.init_layer_params(cfg, KEY)
+        x = jax.random.normal(jax.random.PRNGKey(3), (16, cfg.d_model))
+        out = tfm.moe_ffn(x, lp, cfg)
+        # oracle: run every expert densely and mix by renormalized top-k
+        logits = x @ lp["router"]
+        probs = jax.nn.softmax(logits, -1)
+        topv, topi = jax.lax.top_k(probs, cfg.top_k)
+        topv = topv / topv.sum(-1, keepdims=True)
+        h = jax.nn.silu(jnp.einsum("td,edf->tef", x, lp["w_gate"])) \
+            * jnp.einsum("td,edf->tef", x, lp["w_up"])
+        y_all = jnp.einsum("tef,efd->ted", h, lp["w_down"])
+        want = jnp.einsum("tk,tkd->td", topv,
+                          jnp.take_along_axis(
+                              y_all, topi[:, :, None], axis=1))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_capacity_drops_tokens(self):
+        cfg = dataclasses.replace(get_arch("mixtral-8x7b").smoke,
+                                  capacity_factor=50.0)
+        lp = tfm.init_layer_params(cfg, KEY)
+        x = jax.random.normal(jax.random.PRNGKey(4), (32, cfg.d_model))
+        full = tfm.moe_ffn(x, lp, cfg)
+        tight = tfm.moe_ffn(x, lp, cfg, capacity=1)
+        # capacity 1 must drop most assignments -> outputs differ
+        assert float(jnp.abs(full - tight).max()) > 1e-3
+        assert bool(jnp.isfinite(tight).all())
+
+
+def test_chunked_xent_matches_full():
+    rng = np.random.default_rng(0)
+    b, s, d, v = 3, 17, 8, 29
+    h = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    head = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    got = chunked_cross_entropy(h, head, labels, chunk=5)
+    logits = h @ head
+    lz = jax.nn.logsumexp(logits, -1)
+    tgt = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.mean(lz - tgt)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@given(st.integers(1, 60), st.integers(1, 8), st.integers(1, 16))
+@settings(max_examples=10, deadline=None)
+def test_property_xent_any_shape(s, b, chunk):
+    rng = np.random.default_rng(s * 31 + b)
+    d, v = 6, 11
+    h = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+    head = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, v, (b, s)), jnp.int32)
+    got = chunked_cross_entropy(h, head, labels, chunk=chunk)
+    logits = h @ head
+    want = jnp.mean(jax.nn.logsumexp(logits, -1)
+                    - jnp.take_along_axis(logits, labels[..., None],
+                                          -1)[..., 0])
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-5)
