@@ -1,0 +1,130 @@
+"""Cold-trace vs cached shape-class executors (ISSUE 1 acceptance).
+
+Workload: a family of structurally-similar synthetic SBM graphs, each
+serving ``--reps`` repeated SpMM inferences. Two servers:
+
+  seed path — what the pre-engine code did: one fresh ``jax.jit`` of
+      ``hybrid_spmm`` per graph (bucket-loop ELL dispatch), so every new
+      graph pays a full trace + XLA compile before its first answer.
+  engine    — graphs padded into canonical shape classes; all class
+      members share ONE compiled executor (fused ELL dispatch), so only
+      the first member of a class ever compiles.
+
+Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--graphs 6]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import csr_from_scipy
+from repro.core.hybrid_spmm import hybrid_spmm
+from repro.core.partition import PartitionConfig, analyze_and_partition
+from repro.data.graphs import normalized_adjacency, sbm_graph
+from repro.engine import Engine
+
+
+def make_family(n_graphs: int, n: int = 2000, seed0: int = 0):
+    """Structurally-similar graphs: same SBM config, different seeds,
+    jittered vertex counts (what one customer's daily graphs look like)."""
+    out = []
+    for i in range(n_graphs):
+        rng = np.random.default_rng(seed0 + i)
+        ni = n + int(rng.integers(-n // 50, n // 50))
+        a = sbm_graph(ni, 8 * ni, seed=seed0 + i)
+        out.append((f"sbm{i}", csr_from_scipy(normalized_adjacency(a)), ni))
+    return out
+
+
+def bench_seed_path(graphs, b_of, reps):
+    """Per-graph jit of the bucket-loop hybrid_spmm (the pre-engine path)."""
+    cold, warm, outs = 0.0, 0.0, {}
+    for name, csr, n in graphs:
+        part, meta, _ = analyze_and_partition(csr, PartitionConfig(tile=64))
+        fwd = jax.jit(lambda bb, p=part, m=meta: hybrid_spmm(
+            p, bb, meta=m, ell_dispatch="loop"))
+        b = jnp.asarray(b_of(n))
+        t0 = time.perf_counter()
+        y = fwd(b).block_until_ready()          # trace + compile + run
+        cold += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            y = fwd(b).block_until_ready()
+        warm += time.perf_counter() - t0
+        outs[name] = np.asarray(y)
+    return cold, warm, outs
+
+
+def bench_engine_path(graphs, b_of, reps):
+    """Shape-class engine: cached executors + fused ELL dispatch."""
+    engine = Engine()
+    for name, csr, n in graphs:
+        engine.register(name, csr)
+    cold, warm, outs = 0.0, 0.0, {}
+    for name, csr, n in graphs:
+        b = b_of(n)
+        t0 = time.perf_counter()
+        y = engine.spmm(name, b).block_until_ready()   # compile iff new class
+        cold += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            y = engine.spmm(name, b).block_until_ready()
+        warm += time.perf_counter() - t0
+        outs[name] = np.asarray(y)
+    return cold, warm, outs, engine
+
+
+def run(n_graphs: int = 6, reps: int = 20, f: int = 64,
+        verbose: bool = True) -> dict:
+    graphs = make_family(n_graphs)
+    rng = np.random.default_rng(0)
+    feats = {n: rng.standard_normal((n, f)).astype(np.float32)
+             for _, _, n in graphs}
+    b_of = feats.__getitem__
+
+    s_cold, s_warm, s_out = bench_seed_path(graphs, b_of, reps)
+    e_cold, e_warm, e_out, engine = bench_engine_path(graphs, b_of, reps)
+
+    for name in s_out:   # both servers must answer identically
+        err = np.abs(s_out[name] - e_out[name]).max()
+        assert err < 2e-4, (name, err)
+
+    stats = engine.stats()
+    res = {
+        "n_graphs": n_graphs, "reps": reps,
+        "seed_cold_s": s_cold, "seed_warm_s": s_warm,
+        "seed_total_s": s_cold + s_warm,
+        "engine_cold_s": e_cold, "engine_warm_s": e_warm,
+        "engine_total_s": e_cold + e_warm,
+        "shape_classes": stats["shape_classes"],
+        "executors_compiled": stats["cache_misses"],
+        "total_speedup": (s_cold + s_warm) / (e_cold + e_warm),
+        "cold_speedup": s_cold / e_cold,
+    }
+    if verbose:
+        print(f"== engine vs per-graph jit | {n_graphs} graphs x "
+              f"(1 cold + {reps} warm) SpMM, F={f} ==")
+        print(f"{'':10s} {'cold(s)':>9} {'warm(s)':>9} {'total(s)':>9} "
+              f"{'traces':>7}")
+        print(f"{'seed-jit':10s} {s_cold:>9.2f} {s_warm:>9.2f} "
+              f"{s_cold + s_warm:>9.2f} {n_graphs:>7d}")
+        print(f"{'engine':10s} {e_cold:>9.2f} {e_warm:>9.2f} "
+              f"{e_cold + e_warm:>9.2f} {stats['cache_misses']:>7d}")
+        print(f"speedup: total {res['total_speedup']:.2f}x, "
+              f"cold {res['cold_speedup']:.2f}x | "
+              f"{n_graphs} graphs -> {stats['shape_classes']} shape classes")
+        print(engine.summary())
+    return res
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=6)
+    ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--features", type=int, default=64)
+    args = ap.parse_args()
+    run(args.graphs, args.reps, args.features)

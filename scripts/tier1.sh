@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verification — exactly the ROADMAP command; nonzero exit on any
+# collection error or test failure. Works offline (no hypothesis needed).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -91,9 +91,30 @@ class Roofline:
         }
 
 
+def merge_cost_analysis(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` output to a flat dict.
+
+    Older JAX returns a single dict; newer JAX returns a list with one
+    dict per executable module (usually length 1). Numeric entries are
+    summed across modules; non-numeric entries keep the first value seen.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return dict(ca)
+    merged: dict = {}
+    for entry in ca:
+        for k, v in (entry or {}).items():
+            try:
+                merged[k] = merged.get(k, 0.0) + float(v)
+            except (TypeError, ValueError):
+                merged.setdefault(k, v)
+    return merged
+
+
 def analyze_compiled(arch, cell, mesh_name, chips, compiled,
                      model_flops) -> Roofline:
-    ca = compiled.cost_analysis()
+    ca = merge_cost_analysis(compiled.cost_analysis())
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     try:

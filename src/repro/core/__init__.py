@@ -1,9 +1,11 @@
 """Core H-GCN contribution: reordering, tri-partitioning, hybrid SpMM."""
 from .formats import (CSRMatrix, CooResidual, DenseTiles, EllTileBucket,
                       PartitionMeta, TriPartition, csr_from_dense,
-                      csr_from_scipy, csr_to_scipy, partition_to_dense)
+                      csr_from_scipy, csr_to_scipy, pad_b_to_tiles,
+                      partition_to_dense, scatter_ell_partials)
 from .grouping import Group, MovingAverage, group_rows, grouping_density
-from .hybrid_spmm import gcn_forward, gcn_layer, hybrid_spmm
+from .hybrid_spmm import (gcn_forward, gcn_layer, hybrid_spmm,
+                          hybrid_spmm_ref)
 from .partition import PartitionConfig, analyze_and_partition, find_nnz
 from .reorder import (apply_permutation, bandwidth, compute_permutation,
                       reorder, tile_density_histogram)
@@ -11,9 +13,11 @@ from .reorder import (apply_permutation, bandwidth, compute_permutation,
 __all__ = [
     "CSRMatrix", "CooResidual", "DenseTiles", "EllTileBucket",
     "PartitionMeta", "TriPartition", "csr_from_dense", "csr_from_scipy",
-    "csr_to_scipy", "partition_to_dense", "Group", "MovingAverage",
+    "csr_to_scipy", "pad_b_to_tiles", "partition_to_dense",
+    "scatter_ell_partials", "Group", "MovingAverage",
     "group_rows", "grouping_density", "gcn_forward", "gcn_layer",
-    "hybrid_spmm", "PartitionConfig", "analyze_and_partition", "find_nnz",
+    "hybrid_spmm", "hybrid_spmm_ref", "PartitionConfig",
+    "analyze_and_partition", "find_nnz",
     "apply_permutation", "bandwidth", "compute_permutation", "reorder",
     "tile_density_histogram",
 ]

@@ -95,6 +95,21 @@ class PartitionMeta:
     def nnz(self) -> int:
         return self.nnz_dense + self.nnz_ell + self.nnz_coo
 
+    @property
+    def n_padded_rows(self) -> int:
+        """Output rows of the padded row-tile space (n_row_tiles * T)."""
+        return self.n_row_tiles * self.tile
+
+    @property
+    def ell_sentinel_row(self) -> int:
+        """Output-row id carried by padded ELL unit rows.
+
+        Equal to ``n_padded_rows`` — one past the last real padded row.
+        ``scatter_ell_partials`` allocates that extra row as a write
+        target and drops it, so padding rows never touch real output.
+        """
+        return self.n_padded_rows
+
     def summary(self) -> str:
         tot = max(self.nnz, 1)
         return (
@@ -105,6 +120,36 @@ class PartitionMeta:
             f"| coo {self.nnz_coo} ({self.nnz_coo/tot:.1%}) "
             f"| buckets K={list(self.ell_ks)}"
         )
+
+
+def pad_b_to_tiles(b: jnp.ndarray, meta: PartitionMeta) -> jnp.ndarray:
+    """Pad B's rows up to n_col_tiles * T so tile gathers are in-bounds."""
+    want = meta.n_col_tiles * meta.tile
+    if b.shape[0] == want:
+        return b
+    return jnp.pad(b, ((0, want - b.shape[0]), (0, 0)))
+
+
+def scatter_ell_partials(rows, partials,
+                         meta: PartitionMeta) -> jnp.ndarray:
+    """Scatter flattened ELL partial products onto padded output rows.
+
+    ``rows`` [N] holds global output-row ids, with padded unit rows
+    carrying ``meta.ell_sentinel_row``; ``partials`` is [N, F]. Both may
+    instead be aligned lists of arrays (one scatter-add per entry into
+    the same buffer — the per-bucket "loop" dispatch). This is the
+    single place that knows the sentinel convention: the scatter target
+    has one extra trailing row that absorbs all padding writes and is
+    dropped before returning, so callers receive exactly
+    [n_padded_rows, F].
+    """
+    if not isinstance(rows, (list, tuple)):
+        rows, partials = [rows], [partials]
+    out = jnp.zeros((meta.ell_sentinel_row + 1, partials[0].shape[-1]),
+                    jnp.float32)
+    for rr, pp in zip(rows, partials):
+        out = out.at[rr].add(pp)
+    return out[: meta.n_padded_rows]
 
 
 def csr_from_dense(a: np.ndarray) -> CSRMatrix:

@@ -24,15 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .formats import PartitionMeta, TriPartition
-
-
-def _pad_b(b: jnp.ndarray, meta: PartitionMeta) -> jnp.ndarray:
-    """Pad B's rows up to n_col_tiles * T so tile gathers are in-bounds."""
-    want = meta.n_col_tiles * meta.tile
-    if b.shape[0] == want:
-        return b
-    return jnp.pad(b, ((0, want - b.shape[0]), (0, 0)))
+from .formats import (PartitionMeta, TriPartition, pad_b_to_tiles,
+                      scatter_ell_partials)
 
 
 def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
@@ -43,7 +36,7 @@ def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
     f = b.shape[1]
     if part.dense.tiles.shape[0] == 0:
         return jnp.zeros((nrt * T, f), b.dtype)
-    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+    bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, T, f)
     rhs = jnp.take(bt, part.dense.tile_col, axis=0)          # [n_t, T, F]
     prod = jnp.einsum("tij,tjf->tif", part.dense.tiles.astype(b.dtype), rhs,
                       preferred_element_type=jnp.float32)
@@ -52,28 +45,40 @@ def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
     return out.reshape(nrt * T, f).astype(b.dtype)
 
 
-def ell_matmul(part: TriPartition, b: jnp.ndarray,
-               meta: PartitionMeta) -> jnp.ndarray:
-    """Sparse-engine partial product, as padded [nrt*T + 1, F] (last row is
-    the padding sentinel, dropped by the caller)."""
-    T = meta.tile
-    nrt = meta.n_row_tiles
+def _ell_bucket_partials(bucket, bt: jnp.ndarray) -> jnp.ndarray:
+    """One bucket's gather+FMA partial products, flattened to [U*R, F]."""
+    u, r, k = bucket.cols.shape
+    f = bt.shape[-1]
+    btile = jnp.take(bt, bucket.tile_col, axis=0)             # [U, T, F]
+    acc = jnp.zeros((u, r, f), jnp.float32)
+    for kk in range(k):  # K is static per bucket — fixed trip count
+        gathered = jnp.take_along_axis(
+            btile, bucket.cols[:, :, kk][:, :, None], axis=1)  # [U,R,F]
+        acc = acc + bucket.vals[:, :, kk][:, :, None] * gathered
+    return acc.reshape(u * r, f)
+
+
+def ell_matmul(part: TriPartition, b: jnp.ndarray, meta: PartitionMeta,
+               *, dispatch: str = "fused") -> jnp.ndarray:
+    """Sparse-engine partial product, as padded [nrt*T, F].
+
+    ``dispatch="fused"`` concatenates every bucket's partial products and
+    unit rows and emits ONE scatter-add over all buckets; ``"loop"`` is
+    the historical one-scatter-per-bucket path kept for A/B testing. Both
+    produce identical results up to float addition order.
+    """
+    if dispatch not in ("fused", "loop"):
+        raise ValueError(f"unknown ell dispatch {dispatch!r}")
     f = b.shape[1]
-    n_out = nrt * T + 1
-    out = jnp.zeros((n_out, f), jnp.float32)
     if not part.ell:
-        return out
-    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
-    for bucket in part.ell:
-        u, r, k = bucket.cols.shape
-        btile = jnp.take(bt, bucket.tile_col, axis=0)         # [U, T, F]
-        acc = jnp.zeros((u, r, f), jnp.float32)
-        for kk in range(k):  # K is static per bucket — fixed trip count
-            gathered = jnp.take_along_axis(
-                btile, bucket.cols[:, :, kk][:, :, None], axis=1)  # [U,R,F]
-            acc = acc + bucket.vals[:, :, kk][:, :, None] * gathered
-        out = out.at[bucket.rows.reshape(-1)].add(acc.reshape(u * r, f))
-    return out
+        return jnp.zeros((meta.n_padded_rows, f), jnp.float32)
+    bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, meta.tile, f)
+    partials = [_ell_bucket_partials(bucket, bt) for bucket in part.ell]
+    rows = [bucket.rows.reshape(-1) for bucket in part.ell]
+    if dispatch == "fused":
+        return scatter_ell_partials(jnp.concatenate(rows),
+                                    jnp.concatenate(partials), meta)
+    return scatter_ell_partials(rows, partials, meta)
 
 
 def coo_matmul(part: TriPartition, b: jnp.ndarray,
@@ -84,25 +89,26 @@ def coo_matmul(part: TriPartition, b: jnp.ndarray,
     f = b.shape[1]
     if part.coo.vals.shape[0] == 0:
         return jnp.zeros((nrt * T, f), jnp.float32)
-    bp = _pad_b(b, meta)
+    bp = pad_b_to_tiles(b, meta)
     msgs = part.coo.vals[:, None] * jnp.take(bp, part.coo.cols, axis=0)
     return jax.ops.segment_sum(msgs, part.coo.rows, num_segments=nrt * T)
 
 
 def hybrid_spmm(part: TriPartition, b: jnp.ndarray, *, meta: PartitionMeta,
-                backend: str = "xla") -> jnp.ndarray:
+                backend: str = "xla",
+                ell_dispatch: str = "fused") -> jnp.ndarray:
     """Y = A @ B via the three engines. Returns [n_rows, F]."""
     if backend == "pallas":
         from repro.kernels import ops as kops
         yd = kops.dense_tiles_matmul(part, b, meta)
-        ye = kops.ell_matmul(part, b, meta)
+        ye = kops.ell_matmul(part, b, meta, dispatch=ell_dispatch)
     elif backend == "xla":
         yd = dense_tiles_matmul(part, b, meta)
-        ye = ell_matmul(part, b, meta)
+        ye = ell_matmul(part, b, meta, dispatch=ell_dispatch)
     else:
         raise ValueError(f"unknown backend {backend!r}")
     yc = coo_matmul(part, b, meta)
-    y = yd.astype(jnp.float32) + ye[:-1] + yc
+    y = yd.astype(jnp.float32) + ye + yc
     return y[: meta.n_rows].astype(b.dtype)
 
 
@@ -117,7 +123,8 @@ def hybrid_spmm_ref(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
               meta: PartitionMeta, backend: str = "xla",
-              block_cols: int = 0, activation=None) -> jnp.ndarray:
+              block_cols: int = 0, activation=None,
+              ell_dispatch: str = "fused") -> jnp.ndarray:
     """One GCN layer  sigma(A @ (X @ W))  in combination-first order.
 
     ``block_cols > 0`` enables the paper's fine-grained pipelining: W's
@@ -137,21 +144,25 @@ def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
             wi = jax.lax.slice_in_dim(wp, i * block_cols, (i + 1) * block_cols,
                                       axis=1)
             bi = x @ wi                                   # combination (dense)
-            outs.append(hybrid_spmm(part, bi, meta=meta, backend=backend))
+            outs.append(hybrid_spmm(part, bi, meta=meta, backend=backend,
+                                    ell_dispatch=ell_dispatch))
         y = jnp.concatenate(outs, axis=1)[:, :h]
     else:
-        y = hybrid_spmm(part, x @ w, meta=meta, backend=backend)
+        y = hybrid_spmm(part, x @ w, meta=meta, backend=backend,
+                        ell_dispatch=ell_dispatch)
     return activation(y) if activation is not None else y
 
 
 def gcn_forward(part: TriPartition, x: jnp.ndarray, weights, *,
                 meta: PartitionMeta, backend: str = "xla",
-                block_cols: int = 0) -> jnp.ndarray:
+                block_cols: int = 0,
+                ell_dispatch: str = "fused") -> jnp.ndarray:
     """The paper's 2-layer vanilla GCN:  softmax-free inference logits
     X2 = A·relu(A·X·W1)·W2   (activation on hidden layer only)."""
     h = x
     for i, w in enumerate(weights):
         act = jax.nn.relu if i < len(weights) - 1 else None
         h = gcn_layer(part, h, w, meta=meta, backend=backend,
-                      block_cols=block_cols, activation=act)
+                      block_cols=block_cols, activation=act,
+                      ell_dispatch=ell_dispatch)
     return h

@@ -70,6 +70,10 @@ class TrainingRunner:
                     and step == self.inject_failure_at:
                 self.inject_failure_at = None
                 self.events.append(("failure", step))
+                # The injected failure kills the training loop, not the
+                # checkpoint writer: flush any in-flight async save so a
+                # restart sees every checkpoint issued before the failure.
+                self.ckpt.wait()
                 raise SimulatedFailure(step)
 
             t0 = time.perf_counter()

@@ -1,0 +1,19 @@
+"""Serving-oriented execution layer over the tri-partition (ISSUE 1).
+
+Pads TriPartitions into canonical shape classes so structurally-similar
+graphs share one compiled executor, caches the jit'd executors, and
+batches multi-graph traffic with per-class vmap.
+"""
+from .executor import CacheStats, ExecutorCache
+from .serving import Engine, GraphHandle
+from .shape_class import (DEFAULT_K_LADDER, ClassNeed, ClassRegistry,
+                          ShapeClass, ShapePolicy, class_fits,
+                          class_requirements, grow_class, pad_to_class,
+                          round_up_ladder, round_up_pow2, shape_class_of)
+
+__all__ = [
+    "CacheStats", "ExecutorCache", "Engine", "GraphHandle",
+    "DEFAULT_K_LADDER", "ClassNeed", "ClassRegistry", "ShapeClass",
+    "ShapePolicy", "class_fits", "class_requirements", "grow_class",
+    "pad_to_class", "round_up_ladder", "round_up_pow2", "shape_class_of",
+]

@@ -1,0 +1,114 @@
+"""Compiled-executor cache over shape classes (serving layer, ISSUE 1).
+
+One jit'd executor per (kind, shape-class, feature widths, backend,
+dispatch knobs); every graph padded into the same class reuses the
+executor — and therefore its trace and XLA executable — with zero
+recompilation. Batched variants vmap the same forward over a stacked
+class group for `Engine.serve_batch`.
+
+The closed-over PartitionMeta comes from ``ShapeClass.to_meta()`` only,
+never from a member graph, so per-graph facts can't split a class.
+Padded partitions arrive as device arrays (Engine.register places them),
+so executor calls pay no host-to-device transfer for the graph itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hybrid_spmm import gcn_forward, hybrid_spmm
+
+from .shape_class import ShapeClass
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+
+class ExecutorCache:
+    """jit'd executors keyed by (kind, shape class, widths, backend...)."""
+
+    def __init__(self, backend: str = "xla", block_cols: int = 0,
+                 ell_dispatch: str = "fused"):
+        self.backend = backend
+        self.block_cols = block_cols
+        self.ell_dispatch = ell_dispatch
+        self._fns: dict = {}
+        self.stats = CacheStats()
+
+    def _get(self, key, build):
+        fn = self._fns.get(key)
+        if fn is None:
+            self.stats.misses += 1
+            fn = build()
+            self._fns[key] = fn
+        else:
+            self.stats.hits += 1
+        return fn
+
+    # ------------------------------------------------------------ spmm -----
+    def spmm(self, sc: ShapeClass, f: int):
+        """Executor for Y = A @ B over a padded partition of class sc.
+
+        Signature: fn(part, b[n_cols_padded, f]) -> y[n_rows_padded, f].
+        """
+        key = ("spmm", sc, f, self.backend, self.ell_dispatch)
+
+        def build():
+            meta = sc.to_meta()
+            backend, dispatch = self.backend, self.ell_dispatch
+
+            @jax.jit
+            def fn(part, b):
+                return hybrid_spmm(part, b, meta=meta, backend=backend,
+                                   ell_dispatch=dispatch)
+            return fn
+        return self._get(key, build)
+
+    # ------------------------------------------------------------- gcn -----
+    def _gcn_key(self, sc, f_in, w_shapes):
+        return ("gcn", sc, f_in, w_shapes, self.backend, self.block_cols,
+                self.ell_dispatch)
+
+    def _gcn_build(self, sc):
+        meta = sc.to_meta()
+        backend = self.backend
+        block_cols, dispatch = self.block_cols, self.ell_dispatch
+
+        def fwd(part, x, weights):
+            return gcn_forward(part, x, weights, meta=meta, backend=backend,
+                               block_cols=block_cols, ell_dispatch=dispatch)
+        return fwd
+
+    def gcn(self, sc: ShapeClass, f_in: int, w_shapes: tuple):
+        """Executor for the 2+-layer GCN forward over one padded graph.
+
+        Signature: fn(part, x[n_cols_padded, f_in], weights) ->
+        logits[n_rows_padded, w_shapes[-1][-1]].
+        """
+        key = self._gcn_key(sc, f_in, w_shapes)
+        return self._get(key, lambda: jax.jit(self._gcn_build(sc)))
+
+    def gcn_batched(self, sc: ShapeClass, f_in: int, w_shapes: tuple,
+                    batch: int):
+        """vmapped GCN executor over a stacked class group of ``batch``
+        graphs: every pytree arg gains a leading batch axis."""
+        key = self._gcn_key(sc, f_in, w_shapes) + ("batch", batch)
+        return self._get(
+            key, lambda: jax.jit(jax.vmap(self._gcn_build(sc))))
+
+    def summary(self) -> str:
+        kinds: dict = {}
+        for key in self._fns:
+            kinds[key[0]] = kinds.get(key[0], 0) + 1
+        return (f"ExecutorCache backend={self.backend} "
+                f"executors={len(self._fns)} ({kinds}) "
+                f"hits={self.stats.hits} misses={self.stats.misses}")

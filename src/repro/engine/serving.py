@@ -1,0 +1,221 @@
+"""The serving engine: offline registration, cached inference, batching.
+
+Request path (mirrors the paper's offline/online split):
+
+  offline  — ``register``: reorder, tri-partition (Algorithms 1+2), pad
+             into a shape class. Done once per graph.
+  online   — ``spmm`` / ``infer``: pad the request features, run the
+             class's cached executor, slice + un-permute the output.
+           — ``serve_batch``: group requests by (shape class, widths),
+             stack each group and run one vmapped executor per group.
+
+All host-side padding/slicing happens outside jit, so the traced
+computation depends only on the shape class and feature widths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from repro.core.formats import CSRMatrix, PartitionMeta, TriPartition
+from repro.core.partition import PartitionConfig, analyze_and_partition
+from repro.core.reorder import reorder as reorder_csr
+
+from .executor import ExecutorCache
+from .shape_class import (ClassRegistry, ShapeClass, ShapePolicy,
+                          pad_to_class)
+
+
+@dataclasses.dataclass
+class GraphHandle:
+    """A registered graph: padded partition + the facts to undo padding."""
+
+    name: str
+    part: TriPartition          # padded to the class shapes, device-resident
+    meta: PartitionMeta         # original (true n_rows/n_cols/nnz)
+    padded_meta: PartitionMeta  # the class's static meta + true nnz stats
+    sclass: ShapeClass
+    perm: Optional[np.ndarray]  # vertex reorder permutation, or None
+    inv_perm: Optional[np.ndarray]
+    weights: Optional[list]     # per-graph GCN weights (jnp), or None
+    preprocess_s: float = 0.0
+
+    @property
+    def n_rows(self) -> int:
+        return self.meta.n_rows
+
+
+class Engine:
+    """Shape-class compiled serving engine for the tri-hybrid SpMM/GCN."""
+
+    def __init__(self, *, policy: ShapePolicy = ShapePolicy(),
+                 partition_cfg: PartitionConfig = PartitionConfig(tile=64),
+                 backend: str = "xla", block_cols: int = 0,
+                 ell_dispatch: str = "fused"):
+        self.policy = policy
+        self.partition_cfg = partition_cfg
+        self.registry = ClassRegistry(policy)
+        self.executors = ExecutorCache(backend=backend, block_cols=block_cols,
+                                       ell_dispatch=ell_dispatch)
+        self._graphs: dict = {}
+        # serve_batch group stacks, keyed by the sorted member-name
+        # tuple: partitions/weights don't change between register calls,
+        # so a repeat group reuses its stacked pytrees zero-copy.
+        # Bounded FIFO; re-registering a name evicts its entries.
+        self._stacks: dict = {}
+        self._max_stacks = 32
+
+    # --------------------------------------------------------- offline -----
+    def register(self, name: str, csr: CSRMatrix, *,
+                 reorder: Optional[str] = None, labels=None,
+                 weights=None,
+                 part_meta: Optional[tuple] = None) -> GraphHandle:
+        """Preprocess one graph into its shape class.
+
+        ``reorder`` names a `repro.core.reorder` strategy (None skips).
+        ``weights`` (list of [f_in, f_out] arrays) enables ``infer`` /
+        ``serve_batch``. ``part_meta=(part, meta)`` skips partitioning
+        for callers that already ran Algorithm 2 themselves.
+        """
+        t0 = time.perf_counter()
+        perm = inv_perm = None
+        if part_meta is not None:
+            part, meta = part_meta
+        else:
+            if reorder is not None:
+                kw = {"labels": labels} if reorder == "labels" else {}
+                csr, perm, _ = reorder_csr(csr, reorder, **kw)
+                inv_perm = np.empty_like(perm)
+                inv_perm[perm] = np.arange(len(perm))
+            part, meta, _ = analyze_and_partition(csr, self.partition_cfg)
+        sc = self.registry.classify(part, meta)
+        padded, pmeta = pad_to_class(part, meta, sc)
+        # Place the padded partition on device once; jit args that are
+        # already device arrays are zero-copy on every later call.
+        padded = jax.device_put(padded)
+        handle = GraphHandle(
+            name=name, part=padded, meta=meta, padded_meta=pmeta, sclass=sc,
+            perm=perm, inv_perm=inv_perm,
+            weights=None if weights is None else [jnp.asarray(w)
+                                                  for w in weights],
+            preprocess_s=time.perf_counter() - t0)
+        self._graphs[name] = handle
+        # a re-registered name invalidates every cached group stack that
+        # contains it — otherwise serve_batch would keep serving the old
+        # partition/weights
+        self._stacks = {k: v for k, v in self._stacks.items()
+                        if name not in k}
+        return handle
+
+    def handle(self, name: str) -> GraphHandle:
+        return self._graphs[name]
+
+    # ---------------------------------------------------------- online -----
+    def _pad_x(self, h: GraphHandle, x) -> jnp.ndarray:
+        """Permute + zero-pad request features to the class input rows."""
+        x = np.asarray(x, np.float32)
+        if x.shape[0] != h.meta.n_cols:
+            raise ValueError(
+                f"request features have {x.shape[0]} rows; graph "
+                f"{h.name!r} expects {h.meta.n_cols}")
+        if h.perm is not None:
+            x = x[h.perm]
+        want = h.sclass.n_col_tiles * h.sclass.tile
+        if x.shape[0] != want:
+            x = np.pad(x, ((0, want - x.shape[0]), (0, 0)))
+        return jnp.asarray(x)
+
+    def _unpad_y(self, h: GraphHandle, y) -> jnp.ndarray:
+        y = y[: h.n_rows]
+        if h.inv_perm is not None:
+            y = y[h.inv_perm]
+        return y
+
+    def spmm(self, name: str, b) -> jnp.ndarray:
+        """Y = A @ B through the cached shape-class executor."""
+        h = self._graphs[name]
+        fn = self.executors.spmm(h.sclass, int(b.shape[1]))
+        return self._unpad_y(h, fn(h.part, self._pad_x(h, b)))
+
+    def infer(self, name: str, x) -> jnp.ndarray:
+        """GCN forward logits for one request."""
+        h = self._graphs[name]
+        if h.weights is None:
+            raise ValueError(f"graph {name!r} registered without weights")
+        w_shapes = tuple(tuple(w.shape) for w in h.weights)
+        fn = self.executors.gcn(h.sclass, int(x.shape[1]), w_shapes)
+        return self._unpad_y(h, fn(h.part, self._pad_x(h, x), h.weights))
+
+    def serve_batch(self, requests) -> list:
+        """Serve [(name, x), ...]; returns logits in request order.
+
+        Requests are grouped by (shape class, feature width, weight
+        shapes); each group is stacked leaf-wise and dispatched through
+        one vmapped executor, so a group of any size costs one launch.
+        """
+        groups: dict = {}
+        for i, (name, x) in enumerate(requests):
+            h = self._graphs[name]
+            if h.weights is None:
+                raise ValueError(f"graph {name!r} registered without weights")
+            w_shapes = tuple(tuple(w.shape) for w in h.weights)
+            key = (h.sclass, int(x.shape[1]), w_shapes)
+            groups.setdefault(key, []).append((i, h, x))
+
+        results: list = [None] * len(requests)
+        for (sc, f_in, w_shapes), members in groups.items():
+            if len(members) == 1:
+                i, h, x = members[0]
+                fn = self.executors.gcn(sc, f_in, w_shapes)
+                results[i] = self._unpad_y(h, fn(h.part, self._pad_x(h, x),
+                                                 h.weights))
+                continue
+            # Canonicalize group order by name so (g0,g1) and (g1,g0)
+            # share one cached stack, then pad to the next power-of-two
+            # batch (repeating the last member; its extra outputs are
+            # dropped) so the set of compiled batch sizes stays
+            # logarithmic in traffic, not linear in observed group sizes.
+            members.sort(key=lambda m: m[1].name)
+            bs = 1 << (len(members) - 1).bit_length()
+            padded = members + [members[-1]] * (bs - len(members))
+            fn = self.executors.gcn_batched(sc, f_in, w_shapes, bs)
+            stack_key = tuple(h.name for _, h, _ in padded)
+            stacks = self._stacks.get(stack_key)
+            if stacks is None:
+                part_stack = jtu.tree_map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[h.part for _, h, _ in padded])
+                w_stack = jtu.tree_map(
+                    lambda *ws: jnp.stack(ws),
+                    *[h.weights for _, h, _ in padded])
+                while len(self._stacks) >= self._max_stacks:
+                    self._stacks.pop(next(iter(self._stacks)))
+                stacks = self._stacks[stack_key] = (part_stack, w_stack)
+            part_stack, w_stack = stacks
+            x_stack = jnp.stack([self._pad_x(h, x) for _, h, x in padded])
+            ys = fn(part_stack, x_stack, w_stack)
+            for j, (i, h, _) in enumerate(members):
+                results[i] = self._unpad_y(h, ys[j])
+        return results
+
+    # ----------------------------------------------------------- stats -----
+    def stats(self) -> dict:
+        classes = {h.sclass for h in self._graphs.values()}
+        return {
+            "graphs": len(self._graphs),
+            "shape_classes": len(classes),
+            "executors": len(self.executors._fns),
+            "cache_hits": self.executors.stats.hits,
+            "cache_misses": self.executors.stats.misses,
+        }
+
+    def summary(self) -> str:
+        s = self.stats()
+        return (f"Engine: {s['graphs']} graphs in {s['shape_classes']} "
+                f"shape classes; {self.executors.summary()}")

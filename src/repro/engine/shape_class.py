@@ -1,0 +1,395 @@
+"""Shape-class canonicalization of TriPartitions (serving layer, ISSUE 1).
+
+The paper's premise (§IV) is ahead-of-time, density-aware mapping of SpMM
+work onto *fixed-shape* engines; the JAX analogue is that every distinct
+array shape in a TriPartition is a fresh trace + XLA compile. A serving
+engine amortizes that by padding each partition up to a small set of
+canonical static shapes — a **shape class** — so structurally-similar
+graphs share one compiled executor:
+
+  * dense tile count          -> geometric (power-of-two) bucket
+  * ELL bucket K widths       -> snapped up a fixed K ladder, buckets
+                                 that land on the same rung are merged
+  * ELL unit count per rung   -> geometric bucket
+  * COO nnz                   -> geometric bucket
+  * row/col tile counts       -> geometric bucket (bounds B padding)
+
+All padding is value-neutral: zero tiles, zero ELL entries, sentinel
+output rows, zero COO triples — the padded partition computes exactly the
+same product as the original (`pad_to_class` is tested against
+`partition_to_dense`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.formats import (CooResidual, DenseTiles, EllTileBucket,
+                                PartitionMeta, TriPartition)
+
+# Canonical ELL widths. Power-of-two rungs bound K-padding waste at 2x
+# on the ELL slice; more importantly the ladder is SMALL, so a class can
+# carry every rung and the rung *set* stops depending on which K values
+# a particular graph happened to produce — that set variance is what
+# fragments classes and defeats executor sharing.
+DEFAULT_K_LADDER = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def round_up_pow2(x: int, granule: int = 1) -> int:
+    """Round x up to granule * 2^i (0 stays 0) — the geometric bucket."""
+    if x <= 0:
+        return 0
+    g = max(int(granule), 1)
+    n = -(-int(x) // g)
+    p = 1
+    while p < n:
+        p <<= 1
+    return p * g
+
+
+def round_up_ladder(k: int, ladder) -> int:
+    """Snap k up to the next ladder rung (multiples of the top rung above)."""
+    if k <= 0:
+        return 0
+    for rung in ladder:
+        if k <= rung:
+            return rung
+    top = ladder[-1]
+    return -(-k // top) * top
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapePolicy:
+    """Knobs controlling how aggressively partitions are canonicalized.
+
+    Coarser granules coalesce more graphs per class (fewer compiles) at
+    the cost of more zero-padding work per inference.
+    """
+
+    k_ladder: tuple = DEFAULT_K_LADDER
+    unit_granule: int = 4        # ELL units per K rung
+    dense_tile_granule: int = 4  # dense tile count
+    coo_granule: int = 256       # COO nnz
+    row_tile_granule: int = 4    # n_row_tiles / n_col_tiles
+    # Carry EVERY ladder rung up to the tile size in every class (absent
+    # rungs get one granule of all-padding units — negligible zero work)
+    # so stray high-K rows in a later graph never force a new class.
+    full_ladder: bool = True
+    # ClassRegistry knobs: a newly-founded class over-allocates every
+    # count by ``growth`` (headroom for the next similar graph), and a
+    # graph reuses an existing class only while the class's padded work
+    # stays within ``fit_slack``x its real need (else padding waste would
+    # exceed what the saved compile is worth). COO gets a tighter growth:
+    # it usually dominates the per-inference nnz, and its count is far
+    # more stable across a graph family than the Algorithm-2 ELL/dense
+    # statistics (nnz totals jitter ~%, tile classifications jitter ~2x).
+    growth: float = 2.0
+    coo_growth: float = 1.25
+    fit_slack: float = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeClass:
+    """A canonical static partition signature — the executor-cache key.
+
+    Two graphs with equal ShapeClass (and equal feature widths) run
+    through the *same* jit'd executor with zero retracing.
+    """
+
+    tile: int
+    n_row_tiles: int
+    n_col_tiles: int
+    n_dense_tiles: int
+    ell: tuple                # sorted ((K, n_units), ...) after snapping
+    coo_nnz: int
+    r_block: int = 8          # unit row height — every member must match
+
+    def to_meta(self) -> PartitionMeta:
+        """The static PartitionMeta every member's executor traces with.
+
+        nnz statistics are per-graph facts, not shape facts, so they are
+        zeroed here — the executor never reads them, and keeping them
+        would split classes that should share a trace.
+        """
+        return PartitionMeta(
+            n_rows=self.n_row_tiles * self.tile,
+            n_cols=self.n_col_tiles * self.tile,
+            tile=self.tile,
+            ell_ks=tuple(k for k, _ in self.ell),
+            n_row_tiles=self.n_row_tiles,
+            n_col_tiles=self.n_col_tiles,
+            n_dense_tiles=self.n_dense_tiles,
+            nnz_dense=0, nnz_ell=0, nnz_ell_padded=0, nnz_coo=0,
+            density_thresholds=(0.0, 0.0),
+        )
+
+    def summary(self) -> str:
+        return (f"ShapeClass T={self.tile} tiles={self.n_row_tiles}x"
+                f"{self.n_col_tiles} dense={self.n_dense_tiles} "
+                f"ell={list(self.ell)} coo={self.coo_nnz}")
+
+
+def _merged_ell_counts(meta: PartitionMeta, part: TriPartition,
+                       ladder) -> dict:
+    """units-per-canonical-K after snapping each bucket up the ladder."""
+    counts: dict = {}
+    for k, bucket in zip(meta.ell_ks, part.ell):
+        ck = round_up_ladder(int(k), ladder)
+        counts[ck] = counts.get(ck, 0) + int(bucket.cols.shape[0])
+    return counts
+
+
+def _part_r_block(part: TriPartition, default: int = 8) -> int:
+    """The partition's ELL unit row height (uniform across buckets)."""
+    return int(part.ell[0].rows.shape[1]) if part.ell else default
+
+
+def shape_class_of(part: TriPartition, meta: PartitionMeta,
+                   policy: ShapePolicy = ShapePolicy()) -> ShapeClass:
+    """Stateless single-graph classification: the class this partition
+    would found on its own, without registry headroom. One canonical
+    path (``grow_class``) does all rounding so this can never drift from
+    what `Engine` actually serves."""
+    tight = dataclasses.replace(policy, growth=1.0, coo_growth=1.0)
+    return grow_class(class_requirements(part, meta, tight), tight)
+
+
+# ---------------------------------------------------------------------------
+# Class registry — the serving-time classifier.
+#
+# Stateless per-graph bucketing (shape_class_of) splits classes whenever a
+# count lands on the other side of a bucket boundary, and real graph
+# families jitter by ~2x in their partition statistics. The registry makes
+# sharing first-class: the first graph FOUNDS a class with `growth`
+# headroom on every count, and later graphs reuse any registered class
+# they fit inside, as long as the class's padded work stays within
+# `fit_slack`x their real need.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClassNeed:
+    """A partition's exact static-shape requirements (after K snapping)."""
+
+    tile: int
+    n_row_tiles: int
+    n_col_tiles: int
+    square: bool
+    n_dense_tiles: int
+    rung_units: tuple         # sorted ((K, units), ...) on the ladder
+    coo_nnz: int
+    r_block: int = 8
+
+
+def _round_mult(x: int, granule: int) -> int:
+    g = max(int(granule), 1)
+    return -(-int(x) // g) * g
+
+
+def class_requirements(part: TriPartition, meta: PartitionMeta,
+                       policy: ShapePolicy = ShapePolicy()) -> ClassNeed:
+    counts = _merged_ell_counts(meta, part, policy.k_ladder)
+    return ClassNeed(
+        tile=meta.tile,
+        n_row_tiles=meta.n_row_tiles,
+        n_col_tiles=meta.n_col_tiles,
+        square=meta.n_rows == meta.n_cols,
+        n_dense_tiles=int(part.dense.tiles.shape[0]),
+        rung_units=tuple(sorted(counts.items())),
+        coo_nnz=int(part.coo.vals.shape[0]),
+        r_block=_part_r_block(part),
+    )
+
+
+def class_fits(need: ClassNeed, sc: ShapeClass,
+               policy: ShapePolicy = ShapePolicy()) -> bool:
+    """Can `need` pad into `sc` without overflow or excessive waste?"""
+    slack = policy.fit_slack
+
+    def ok(cap, want, granule):
+        return want <= cap <= slack * want + granule
+
+    if sc.tile != need.tile:
+        return False
+    if need.rung_units and sc.r_block != need.r_block:
+        return False
+    if need.square and sc.n_row_tiles != sc.n_col_tiles:
+        return False
+    if not (ok(sc.n_row_tiles, need.n_row_tiles, policy.row_tile_granule)
+            and ok(sc.n_col_tiles, need.n_col_tiles,
+                   policy.row_tile_granule)):
+        return False
+    if not ok(sc.n_dense_tiles, need.n_dense_tiles,
+              policy.dense_tile_granule):
+        return False
+    if not ok(sc.coo_nnz, need.coo_nnz, policy.coo_granule):
+        return False
+
+    # ELL: route each needed rung to the class rung it would pad into,
+    # check per-rung capacity, then bound total padded MACs.
+    class_rungs = tuple(k for k, _ in sc.ell)
+    cap = dict(sc.ell)
+    load: dict = {}
+    need_ops = 0
+    for k, u in need.rung_units:
+        if not class_rungs or k > class_rungs[-1]:
+            return False
+        ck = round_up_ladder(k, class_rungs)
+        load[ck] = load.get(ck, 0) + u
+        need_ops += ck * u
+    for ck, u in load.items():
+        if u > cap[ck]:
+            return False
+    class_ops = sum(k * n for k, n in sc.ell)
+    floor = policy.unit_granule * sum(class_rungs)   # one granule per rung
+    return class_ops <= slack * need_ops + floor
+
+
+def grow_class(need: ClassNeed,
+               policy: ShapePolicy = ShapePolicy()) -> ShapeClass:
+    """Found a new class around `need`, with growth headroom per count."""
+    g = policy.growth
+    nrt = round_up_pow2(need.n_row_tiles, policy.row_tile_granule)
+    nct = round_up_pow2(need.n_col_tiles, policy.row_tile_granule)
+    if need.square:
+        nrt = nct = max(nrt, nct)
+    counts = {k: _round_mult(int(u * g), policy.unit_granule)
+              for k, u in need.rung_units}
+    if policy.full_ladder and counts:
+        for rung in policy.k_ladder:
+            if rung <= need.tile:
+                counts.setdefault(rung, policy.unit_granule)
+    return ShapeClass(
+        tile=need.tile,
+        n_row_tiles=nrt,
+        n_col_tiles=nct,
+        n_dense_tiles=_round_mult(int(need.n_dense_tiles * g),
+                                  policy.dense_tile_granule),
+        ell=tuple(sorted(counts.items())),
+        coo_nnz=_round_mult(int(need.coo_nnz * policy.coo_growth),
+                            policy.coo_granule),
+        r_block=need.r_block,
+    )
+
+
+class ClassRegistry:
+    """First-fit registry of founded shape classes (one per Engine)."""
+
+    def __init__(self, policy: ShapePolicy = ShapePolicy()):
+        self.policy = policy
+        self.classes: list = []
+
+    def classify(self, part: TriPartition,
+                 meta: PartitionMeta) -> ShapeClass:
+        need = class_requirements(part, meta, self.policy)
+        for sc in self.classes:
+            if class_fits(need, sc, self.policy):
+                return sc
+        sc = grow_class(need, self.policy)
+        self.classes.append(sc)
+        return sc
+
+
+def pad_to_class(part: TriPartition, meta: PartitionMeta,
+                 sc: ShapeClass) -> tuple:
+    """Pad a partition's arrays to exactly the class shapes.
+
+    Returns ``(padded TriPartition, padded PartitionMeta)`` — host-side
+    numpy throughout; the executor moves them on first use. Padding is
+    value-neutral by construction:
+
+      * dense: zero tiles scattered onto block-row 0 (adds 0)
+      * ELL:   zero (cols, vals) K-columns; whole padding units carry the
+               padded meta's sentinel output row
+      * COO:   (row 0, col 0, val 0) triples (adds 0)
+    """
+    if sc.tile != meta.tile:
+        raise ValueError(f"tile mismatch: class {sc.tile} vs meta {meta.tile}")
+    pmeta = dataclasses.replace(
+        sc.to_meta(),
+        nnz_dense=meta.nnz_dense, nnz_ell=meta.nnz_ell,
+        nnz_ell_padded=meta.nnz_ell_padded, nnz_coo=meta.nnz_coo,
+        density_thresholds=meta.density_thresholds,
+    )
+    T = meta.tile
+
+    # ---- dense ------------------------------------------------------------
+    n_t = int(part.dense.tiles.shape[0])
+    if n_t > sc.n_dense_tiles:
+        raise ValueError(f"class holds {sc.n_dense_tiles} dense tiles, "
+                         f"partition has {n_t}")
+    pad_t = sc.n_dense_tiles - n_t
+    dense = DenseTiles(
+        tiles=np.concatenate(
+            [np.asarray(part.dense.tiles, np.float32),
+             np.zeros((pad_t, T, T), np.float32)], axis=0),
+        tile_row=np.concatenate([np.asarray(part.dense.tile_row, np.int32),
+                                 np.zeros(pad_t, np.int32)]),
+        tile_col=np.concatenate([np.asarray(part.dense.tile_col, np.int32),
+                                 np.zeros(pad_t, np.int32)]),
+    )
+
+    # ---- ELL: merge buckets onto ladder rungs, then pad unit counts -------
+    sentinel_old = meta.ell_sentinel_row
+    sentinel_new = pmeta.ell_sentinel_row
+    ladder = {k: n for k, n in sc.ell}
+    by_k: dict = {}
+    for k, bucket in zip(meta.ell_ks, part.ell):
+        ck = round_up_ladder(int(k), tuple(ladder))
+        if ck not in ladder:
+            raise ValueError(f"K={k} snaps to rung {ck} absent from class")
+        by_k.setdefault(ck, []).append(bucket)
+
+    buckets = []
+    for ck, n_units_class in sc.ell:
+        members = by_k.get(ck, [])
+        cols_l, vals_l, rows_l, tcol_l = [], [], [], []
+        for b in members:
+            u, r, k = b.cols.shape
+            if r != sc.r_block:
+                raise ValueError(f"unit row height {r} != class r_block "
+                                 f"{sc.r_block}")
+            cols = np.zeros((u, r, ck), np.int32)
+            vals = np.zeros((u, r, ck), np.float32)
+            cols[:, :, :k] = np.asarray(b.cols, np.int32)
+            vals[:, :, :k] = np.asarray(b.vals, np.float32)
+            rows = np.asarray(b.rows, np.int32).copy()
+            # remap the source partition's sentinel into the padded space
+            rows[rows == sentinel_old] = sentinel_new
+            cols_l.append(cols)
+            vals_l.append(vals)
+            rows_l.append(rows)
+            tcol_l.append(np.asarray(b.tile_col, np.int32))
+        n_units = sum(c.shape[0] for c in cols_l)
+        if n_units > n_units_class:
+            raise ValueError(f"class rung K={ck} holds {n_units_class} "
+                             f"units, partition has {n_units}")
+        pad_u = n_units_class - n_units
+        rb = sc.r_block
+        cols_l.append(np.zeros((pad_u, rb, ck), np.int32))
+        vals_l.append(np.zeros((pad_u, rb, ck), np.float32))
+        rows_l.append(np.full((pad_u, rb), sentinel_new, np.int32))
+        tcol_l.append(np.zeros(pad_u, np.int32))
+        buckets.append(EllTileBucket(
+            cols=np.concatenate(cols_l, axis=0),
+            vals=np.concatenate(vals_l, axis=0),
+            rows=np.concatenate(rows_l, axis=0),
+            tile_col=np.concatenate(tcol_l),
+        ))
+
+    # ---- COO --------------------------------------------------------------
+    nnz = int(part.coo.vals.shape[0])
+    if nnz > sc.coo_nnz:
+        raise ValueError(f"class holds {sc.coo_nnz} COO nnz, partition "
+                         f"has {nnz}")
+    pad_c = sc.coo_nnz - nnz
+    coo = CooResidual(
+        rows=np.concatenate([np.asarray(part.coo.rows, np.int32),
+                             np.zeros(pad_c, np.int32)]),
+        cols=np.concatenate([np.asarray(part.coo.cols, np.int32),
+                             np.zeros(pad_c, np.int32)]),
+        vals=np.concatenate([np.asarray(part.coo.vals, np.float32),
+                             np.zeros(pad_c, np.float32)]),
+    )
+
+    return TriPartition(dense=dense, ell=tuple(buckets), coo=coo), pmeta

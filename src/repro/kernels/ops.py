@@ -7,7 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import PartitionMeta, TriPartition
+from repro.core.formats import (PartitionMeta, TriPartition, pad_b_to_tiles,
+                                scatter_ell_partials)
 
 from . import bsr_spmm as _bsr
 from . import ell_spmm as _ell
@@ -23,37 +24,43 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, **kw) -> jnp.ndarray:
     return _mm.tile_matmul(a, b, **kw)
 
 
-def _pad_b(b: jnp.ndarray, meta: PartitionMeta) -> jnp.ndarray:
-    want = meta.n_col_tiles * meta.tile
-    if b.shape[0] == want:
-        return b
-    return jnp.pad(b, ((0, want - b.shape[0]), (0, 0)))
-
-
 def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
                        meta: PartitionMeta) -> jnp.ndarray:
     T, nrt = meta.tile, meta.n_row_tiles
     f = b.shape[1]
     if part.dense.tiles.shape[0] == 0:
         return jnp.zeros((nrt * T, f), b.dtype)
-    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+    bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, T, f)
     prod = _bsr.bsr_spmm(part.dense.tiles, part.dense.tile_col, bt,
                          interpret=not _on_tpu())
     out = jax.ops.segment_sum(prod, part.dense.tile_row, num_segments=nrt)
     return out.reshape(nrt * T, f).astype(b.dtype)
 
 
-def ell_matmul(part: TriPartition, b: jnp.ndarray,
-               meta: PartitionMeta) -> jnp.ndarray:
-    T, nrt = meta.tile, meta.n_row_tiles
+def ell_matmul(part: TriPartition, b: jnp.ndarray, meta: PartitionMeta,
+               *, dispatch: str = "fused") -> jnp.ndarray:
+    """Sparse-engine partial product via the Pallas ELL kernel, [nrt*T, F].
+
+    One ``ell_spmm`` launch per K bucket computes the per-unit partial
+    products; ``dispatch="fused"`` then concatenates all buckets and
+    scatter-adds them in a single kernel, while ``"loop"`` keeps the
+    historical per-bucket scatter for A/B testing.
+    """
+    if dispatch not in ("fused", "loop"):
+        raise ValueError(f"unknown ell dispatch {dispatch!r}")
+    T = meta.tile
     f = b.shape[1]
-    out = jnp.zeros((nrt * T + 1, f), jnp.float32)
     if not part.ell:
-        return out
-    bt = _pad_b(b, meta).reshape(meta.n_col_tiles, T, f)
+        return jnp.zeros((meta.n_padded_rows, f), jnp.float32)
+    bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, T, f)
+    partials, rows = [], []
     for bucket in part.ell:
         u, r, _ = bucket.cols.shape
         prod = _ell.ell_spmm(bucket.cols, bucket.vals, bucket.tile_col, bt,
                              interpret=not _on_tpu())
-        out = out.at[bucket.rows.reshape(-1)].add(prod.reshape(u * r, f))
-    return out
+        partials.append(prod.reshape(u * r, f))
+        rows.append(bucket.rows.reshape(-1))
+    if dispatch == "fused":
+        return scatter_ell_partials(jnp.concatenate(rows),
+                                    jnp.concatenate(partials), meta)
+    return scatter_ell_partials(rows, partials, meta)

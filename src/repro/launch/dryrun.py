@@ -42,7 +42,8 @@ def _lower_compile(prog, mesh):
 
 def _probe_terms(compiled):
     from repro.analysis.hlo import collective_summary
-    ca = compiled.cost_analysis()
+    from repro.analysis.roofline import merge_cost_analysis
+    ca = merge_cost_analysis(compiled.cost_analysis())
     return (float(ca.get("flops", 0.0)),
             float(ca.get("bytes accessed", 0.0)),
             float(collective_summary(compiled.as_text())

@@ -1,0 +1,139 @@
+"""Deterministic fallback for `hypothesis` in offline environments.
+
+The tier-1 suite must collect and run without hypothesis installed
+(ISSUE 1). This module mimics the tiny slice of the hypothesis API the
+tests use — ``given``, ``settings``, and the ``integers`` / ``floats`` /
+``lists`` / ``sampled_from`` / ``booleans`` / ``tuples`` strategies — by
+replaying a fixed number of seeded pseudo-random examples per test.
+Examples are derived from the test's qualified name, so runs are fully
+deterministic and independent of execution order.
+
+Installed by ``conftest.py`` via ``sys.modules["hypothesis"]`` only when
+the real package is absent; with hypothesis installed the stub is inert.
+"""
+from __future__ import annotations
+
+import inspect
+import os
+import zlib
+
+import numpy as np
+
+# Cap on examples per property test. Real hypothesis shrinks + caches;
+# the stub just replays, so large max_examples (100) would dominate suite
+# wall-clock for no added determinism.
+_MAX_EXAMPLES_CAP = int(os.environ.get("REPRO_STUB_MAX_EXAMPLES", "10"))
+
+
+class SearchStrategy:
+    """A strategy is a draw function over a numpy Generator."""
+
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self.label = label
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"stub-strategy({self.label})"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)),
+        f"integers({min_value},{max_value})")
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: float(rng.uniform(min_value, max_value)),
+        f"floats({min_value},{max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)), "booleans")
+
+
+def sampled_from(seq) -> SearchStrategy:
+    seq = list(seq)
+    return SearchStrategy(lambda rng: seq[int(rng.integers(len(seq)))],
+                          f"sampled_from(n={len(seq)})")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(size)]
+    return SearchStrategy(draw, f"lists({elements.label})")
+
+
+def tuples(*strategies) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies),
+                          "tuples")
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    """Records max_examples on the test; all other knobs are no-ops."""
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    """Replay ``max_examples`` seeded draws through the wrapped test.
+
+    Like real hypothesis, positional strategies bind to the RIGHTMOST
+    parameters (by name, so tests that also take pytest fixtures keep
+    working), and the wrapper advertises a signature without the
+    strategy-bound parameters so pytest does not mistake them for
+    fixtures.
+    """
+    def deco(fn):
+        n_examples = min(getattr(fn, "_stub_max_examples", 10),
+                         _MAX_EXAMPLES_CAP)
+        base_seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}"
+                               .encode()) & 0xFFFFFFFF
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        n_bound = len(strategies)
+        free = [p.name for p in params if p.name not in kw_strategies]
+        pos_names = free[len(free) - n_bound:]
+
+        def wrapper(*args, **kwargs):
+            for i in range(n_examples):
+                rng = np.random.default_rng((base_seed, i))
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(pos_names, strategies)}
+                drawn.update({k: s.draw(rng)
+                              for k, s in kw_strategies.items()})
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"stub-hypothesis example #{i} failed for "
+                        f"{fn.__qualname__} with {drawn}: {e}") from e
+
+        kept = [p for p in params[:len(params) - n_bound]
+                if p.name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+class _StrategiesModule:
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
+
+
+strategies = _StrategiesModule()

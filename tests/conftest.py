@@ -1,5 +1,17 @@
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    # Offline tier-1 environments don't ship hypothesis; substitute the
+    # deterministic replay stub so the property-based modules still
+    # collect and exercise seeded example-based cases.
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
 
 
 def make_heterogeneous_matrix(n: int, seed: int = 0,

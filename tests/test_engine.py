@@ -1,0 +1,235 @@
+"""Shape-class serving engine: padding exactness, cache behavior, fused
+ELL dispatch, batching, and the ISSUE-1 partition edge cases (each
+checked through BOTH the eager hybrid_spmm path and the cached engine)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (PartitionConfig, analyze_and_partition,
+                        csr_from_dense, hybrid_spmm, hybrid_spmm_ref,
+                        partition_to_dense)
+from repro.engine import (ClassRegistry, Engine, ShapePolicy, class_fits,
+                          class_requirements, grow_class, pad_to_class,
+                          round_up_ladder, round_up_pow2, shape_class_of)
+
+from conftest import make_heterogeneous_matrix
+
+TOL = dict(rtol=2e-5, atol=2e-4)
+
+
+# ----------------------------------------------------- edge-case graphs ----
+def _overflow_matrix(n=128):
+    """Every ELL row overflows nnz to COO: rows carry 0-1 nnz in tile 0
+    vs 5 in tile 1, so a tiny coverage p caps the Algorithm-2 ELL width
+    at 1 and tile 1 spills 4 nnz per row — while the 0-nnz holes keep the
+    post-padding density below the band-promotion threshold."""
+    a = np.zeros((n, n), np.float32)
+    rng = np.random.default_rng(0)
+    for j in range(64):
+        if j % 2 == 0:
+            a[j, rng.choice(64, 1, replace=False)] = 1.0
+        a[j, 64 + rng.choice(64, 5, replace=False)] = 1.0
+    return a
+
+
+EDGE_CASES = {
+    "empty": lambda: np.zeros((100, 100), np.float32),
+    "single_tile": lambda: np.pad(
+        (np.random.default_rng(1).random((64, 64)) < 0.08).astype(np.float32),
+        ((0, 64), (0, 64))),
+    "all_dense": lambda: np.abs(
+        np.random.default_rng(2).standard_normal((64, 64))
+    ).astype(np.float32),
+    "ell_overflow": _overflow_matrix,
+}
+
+EDGE_CFGS = {
+    "ell_overflow": PartitionConfig(tile=64, d_dense=0.9, d_scatter=1e-4,
+                                    delta=1.2, p=0.3),
+}
+
+
+def _edge(name):
+    a = EDGE_CASES[name]()
+    cfg = EDGE_CFGS.get(name, PartitionConfig(tile=64))
+    return a, cfg
+
+
+class TestEdgeCasesEager:
+    @pytest.mark.parametrize("name", sorted(EDGE_CASES))
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_hybrid_matches_ref(self, name, backend):
+        a, cfg = _edge(name)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a), cfg)
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal((a.shape[1], 16)), jnp.float32)
+        y = np.asarray(hybrid_spmm(part, b, meta=meta, backend=backend))
+        np.testing.assert_allclose(y, np.asarray(hybrid_spmm_ref(
+            jnp.asarray(a), b)), **TOL)
+
+    def test_overflow_routes_to_coo(self):
+        a, cfg = _edge("ell_overflow")
+        _, meta, _ = analyze_and_partition(csr_from_dense(a), cfg)
+        assert meta.nnz_ell > 0, "capped rows must keep an ELL slice"
+        assert meta.nnz_coo >= 4 * 64, "overflow nnz must spill to COO"
+
+    def test_empty_and_dense_routing(self):
+        _, meta, _ = analyze_and_partition(
+            csr_from_dense(EDGE_CASES["empty"]()), PartitionConfig(tile=64))
+        assert meta.nnz == 0
+        _, meta, _ = analyze_and_partition(
+            csr_from_dense(EDGE_CASES["all_dense"]()),
+            PartitionConfig(tile=64))
+        assert meta.nnz_dense == meta.nnz > 0
+
+
+class TestEdgeCasesEngine:
+    @pytest.mark.parametrize("name", sorted(EDGE_CASES))
+    def test_engine_matches_ref(self, name):
+        a, cfg = _edge(name)
+        eng = Engine(partition_cfg=cfg)
+        eng.register(name, csr_from_dense(a))
+        rng = np.random.default_rng(0)
+        b = rng.standard_normal((a.shape[1], 16)).astype(np.float32)
+        y = np.asarray(eng.spmm(name, b))
+        np.testing.assert_allclose(y, a @ b, **TOL)
+        # second call reuses the cached executor
+        y2 = np.asarray(eng.spmm(name, b))
+        assert eng.executors.stats.hits >= 1
+        np.testing.assert_allclose(y2, y, rtol=0, atol=0)
+
+
+# ------------------------------------------------------- fused dispatch ----
+class TestFusedDispatch:
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_fused_equals_loop(self, hetero300, backend):
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        assert len(part.ell) > 1, "need multiple K buckets to fuse"
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal((300, 32)), jnp.float32)
+        y_fused = np.asarray(hybrid_spmm(part, b, meta=meta, backend=backend,
+                                         ell_dispatch="fused"))
+        y_loop = np.asarray(hybrid_spmm(part, b, meta=meta, backend=backend,
+                                        ell_dispatch="loop"))
+        np.testing.assert_allclose(y_fused, y_loop, **TOL)
+        np.testing.assert_allclose(y_fused, hetero300 @ np.asarray(b), **TOL)
+
+    def test_unknown_dispatch_raises(self, hetero300):
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        with pytest.raises(ValueError):
+            hybrid_spmm(part, jnp.ones((300, 4)), meta=meta,
+                        ell_dispatch="bogus")
+
+
+# ------------------------------------------------- shape-class geometry ----
+class TestShapeClass:
+    def test_rounding_helpers(self):
+        assert round_up_pow2(0, 4) == 0
+        assert round_up_pow2(1, 4) == 4
+        assert round_up_pow2(37, 4) == 64
+        assert round_up_ladder(0, (1, 2, 4)) == 0
+        assert round_up_ladder(3, (1, 2, 4)) == 4
+        assert round_up_ladder(9, (1, 2, 4)) == 12   # multiples past the top
+
+    def test_pad_to_class_is_exact(self, hetero300):
+        part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
+                                              PartitionConfig(tile=64))
+        sc = shape_class_of(part, meta)
+        padded, pmeta = pad_to_class(part, meta, sc)
+        rec = partition_to_dense(padded, pmeta)
+        assert rec.shape == (sc.n_row_tiles * 64, sc.n_col_tiles * 64)
+        np.testing.assert_allclose(rec[:300, :300], hetero300, rtol=0, atol=0)
+        assert np.count_nonzero(rec[300:, :]) == 0
+        assert np.count_nonzero(rec[:, 300:]) == 0
+
+    def test_registry_reuses_class_for_family(self):
+        reg = ClassRegistry(ShapePolicy())
+        classes = set()
+        for i, n in enumerate([300, 310, 305, 296]):
+            a = make_heterogeneous_matrix(n, seed=i)
+            part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                                  PartitionConfig(tile=64))
+            classes.add(reg.classify(part, meta))
+        assert len(classes) < 4, "similar graphs must share shape classes"
+        assert len(reg.classes) == len(classes)
+
+    def test_fit_rejects_oversized_class(self):
+        a = make_heterogeneous_matrix(300, seed=0)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                              PartitionConfig(tile=64))
+        need = class_requirements(part, meta)
+        sc = grow_class(need)
+        assert class_fits(need, sc)
+        tiny = np.zeros((100, 100), np.float32)
+        tiny[0, 1] = 1.0
+        tpart, tmeta, _ = analyze_and_partition(csr_from_dense(tiny),
+                                                PartitionConfig(tile=64))
+        tneed = class_requirements(tpart, tmeta)
+        assert not class_fits(tneed, sc), \
+            "a tiny graph must not pad into a huge class"
+
+
+# --------------------------------------------------------- serve_batch -----
+class TestServing:
+    def _engine_with_family(self, n_graphs=3, f_in=24, hidden=12, classes=5):
+        eng = Engine()
+        rng = np.random.default_rng(0)
+        graphs = {}
+        for i in range(n_graphs):
+            n = 300 + 4 * i
+            a = make_heterogeneous_matrix(n, seed=i)
+            ws = [(rng.standard_normal((f_in, hidden)) * 0.1
+                   ).astype(np.float32),
+                  (rng.standard_normal((hidden, classes)) * 0.1
+                   ).astype(np.float32)]
+            eng.register(f"g{i}", csr_from_dense(a), weights=ws)
+            graphs[f"g{i}"] = (a, ws, n)
+        return eng, graphs, rng
+
+    def _oracle(self, a, ws, x):
+        h = np.maximum(a @ (x @ ws[0]), 0)
+        return a @ (h @ ws[1])
+
+    def test_infer_matches_oracle(self):
+        eng, graphs, rng = self._engine_with_family(1)
+        a, ws, n = graphs["g0"]
+        x = rng.standard_normal((n, 24)).astype(np.float32)
+        y = np.asarray(eng.infer("g0", x))
+        np.testing.assert_allclose(y, self._oracle(a, ws, x),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_serve_batch_matches_individual(self):
+        eng, graphs, rng = self._engine_with_family(3)
+        reqs = []
+        for i in [0, 1, 2, 1, 0]:   # odd batch -> exercises pow2 padding
+            _, _, n = graphs[f"g{i}"]
+            reqs.append((f"g{i}",
+                         rng.standard_normal((n, 24)).astype(np.float32)))
+        got = eng.serve_batch(reqs)
+        assert len(got) == len(reqs)
+        for (name, x), y in zip(reqs, got):
+            a, ws, n = graphs[name]
+            assert y.shape == (n, 5)
+            np.testing.assert_allclose(np.asarray(y), self._oracle(a, ws, x),
+                                       rtol=1e-4, atol=1e-3)
+
+    def test_serve_batch_without_weights_raises(self):
+        eng = Engine()
+        eng.register("g", csr_from_dense(make_heterogeneous_matrix(64)))
+        with pytest.raises(ValueError):
+            eng.serve_batch([("g", np.ones((64, 4), np.float32))])
+
+    def test_reorder_round_trip(self):
+        a = make_heterogeneous_matrix(200, seed=3)
+        sym = np.abs(a) + np.abs(a).T
+        rng = np.random.default_rng(1)
+        ws = [(rng.standard_normal((16, 8)) * 0.1).astype(np.float32),
+              (rng.standard_normal((8, 3)) * 0.1).astype(np.float32)]
+        eng = Engine()
+        eng.register("r", csr_from_dense(sym), reorder="degree", weights=ws)
+        x = rng.standard_normal((200, 16)).astype(np.float32)
+        y = np.asarray(eng.infer("r", x))
+        np.testing.assert_allclose(y, self._oracle(sym, ws, x),
+                                   rtol=1e-3, atol=1e-2)

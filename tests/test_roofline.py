@@ -1,0 +1,68 @@
+"""`cost_analysis()` normalization: newer JAX returns a list of dicts
+(one per executable module), older JAX a single dict. Both must flow
+through `analyze_compiled` without touching a real compiled artifact."""
+import pytest
+
+from repro.analysis.roofline import analyze_compiled, merge_cost_analysis
+
+
+class FakeCompiled:
+    """Just enough Compiled surface for analyze_compiled."""
+
+    def __init__(self, ca):
+        self._ca = ca
+
+    def cost_analysis(self):
+        return self._ca
+
+    def memory_analysis(self):
+        raise RuntimeError("no memory analysis in this fake")
+
+    def as_text(self):
+        return ""
+
+
+CA_DICT = {"flops": 1024.0, "bytes accessed": 768.0, "utilization0{}": 1.0}
+CA_LIST = [{"flops": 1024.0, "bytes accessed": 768.0, "utilization0{}": 1.0}]
+
+
+class TestMergeCostAnalysis:
+    def test_dict_passthrough(self):
+        assert merge_cost_analysis(CA_DICT) == CA_DICT
+
+    def test_single_element_list(self):
+        assert merge_cost_analysis(CA_LIST) == CA_DICT
+
+    def test_multi_module_sums_numeric(self):
+        ca = [{"flops": 10.0, "bytes accessed": 5.0},
+              {"flops": 3.0, "tag": "x"}]
+        merged = merge_cost_analysis(ca)
+        assert merged["flops"] == 13.0
+        assert merged["bytes accessed"] == 5.0
+        assert merged["tag"] == "x"
+
+    def test_degenerate(self):
+        assert merge_cost_analysis(None) == {}
+        assert merge_cost_analysis([]) == {}
+        assert merge_cost_analysis([None, {}]) == {}
+
+
+@pytest.mark.parametrize("ca", [CA_DICT, CA_LIST], ids=["dict", "list"])
+def test_analyze_compiled_both_shapes(ca):
+    roof = analyze_compiled("arch", "cell", "16x16", 256, FakeCompiled(ca),
+                            model_flops=512.0)
+    assert roof.hlo_flops == 1024.0
+    assert roof.hlo_bytes == 768.0
+    assert roof.collective_bytes == 0.0
+    assert roof.per_device_memory == 0.0  # memory_analysis raised -> 0
+    assert roof.bottleneck in ("compute", "memory", "collective")
+
+
+def test_analyze_compiled_real_jit():
+    """The shape actually returned by this environment's JAX must work."""
+    import jax
+    import jax.numpy as jnp
+    compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+    roof = analyze_compiled("arch", "cell", "1x1", 1, compiled,
+                            model_flops=2 * 8 * 8 * 8)
+    assert roof.hlo_flops > 0
