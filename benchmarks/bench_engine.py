@@ -1,14 +1,20 @@
-"""Cold-trace vs cached shape-class executors (ISSUE 1 acceptance).
+"""Cold-trace vs cached shape-class executors, across ELL dispatch modes.
 
 Workload: a family of structurally-similar synthetic SBM graphs, each
-serving ``--reps`` repeated SpMM inferences. Two servers:
+serving ``--reps`` repeated SpMM inferences. Servers:
 
   seed path — what the pre-engine code did: one fresh ``jax.jit`` of
       ``hybrid_spmm`` per graph (bucket-loop ELL dispatch), so every new
       graph pays a full trace + XLA compile before its first answer.
-  engine    — graphs padded into canonical shape classes; all class
-      members share ONE compiled executor (fused ELL dispatch), so only
-      the first member of a class ever compiles.
+  engine[d] — graphs padded into canonical (Kmax, units) shape classes;
+      all class members share ONE compiled executor per ELL dispatch
+      mode d (``ragged`` = single-launch production default, ``fused`` =
+      legacy per-K baseline), so only the first member of a class ever
+      compiles.
+
+Reports per-dispatch cold/warm wall-clock, shape-class count, and the
+ELL kernel launches per SpMM — the ragged path must hold throughput
+against the fused baseline while tracing exactly one ELL kernel.
 
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--graphs 6]
 """
@@ -26,6 +32,8 @@ from repro.core.hybrid_spmm import hybrid_spmm
 from repro.core.partition import PartitionConfig, analyze_and_partition
 from repro.data.graphs import normalized_adjacency, sbm_graph
 from repro.engine import Engine
+
+ENGINE_DISPATCHES = ("ragged", "fused")
 
 
 def make_family(n_graphs: int, n: int = 2000, seed0: int = 0):
@@ -59,9 +67,9 @@ def bench_seed_path(graphs, b_of, reps):
     return cold, warm, outs
 
 
-def bench_engine_path(graphs, b_of, reps):
-    """Shape-class engine: cached executors + fused ELL dispatch."""
-    engine = Engine()
+def bench_engine_path(graphs, b_of, reps, dispatch="ragged"):
+    """Shape-class engine: cached executors, selectable ELL dispatch."""
+    engine = Engine(ell_dispatch=dispatch)
     for name, csr, n in graphs:
         engine.register(name, csr)
     cold, warm, outs = 0.0, 0.0, {}
@@ -87,12 +95,17 @@ def run(n_graphs: int = 6, reps: int = 20, f: int = 64,
     b_of = feats.__getitem__
 
     s_cold, s_warm, s_out = bench_seed_path(graphs, b_of, reps)
-    e_cold, e_warm, e_out, engine = bench_engine_path(graphs, b_of, reps)
+    engines = {}
+    for dispatch in ENGINE_DISPATCHES:
+        engines[dispatch] = bench_engine_path(graphs, b_of, reps, dispatch)
 
-    for name in s_out:   # both servers must answer identically
-        err = np.abs(s_out[name] - e_out[name]).max()
-        assert err < 2e-4, (name, err)
+    for name in s_out:   # every server must answer identically
+        for dispatch, (_, _, e_out, _) in engines.items():
+            err = np.abs(s_out[name] - e_out[name]).max()
+            assert err < 2e-4, (dispatch, name, err)
 
+    e_cold, e_warm, _, engine = engines["ragged"]
+    f_cold, f_warm, _, _ = engines["fused"]
     stats = engine.stats()
     res = {
         "n_graphs": n_graphs, "reps": reps,
@@ -100,22 +113,30 @@ def run(n_graphs: int = 6, reps: int = 20, f: int = 64,
         "seed_total_s": s_cold + s_warm,
         "engine_cold_s": e_cold, "engine_warm_s": e_warm,
         "engine_total_s": e_cold + e_warm,
+        "fused_cold_s": f_cold, "fused_warm_s": f_warm,
+        "fused_total_s": f_cold + f_warm,
         "shape_classes": stats["shape_classes"],
         "executors_compiled": stats["cache_misses"],
         "total_speedup": (s_cold + s_warm) / (e_cold + e_warm),
         "cold_speedup": s_cold / e_cold,
+        "ragged_vs_fused_warm": f_warm / max(e_warm, 1e-9),
     }
     if verbose:
         print(f"== engine vs per-graph jit | {n_graphs} graphs x "
               f"(1 cold + {reps} warm) SpMM, F={f} ==")
-        print(f"{'':10s} {'cold(s)':>9} {'warm(s)':>9} {'total(s)':>9} "
-              f"{'traces':>7}")
-        print(f"{'seed-jit':10s} {s_cold:>9.2f} {s_warm:>9.2f} "
-              f"{s_cold + s_warm:>9.2f} {n_graphs:>7d}")
-        print(f"{'engine':10s} {e_cold:>9.2f} {e_warm:>9.2f} "
-              f"{e_cold + e_warm:>9.2f} {stats['cache_misses']:>7d}")
-        print(f"speedup: total {res['total_speedup']:.2f}x, "
-              f"cold {res['cold_speedup']:.2f}x | "
+        print(f"{'':16s} {'cold(s)':>9} {'warm(s)':>9} {'total(s)':>9} "
+              f"{'traces':>7} {'launches':>9}")
+        print(f"{'seed-jit (loop)':16s} {s_cold:>9.2f} {s_warm:>9.2f} "
+              f"{s_cold + s_warm:>9.2f} {n_graphs:>7d} {'per-K':>9}")
+        for dispatch in ENGINE_DISPATCHES:
+            c, w, _, eng = engines[dispatch]
+            st = eng.stats()
+            launches = "1" if dispatch == "ragged" else "per-K"
+            print(f"{'engine ' + dispatch:16s} {c:>9.2f} {w:>9.2f} "
+                  f"{c + w:>9.2f} {st['cache_misses']:>7d} {launches:>9}")
+        print(f"speedup vs seed: total {res['total_speedup']:.2f}x, "
+              f"cold {res['cold_speedup']:.2f}x | ragged warm vs fused "
+              f"{res['ragged_vs_fused_warm']:.2f}x | "
               f"{n_graphs} graphs -> {stats['shape_classes']} shape classes")
         print(engine.summary())
     return res

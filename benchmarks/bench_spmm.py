@@ -2,24 +2,42 @@
 vs dense matmul vs pure-COO (segment_sum) on the synthesized datasets —
 shows the partitioned executor is a real executable artifact, not only a
 cost model. The hybrid path runs through the shape-class serving engine
-(cached compiled executor, fused ELL dispatch), i.e. exactly what
-`repro.engine.Engine` serves in production."""
+(cached compiled executor), i.e. exactly what `repro.engine.Engine`
+serves in production.
+
+The ``--dispatch`` axis A/B-tests the ELL dispatch modes (``ragged`` is
+the production default, ``fused``/``loop`` are the legacy per-K-launch
+paths) and reports, per dataset and mode, the traced ELL kernel
+launches per SpMM and the padded-MAC waste of the ELL slice.
+
+Run:  PYTHONPATH=src python benchmarks/bench_spmm.py
+      [--dispatch ragged|fused|loop|all] [--backend xla|pallas] [--smoke]
+
+``--smoke`` is the tier-1 CI mode: a small graph through the Pallas
+interpret-mode kernels, one rep — fails loudly on kernel regressions.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.hlo import count_pallas_calls
 from repro.core import csr_to_scipy, pad_b_to_tiles, reorder
 from repro.core.hybrid_spmm import hybrid_spmm
-from repro.core.formats import CooResidual, TriPartition, DenseTiles
+from repro.core.formats import (CooResidual, TriPartition, DenseTiles,
+                                empty_ragged_ell)
+from repro.core.partition import PartitionConfig, analyze_and_partition
 from repro.data.graphs import make_paper_dataset
 from repro.engine import Engine, ShapePolicy
 
 DATASETS = {"cora": 1.0, "pubmed": 1.0, "flickr": 0.1}
+SMOKE_DATASETS = {"cora": 0.25}
 F = 128
+DISPATCHES = ("ragged", "fused", "loop")
 
 
 def _time(fn, *args, reps=5):
@@ -33,62 +51,116 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(verbose: bool = True) -> dict:
-    # tight classes (no registry headroom): this benchmark isolates
-    # kernel execution, so don't charge the hybrid column for the
-    # serving policy's growth padding the baselines never pay
-    engine = Engine(policy=ShapePolicy(growth=1.0, coo_growth=1.0))
+def _ell_launches(part, meta, dispatch: str) -> int:
+    """ELL kernel launches one SpMM traces on the raw (unpadded) graph."""
+    from repro.kernels import ops as kops
+    if part.ell.cols.shape[0] == 0:
+        return 0
+    b = jnp.ones((meta.n_cols, 8), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda bb: kops.ell_matmul(part, bb, meta, dispatch=dispatch))(b)
+    return count_pallas_calls(jaxpr.jaxpr)
+
+
+def run(verbose: bool = True, dispatches=("ragged",), backend: str = "xla",
+        f: int = F, reps: int = 5, smoke: bool = False) -> dict:
+    datasets = SMOKE_DATASETS if smoke else DATASETS
+    if smoke:
+        backend, f, reps = "pallas", 32, 1
     results = {}
-    for name, scale in DATASETS.items():
+    for name, scale in datasets.items():
         csr, x, _, st = make_paper_dataset(name, scale=scale)
         csr2, _, _ = reorder(csr, "labels",
                              labels=make_paper_dataset.last_labels)
-        handle = engine.register(name, csr2)
-        meta = handle.meta
-        n = meta.n_rows
         rng = np.random.default_rng(0)
-        b = rng.standard_normal((n, F)).astype(np.float32)
+        n = csr2.shape[0]
+        b = rng.standard_normal((n, f)).astype(np.float32)
+        bj = jnp.asarray(b)
+        # the unpadded partition, for launch counting per dispatch
+        # (same PartitionConfig(tile=64) the Engine defaults to)
+        raw_part, raw_meta, _ = analyze_and_partition(
+            csr2, PartitionConfig(tile=64))
 
-        # Time the cached class executor on device-resident, pre-padded
-        # features — the same footing the dense/COO baselines get below
-        # (engine.spmm would also charge per-call host padding + H2D).
-        hybrid_fn = engine.executors.spmm(handle.sclass, F)
-        b_pad = pad_b_to_tiles(jnp.asarray(b), handle.padded_meta)
-        t_hybrid = _time(lambda bb: hybrid_fn(handle.part, bb), b_pad)
+        res = {"dispatch": {}}
+        for dispatch in dispatches:
+            # tight classes (no registry headroom): this benchmark
+            # isolates kernel execution, so don't charge the hybrid
+            # column for the serving policy's growth padding the
+            # baselines never pay
+            engine = Engine(policy=ShapePolicy(growth=1.0, coo_growth=1.0),
+                            backend=backend, ell_dispatch=dispatch)
+            handle = engine.register(name, csr2)
+            meta = handle.meta
+
+            # Time the cached class executor on device-resident,
+            # pre-padded features — the same footing the dense/COO
+            # baselines get below (engine.spmm would also charge
+            # per-call host padding + H2D).
+            hybrid_fn = engine.executors.spmm(handle.sclass, f)
+            b_pad = pad_b_to_tiles(bj, handle.padded_meta)
+            t = _time(lambda bb: hybrid_fn(handle.part, bb), b_pad,
+                      reps=reps)
+
+            # padded-MAC waste on the ELL slice: class capacity
+            # (Kmax * units * R) over real nnz — what the kernel
+            # actually issues vs what the graph needs
+            cap = handle.sclass.ell_mac_capacity
+            waste = cap / max(meta.nnz_ell, 1) if cap else 0.0
+            res["dispatch"][dispatch] = {
+                "ms": t * 1e3,
+                "launches_per_spmm": _ell_launches(raw_part, raw_meta,
+                                                   dispatch),
+                "ell_mac_capacity": cap,
+                "ell_pad_waste_x": waste,
+            }
+        meta = raw_meta   # true (unpadded) meta for the baselines below
 
         a_dense = jnp.asarray(csr_to_scipy(csr2).toarray())
         dense = jax.jit(lambda bb: a_dense @ bb)
-        bj = jnp.asarray(b)
-        t_dense = _time(dense, bj)
+        t_dense = _time(dense, bj, reps=reps)
 
         # pure scatter path (everything COO — the "PL-only" ablation)
         m = csr_to_scipy(csr2).tocoo()
         coo_all = TriPartition(
             dense=DenseTiles(jnp.zeros((0, meta.tile, meta.tile)),
                              jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32)),
-            ell=(),
+            ell=empty_ragged_ell(),
             coo=CooResidual(jnp.asarray(m.row.astype(np.int32)),
                             jnp.asarray(m.col.astype(np.int32)),
                             jnp.asarray(m.data.astype(np.float32))))
         coo_fn = jax.jit(lambda bb: hybrid_spmm(coo_all, bb, meta=meta))
-        t_coo = _time(coo_fn, bj)
+        t_coo = _time(coo_fn, bj, reps=reps)
 
-        results[name] = {"hybrid_ms": t_hybrid * 1e3,
-                         "dense_ms": t_dense * 1e3,
-                         "coo_ms": t_coo * 1e3,
-                         "speedup_vs_dense": t_dense / t_hybrid,
-                         "speedup_vs_coo": t_coo / t_hybrid}
+        d0 = res["dispatch"][dispatches[0]]
+        res.update({"dense_ms": t_dense * 1e3, "coo_ms": t_coo * 1e3,
+                    "speedup_vs_dense": t_dense * 1e3 / d0["ms"],
+                    "speedup_vs_coo": t_coo * 1e3 / d0["ms"]})
+        results[name] = res
     if verbose:
-        print("== measured CPU SpMM wall-clock (engine-cached executors) ==")
-        print(f"{'dataset':>8} {'hybrid':>9} {'dense':>9} {'coo-only':>9} "
-              f"{'vs dense':>9} {'vs coo':>7}")
+        print(f"== measured CPU SpMM wall-clock (engine-cached executors, "
+              f"backend={backend}) ==")
+        print(f"{'dataset':>8} {'dispatch':>8} {'hybrid':>9} {'dense':>9} "
+              f"{'coo-only':>9} {'launches':>9} {'pad-MACs':>9}")
         for name, r in results.items():
-            print(f"{name:>8} {r['hybrid_ms']:>7.2f}ms {r['dense_ms']:>7.2f}ms "
-                  f"{r['coo_ms']:>7.2f}ms {r['speedup_vs_dense']:>8.2f}x "
-                  f"{r['speedup_vs_coo']:>6.2f}x")
-        print(engine.summary())
+            for dispatch, d in r["dispatch"].items():
+                print(f"{name:>8} {dispatch:>8} {d['ms']:>7.2f}ms "
+                      f"{r['dense_ms']:>7.2f}ms {r['coo_ms']:>7.2f}ms "
+                      f"{d['launches_per_spmm']:>9d} "
+                      f"{d['ell_pad_waste_x']:>8.2f}x")
     return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dispatch", default="ragged",
+                    choices=list(DISPATCHES) + ["all"],
+                    help="ELL dispatch mode(s) to benchmark")
+    ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--features", type=int, default=F)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny pallas-interpret run for CI kernel smoke")
+    args = ap.parse_args()
+    dispatches = DISPATCHES if args.dispatch == "all" else (args.dispatch,)
+    run(dispatches=dispatches, backend=args.backend, f=args.features,
+        reps=args.reps, smoke=args.smoke)

@@ -4,3 +4,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# Kernel smoke: the ragged single-launch ELL path through the Pallas
+# interpret-mode kernels on a small graph — fails loudly on kernel
+# regressions the pure-jnp test oracles could mask.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_spmm.py --dispatch ragged --smoke

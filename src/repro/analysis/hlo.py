@@ -1,14 +1,38 @@
-"""HLO-text parsing: collective ops and their byte volumes.
+"""HLO/jaxpr trace inspection: collective ops, bytes, kernel launches.
 
 ``compiled.cost_analysis()`` has no collective-byte entry, so we parse the
 optimized HLO: every all-reduce / all-gather / reduce-scatter / all-to-all
 / collective-permute op, with bytes computed from the result (and operand)
-array shapes and ring-algorithm traffic factors.
+array shapes and ring-algorithm traffic factors. ``count_pallas_calls``
+walks a traced jaxpr instead — the launch-count oracle for the ragged
+single-launch ELL guarantee (tests + benchmarks share it).
 """
 from __future__ import annotations
 
 import dataclasses
 import re
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Number of ``pallas_call`` eqns in a jaxpr, including sub-jaxprs.
+
+    Accepts an open ``Jaxpr`` (``jax.make_jaxpr(fn)(x).jaxpr``); recurses
+    through every ClosedJaxpr/Jaxpr found in eqn params (pjit bodies,
+    control flow branches, ...).
+    """
+    import jax
+
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else (v,)):
+                if isinstance(x, jax.core.ClosedJaxpr):
+                    n += count_pallas_calls(x.jaxpr)
+                elif isinstance(x, jax.core.Jaxpr):
+                    n += count_pallas_calls(x)
+    return n
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -1,10 +1,21 @@
 """Fault-tolerant checkpointing: sharded npz, atomic rename, async writes.
 
-Layout:  <dir>/step_<n>/arrays.npz + manifest.json, written to a
-``.tmp-`` directory first and atomically renamed — a crash mid-write can
-never corrupt the latest checkpoint. ``latest_step`` scans committed
-directories only. An async writer thread overlaps serialization with the
-next training step (standard large-cluster practice); ``wait()`` joins it.
+Layout:  <dir>/step_<n>/arrays.npz + manifest.json + COMMITTED, written
+to a ``.tmp-`` directory first and atomically renamed — a crash
+mid-write can never corrupt the latest checkpoint. The ``COMMITTED``
+marker is written (and fsync'd) only *after* the rename lands: a reader
+— possibly a *different* CheckpointManager instance restoring while this
+one is mid-save — treats any step directory without the marker as
+in-flight and skips it, hiding a partially-visible directory on
+filesystems where the rename is not atomic. The remaining list-then-read
+window (a committed step rmtree'd for re-save between ``all_steps`` and
+the read) is handled by ``restore_latest`` falling back to the next
+committed step when the chosen one vanishes underneath it. Pre-marker
+checkpoints (manifest but no marker at construction time) are
+backfilled on init — safe because the old writer also renamed only
+fully-written directories. ``latest_step`` scans committed directories
+only. An async writer thread overlaps serialization with the next
+training step (standard large-cluster practice); ``wait()`` joins it.
 """
 from __future__ import annotations
 
@@ -16,6 +27,8 @@ import time
 
 import jax
 import numpy as np
+
+COMMIT_MARKER = "COMMITTED"
 
 
 def _flatten(tree):
@@ -32,6 +45,25 @@ class CheckpointManager:
         self.async_save = async_save
         self._thread = None
         os.makedirs(directory, exist_ok=True)
+        self._backfill_markers()
+
+    def _backfill_markers(self):
+        """Migrate pre-marker checkpoints: a step directory that already
+        exists at construction time with a complete manifest was written
+        by a writer that only renames fully-written directories, so it
+        is committed data — stamp it. (An in-flight save from a live
+        concurrent writer gets its marker ~instantly after the rename,
+        so stamping early is harmless there too.)"""
+        for d in os.listdir(self.dir):
+            if not d.startswith("step_"):
+                continue
+            path = os.path.join(self.dir, d)
+            if (os.path.exists(os.path.join(path, "manifest.json"))
+                    and os.path.exists(os.path.join(path, "arrays.npz"))
+                    and not os.path.exists(os.path.join(path, COMMIT_MARKER))):
+                with open(os.path.join(path, COMMIT_MARKER), "w") as f:
+                    f.write(json.dumps({"backfilled": True,
+                                        "time": time.time()}))
 
     # ------------------------------------------------------------ save -----
     def save(self, step: int, tree, extra: dict = None):
@@ -58,8 +90,15 @@ class CheckpointManager:
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)                      # atomic commit
+            shutil.rmtree(final)                   # step_<n> vanishes here...
+        os.rename(tmp, final)                      # ...and reappears here
+        # Commit handshake: only a marker written AFTER the rename makes
+        # the step visible to readers (other manager instances included).
+        marker = os.path.join(final, COMMIT_MARKER)
+        with open(marker, "w") as f:
+            f.write(json.dumps({"step": step, "time": time.time()}))
+            f.flush()
+            os.fsync(f.fileno())
         self._gc()
 
     def _gc(self):
@@ -75,10 +114,18 @@ class CheckpointManager:
 
     # --------------------------------------------------------- restore -----
     def all_steps(self):
+        """Steps with a complete COMMITTED handshake (manifest + marker).
+
+        A directory missing the marker is an in-flight write from some
+        manager instance (this one or another) — skipping it is what
+        closes the restore-during-save race.
+        """
         out = []
         for d in os.listdir(self.dir):
             if d.startswith("step_"):
-                if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                if (os.path.exists(os.path.join(self.dir, d, "manifest.json"))
+                        and os.path.exists(
+                            os.path.join(self.dir, d, COMMIT_MARKER))):
                     out.append(int(d.split("_")[1]))
         return sorted(out)
 
@@ -102,7 +149,15 @@ class CheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, leaves), manifest
 
     def restore_latest(self, like):
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return self.restore(step, like)
+        """Restore the newest committed step, falling back to the next
+        one if a concurrent re-save removed or clobbered it between
+        listing and reading (the list-then-read window the marker can't
+        cover)."""
+        import zipfile
+
+        for step in reversed(self.all_steps()):
+            try:
+                return self.restore(step, like)
+            except (OSError, zipfile.BadZipFile, json.JSONDecodeError):
+                continue
+        return None, None

@@ -1,8 +1,9 @@
 """Core H-GCN contribution: reordering, tri-partitioning, hybrid SpMM."""
 from .formats import (CSRMatrix, CooResidual, DenseTiles, EllTileBucket,
-                      PartitionMeta, TriPartition, csr_from_dense,
-                      csr_from_scipy, csr_to_scipy, pad_b_to_tiles,
-                      partition_to_dense, scatter_ell_partials)
+                      PartitionMeta, RaggedEll, TriPartition, csr_from_dense,
+                      csr_from_scipy, csr_to_scipy, ell_buckets,
+                      empty_ragged_ell, pad_b_to_tiles, partition_to_dense,
+                      scatter_ell_partials)
 from .grouping import Group, MovingAverage, group_rows, grouping_density
 from .hybrid_spmm import (gcn_forward, gcn_layer, hybrid_spmm,
                           hybrid_spmm_ref)
@@ -12,8 +13,9 @@ from .reorder import (apply_permutation, bandwidth, compute_permutation,
 
 __all__ = [
     "CSRMatrix", "CooResidual", "DenseTiles", "EllTileBucket",
-    "PartitionMeta", "TriPartition", "csr_from_dense", "csr_from_scipy",
-    "csr_to_scipy", "pad_b_to_tiles", "partition_to_dense",
+    "PartitionMeta", "RaggedEll", "TriPartition", "csr_from_dense",
+    "csr_from_scipy", "csr_to_scipy", "ell_buckets", "empty_ragged_ell",
+    "pad_b_to_tiles", "partition_to_dense",
     "scatter_ell_partials", "Group", "MovingAverage",
     "group_rows", "grouping_density", "gcn_forward", "gcn_layer",
     "hybrid_spmm", "hybrid_spmm_ref", "PartitionConfig",

@@ -8,10 +8,16 @@ keyword argument), never traced.
 The three components mirror the paper's three engines:
 
   * ``DenseTiles``  — tightly-clustered T×T tiles (dense AIE systolic array).
-  * ``EllBuckets``  — loosely-clustered tiles in tile-local ELLPACK form,
-                      bucketed by padded nnz-per-row K (sparse AIE engine,
-                      Algorithm 1 fixed-trip-count groups).
+  * ``RaggedEll``   — loosely-clustered tiles in tile-local ELLPACK form:
+                      ONE concatenated unit array padded to the partition's
+                      Kmax, with the real per-unit width carried in
+                      ``unit_k`` (sparse AIE engine — K is a per-tile
+                      runtime parameter, not a per-kernel one).
   * ``CooResidual`` — scattered nnz in COO (PL row-wise SpMM engine).
+
+The legacy per-K view (``EllTileBucket``) is *derived* from the ragged
+array via ``ell_buckets`` for the historical "fused"/"loop" dispatches;
+the device format of record is the single ragged array.
 
 Invariant: dense + ell + coo exactly reconstructs A (padding values are 0).
 """
@@ -42,7 +48,7 @@ class DenseTiles(NamedTuple):
 
 
 class EllTileBucket(NamedTuple):
-    """One fixed-K bucket of ELL *units* (Algorithm 1 groups, coalesced by K).
+    """Legacy per-K view of ELL *units* (Algorithm 1 groups, coalesced by K).
 
     A unit is an R_BLOCK×K slab: R_BLOCK consecutive rows of one Algorithm-1
     group restricted to one T×T tile, every row padded to exactly K
@@ -50,12 +56,85 @@ class EllTileBucket(NamedTuple):
     0 * B[0] == 0); padded *rows* carry the sentinel row id
     ``n_row_tiles * T`` and are dropped by the output scatter. Column
     indices are tile-local (< T) so a single B tile covers the gather.
+
+    Buckets are no longer stored on ``TriPartition``; they are derived
+    from ``RaggedEll`` by ``ell_buckets`` for the "fused"/"loop" A/B
+    dispatches (one kernel launch per K).
     """
 
     cols: jnp.ndarray      # [n_units, R_BLOCK, K] int32 — tile-local cols
     vals: jnp.ndarray      # [n_units, R_BLOCK, K] float32
     rows: jnp.ndarray      # [n_units, R_BLOCK] int32 — global output rows
     tile_col: jnp.ndarray  # [n_units] int32 — which T-wide column tile of B
+
+
+class RaggedEll(NamedTuple):
+    """ALL ELL units in one concatenated array, padded to the global Kmax.
+
+    The per-unit real width lives in ``unit_k``; entries at or past a
+    unit's K are zero (``vals == 0``, ``cols == 0`` — value-neutral under
+    the gather+FMA). Units are ordered by ascending K so the legacy
+    fixed-K buckets are recoverable as static slices
+    (``PartitionMeta.ell_segments`` records the (K, n_units) runs).
+    Padded *rows* carry the sentinel row id ``n_row_tiles * T`` exactly
+    like the bucket form. One SpMM issues ONE kernel launch over this
+    array regardless of how many distinct K widths the graph produced.
+    """
+
+    cols: jnp.ndarray      # [U, R_BLOCK, Kmax] int32 — tile-local cols
+    vals: jnp.ndarray      # [U, R_BLOCK, Kmax] float32
+    rows: jnp.ndarray      # [U, R_BLOCK] int32 — global output rows
+    tile_col: jnp.ndarray  # [U] int32 — which T-wide column tile of B
+    unit_k: jnp.ndarray    # [U] int32 — real K of each unit (<= Kmax)
+
+    @property
+    def n_units(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def r_block(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def kmax(self) -> int:
+        return self.cols.shape[2]
+
+
+def empty_ragged_ell(r_block: int = 8, kmax: int = 0) -> RaggedEll:
+    """A RaggedEll with zero units (graphs with no sparse-engine work)."""
+    return RaggedEll(
+        cols=jnp.zeros((0, r_block, kmax), jnp.int32),
+        vals=jnp.zeros((0, r_block, kmax), jnp.float32),
+        rows=jnp.zeros((0, r_block), jnp.int32),
+        tile_col=jnp.zeros((0,), jnp.int32),
+        unit_k=jnp.zeros((0,), jnp.int32),
+    )
+
+
+def ell_buckets(ell: RaggedEll, segments: tuple = ()) -> tuple:
+    """Derive the legacy fixed-K bucket tuple from the ragged array.
+
+    ``segments`` is the static ((K, n_units), ...) run-length description
+    of the unit axis (``PartitionMeta.ell_segments``); when absent, the
+    whole array is treated as one Kmax-wide bucket (correct because
+    entries past ``unit_k`` are zero, just more padded MACs). Slices are
+    static, so this works under jit.
+    """
+    u = int(ell.cols.shape[0])
+    if u == 0:
+        return ()
+    segs = tuple(segments) if segments else ((int(ell.cols.shape[2]), u),)
+    if sum(n for _, n in segs) != u:
+        raise ValueError(f"ell_segments {segs} do not cover {u} units")
+    out, start = [], 0
+    for k, n in segs:
+        sl = slice(start, start + n)
+        out.append(EllTileBucket(cols=ell.cols[sl, :, :k],
+                                 vals=ell.vals[sl, :, :k],
+                                 rows=ell.rows[sl],
+                                 tile_col=ell.tile_col[sl]))
+        start += n
+    return tuple(out)
 
 
 class CooResidual(NamedTuple):
@@ -70,7 +149,7 @@ class TriPartition(NamedTuple):
     """The full heterogeneous decomposition of a sparse matrix A."""
 
     dense: DenseTiles
-    ell: tuple            # tuple[EllTileBucket, ...] — one per distinct K
+    ell: RaggedEll        # one concatenated unit array, per-unit K
     coo: CooResidual
 
 
@@ -81,7 +160,7 @@ class PartitionMeta:
     n_rows: int
     n_cols: int
     tile: int                  # T — tile edge (paper: 64; TPU default: 128)
-    ell_ks: tuple              # K of each ELL bucket, same order as part.ell
+    ell_ks: tuple              # distinct ELL K widths, ascending
     n_row_tiles: int
     n_col_tiles: int
     n_dense_tiles: int
@@ -90,6 +169,11 @@ class PartitionMeta:
     nnz_ell_padded: int        # nnz incl. padding actually computed
     nnz_coo: int
     density_thresholds: tuple  # (d_dense, d_scatter)
+    # Static run-length description of the ragged unit axis:
+    # ((K, n_units), ...) in ascending-K unit order. Lets the legacy
+    # "fused"/"loop" dispatches recover fixed-K buckets as static
+    # slices; class metas collapse it to a single (Kmax, U) run.
+    ell_segments: tuple = ()
 
     @property
     def nnz(self) -> int:
@@ -118,7 +202,7 @@ class PartitionMeta:
             f"| ell {self.nnz_ell} ({self.nnz_ell/tot:.1%}, pad-overhead "
             f"{(self.nnz_ell_padded - self.nnz_ell)/max(self.nnz_ell,1):.2f}x) "
             f"| coo {self.nnz_coo} ({self.nnz_coo/tot:.1%}) "
-            f"| buckets K={list(self.ell_ks)}"
+            f"| ragged K={list(self.ell_ks)}"
         )
 
 
@@ -195,22 +279,22 @@ def partition_to_dense(part: TriPartition, meta: PartitionMeta) -> np.ndarray:
         out[r : r + T, c : c + T] += tiles[t]
 
     pad_row = meta.n_row_tiles * T
-    for bucket in part.ell:
-        cols = np.asarray(bucket.cols)
-        vals = np.asarray(bucket.vals)
-        rows = np.asarray(bucket.rows)
-        bcol = np.asarray(bucket.tile_col)
-        n_units, R, K = cols.shape
-        for u in range(n_units):
-            c0 = int(bcol[u]) * T
-            for r in range(R):
-                gr = int(rows[u, r])
-                if gr >= pad_row:
-                    continue
-                for k in range(K):
-                    v = vals[u, r, k]
-                    if v != 0.0:
-                        out[gr, c0 + cols[u, r, k]] += v
+    cols = np.asarray(part.ell.cols)
+    vals = np.asarray(part.ell.vals)
+    rows = np.asarray(part.ell.rows)
+    bcol = np.asarray(part.ell.tile_col)
+    unit_k = np.asarray(part.ell.unit_k)
+    n_units, R, _ = cols.shape
+    for u in range(n_units):
+        c0 = int(bcol[u]) * T
+        for r in range(R):
+            gr = int(rows[u, r])
+            if gr >= pad_row:
+                continue
+            for k in range(int(unit_k[u])):
+                v = vals[u, r, k]
+                if v != 0.0:
+                    out[gr, c0 + cols[u, r, k]] += v
 
     rows = np.asarray(part.coo.rows)
     cols = np.asarray(part.coo.cols)

@@ -24,8 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .formats import (PartitionMeta, TriPartition, pad_b_to_tiles,
-                      scatter_ell_partials)
+from .formats import (PartitionMeta, TriPartition, ell_buckets,
+                      pad_b_to_tiles, scatter_ell_partials)
 
 
 def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
@@ -58,23 +58,44 @@ def _ell_bucket_partials(bucket, bt: jnp.ndarray) -> jnp.ndarray:
     return acc.reshape(u * r, f)
 
 
+def _ragged_partials(ell, bt: jnp.ndarray) -> jnp.ndarray:
+    """All units' gather+FMA partials in one masked Kmax pass, [U*R, F].
+
+    Delegates to the kernel oracle so the XLA path and the Pallas
+    kernel's validation target are one implementation (the
+    mask-the-values structure there keeps live lanes bit-identical to
+    the "fused" dispatch).
+    """
+    from repro.kernels.ref import ragged_ell_spmm_ref
+    u, r, _ = ell.cols.shape
+    prod = ragged_ell_spmm_ref(ell.cols, ell.vals, ell.tile_col,
+                               ell.unit_k, bt)
+    return prod.reshape(u * r, bt.shape[-1])
+
+
 def ell_matmul(part: TriPartition, b: jnp.ndarray, meta: PartitionMeta,
-               *, dispatch: str = "fused") -> jnp.ndarray:
+               *, dispatch: str = "ragged") -> jnp.ndarray:
     """Sparse-engine partial product, as padded [nrt*T, F].
 
-    ``dispatch="fused"`` concatenates every bucket's partial products and
-    unit rows and emits ONE scatter-add over all buckets; ``"loop"`` is
-    the historical one-scatter-per-bucket path kept for A/B testing. Both
+    ``dispatch="ragged"`` (default) runs ONE masked Kmax pass over the
+    concatenated unit array — the XLA mirror of the single-launch Pallas
+    kernel. ``"fused"`` / ``"loop"`` are the legacy per-K paths kept for
+    A/B parity (buckets derived from the ragged array): "fused" emits one
+    scatter-add over all buckets, "loop" one per bucket. All three
     produce identical results up to float addition order.
     """
-    if dispatch not in ("fused", "loop"):
+    if dispatch not in ("ragged", "fused", "loop"):
         raise ValueError(f"unknown ell dispatch {dispatch!r}")
     f = b.shape[1]
-    if not part.ell:
+    if part.ell.cols.shape[0] == 0:
         return jnp.zeros((meta.n_padded_rows, f), jnp.float32)
     bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, meta.tile, f)
-    partials = [_ell_bucket_partials(bucket, bt) for bucket in part.ell]
-    rows = [bucket.rows.reshape(-1) for bucket in part.ell]
+    if dispatch == "ragged":
+        return scatter_ell_partials(part.ell.rows.reshape(-1),
+                                    _ragged_partials(part.ell, bt), meta)
+    buckets = ell_buckets(part.ell, meta.ell_segments)
+    partials = [_ell_bucket_partials(bucket, bt) for bucket in buckets]
+    rows = [bucket.rows.reshape(-1) for bucket in buckets]
     if dispatch == "fused":
         return scatter_ell_partials(jnp.concatenate(rows),
                                     jnp.concatenate(partials), meta)
@@ -96,7 +117,7 @@ def coo_matmul(part: TriPartition, b: jnp.ndarray,
 
 def hybrid_spmm(part: TriPartition, b: jnp.ndarray, *, meta: PartitionMeta,
                 backend: str = "xla",
-                ell_dispatch: str = "fused") -> jnp.ndarray:
+                ell_dispatch: str = "ragged") -> jnp.ndarray:
     """Y = A @ B via the three engines. Returns [n_rows, F]."""
     if backend == "pallas":
         from repro.kernels import ops as kops
@@ -124,7 +145,7 @@ def hybrid_spmm_ref(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
               meta: PartitionMeta, backend: str = "xla",
               block_cols: int = 0, activation=None,
-              ell_dispatch: str = "fused") -> jnp.ndarray:
+              ell_dispatch: str = "ragged") -> jnp.ndarray:
     """One GCN layer  sigma(A @ (X @ W))  in combination-first order.
 
     ``block_cols > 0`` enables the paper's fine-grained pipelining: W's
@@ -156,7 +177,7 @@ def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
 def gcn_forward(part: TriPartition, x: jnp.ndarray, weights, *,
                 meta: PartitionMeta, backend: str = "xla",
                 block_cols: int = 0,
-                ell_dispatch: str = "fused") -> jnp.ndarray:
+                ell_dispatch: str = "ragged") -> jnp.ndarray:
     """The paper's 2-layer vanilla GCN:  softmax-free inference logits
     X2 = A·relu(A·X·W1)·W2   (activation on hidden layer only)."""
     h = x

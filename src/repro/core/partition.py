@@ -16,9 +16,13 @@ codegen):
          is padded to its max width K.
        - if the band's post-padding density >= d_dense, emit dense tensor
          PEs for the whole band instead (Alg. 2 lines 18-19).
-  3. Lay out the sparse engine's work as fixed-shape ELL *units* of
-     R_BLOCK×K entries, bucketed by K — the TPU analogue of "generate
-     sparse tensor PE code for this group" (static shapes == static loops).
+  3. Lay out the sparse engine's work as ELL *units* of R_BLOCK×K
+     entries, concatenated into ONE ragged array padded to the global
+     Kmax with the per-unit K carried alongside (``RaggedEll``) — the
+     TPU analogue of "generate sparse tensor PE code for this group"
+     where K is a per-tile runtime parameter, not a per-kernel one.
+     Units are ordered by ascending K so the legacy fixed-K buckets
+     stay derivable as static slices (``meta.ell_segments``).
 
 The construction is exact: dense + ELL + COO reconstructs A bit-for-bit
 (`formats.partition_to_dense` is the oracle used in tests).
@@ -29,8 +33,8 @@ import dataclasses
 
 import numpy as np
 
-from .formats import (CSRMatrix, CooResidual, DenseTiles, EllTileBucket,
-                      PartitionMeta, TriPartition, csr_to_scipy)
+from .formats import (CSRMatrix, CooResidual, DenseTiles, PartitionMeta,
+                      RaggedEll, TriPartition, csr_to_scipy)
 from .grouping import Group, group_rows, groups_cover_exactly
 
 # Row-block height of one ELL unit. 8 == f32 sublane count on TPU; every
@@ -243,17 +247,29 @@ def analyze_and_partition(a: CSRMatrix, cfg: PartitionConfig = PartitionConfig()
                         tile_row=np.zeros(0, np.int32),
                         tile_col=np.zeros(0, np.int32))
 
-    buckets = []
+    # One concatenated ragged array, ascending-K unit order; each unit's
+    # cols/vals occupy [:K] of the Kmax-wide slab (the rest stays zero).
     ks = sorted(units.keys())
+    kmax = ks[-1] if ks else 0
+    n_units_total = sum(len(units[K]) for K in ks)
+    r_cols = np.zeros((n_units_total, cfg.r_block, kmax), np.int32)
+    r_vals = np.zeros((n_units_total, cfg.r_block, kmax), np.float32)
+    r_rows = np.zeros((n_units_total, cfg.r_block), np.int32)
+    r_tcol = np.zeros(n_units_total, np.int32)
+    r_k = np.zeros(n_units_total, np.int32)
+    segments = []
+    at = 0
     for K in ks:
-        us = units[K]
-        # one "tile" per unit: [n_units, R_BLOCK, K]
-        buckets.append(EllTileBucket(
-            cols=np.stack([u[2] for u in us]).astype(np.int32),
-            vals=np.stack([u[3] for u in us]).astype(np.float32),
-            rows=np.stack([u[0] for u in us]).astype(np.int32),
-            tile_col=np.asarray([u[1] for u in us], np.int32),
-        ))
+        segments.append((int(K), len(units[K])))
+        for urows, tcol, ucols, uvals in units[K]:
+            r_cols[at, :, :K] = ucols
+            r_vals[at, :, :K] = uvals
+            r_rows[at] = urows
+            r_tcol[at] = tcol
+            r_k[at] = K
+            at += 1
+    ragged = RaggedEll(cols=r_cols, vals=r_vals, rows=r_rows,
+                       tile_col=r_tcol, unit_k=r_k)
 
     coo = CooResidual(
         rows=np.concatenate(coo_rows).astype(np.int32)
@@ -273,6 +289,7 @@ def analyze_and_partition(a: CSRMatrix, cfg: PartitionConfig = PartitionConfig()
         nnz_ell_padded=nnz_ell_padded,
         nnz_coo=int(coo.vals.shape[0]),
         density_thresholds=(cfg.d_dense, cfg.d_scatter),
+        ell_segments=tuple(segments),
     )
-    part = TriPartition(dense=dt, ell=tuple(buckets), coo=coo)
+    part = TriPartition(dense=dt, ell=ragged, coo=coo)
     return part, meta, reports

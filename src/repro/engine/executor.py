@@ -1,10 +1,16 @@
-"""Compiled-executor cache over shape classes (serving layer, ISSUE 1).
+"""Bounded LRU cache of compiled executors over shape classes.
 
 One jit'd executor per (kind, shape-class, feature widths, backend,
 dispatch knobs); every graph padded into the same class reuses the
 executor — and therefore its trace and XLA executable — with zero
 recompilation. Batched variants vmap the same forward over a stacked
 class group for `Engine.serve_batch`.
+
+The cache is LRU-bounded (``max_entries``) so long-lived multi-tenant
+servers can't grow it without limit: the least-recently-used executor is
+dropped (and garbage-collects its XLA executable) when a new build would
+exceed the bound. Per-shape-class hit/miss/eviction counters feed
+``Engine.stats()`` telemetry.
 
 The closed-over PartitionMeta comes from ``ShapeClass.to_meta()`` only,
 never from a member graph, so per-graph facts can't split a class.
@@ -13,6 +19,7 @@ so executor calls pay no host-to-device transfer for the graph itself.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
@@ -27,32 +34,65 @@ from .shape_class import ShapeClass
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @property
     def total(self) -> int:
         return self.hits + self.misses
 
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
 
 class ExecutorCache:
-    """jit'd executors keyed by (kind, shape class, widths, backend...)."""
+    """jit'd executors keyed by (kind, shape class, widths, backend...).
+
+    Every key's second element is the ShapeClass, which is how the
+    per-class telemetry attributes hits/misses/evictions.
+    """
 
     def __init__(self, backend: str = "xla", block_cols: int = 0,
-                 ell_dispatch: str = "fused"):
+                 ell_dispatch: str = "ragged", max_entries: int = 128):
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self.backend = backend
         self.block_cols = block_cols
         self.ell_dispatch = ell_dispatch
-        self._fns: dict = {}
+        self.max_entries = max_entries
+        self._fns: collections.OrderedDict = collections.OrderedDict()
         self.stats = CacheStats()
+        self._class_stats: dict = {}   # ShapeClass -> CacheStats
+
+    def _per_class(self, sc: ShapeClass) -> CacheStats:
+        st = self._class_stats.get(sc)
+        if st is None:
+            st = self._class_stats[sc] = CacheStats()
+        return st
 
     def _get(self, key, build):
+        sc = key[1]
+        cls = self._per_class(sc)
         fn = self._fns.get(key)
         if fn is None:
             self.stats.misses += 1
+            cls.misses += 1
             fn = build()
             self._fns[key] = fn
+            while len(self._fns) > self.max_entries:
+                old_key, _ = self._fns.popitem(last=False)   # LRU out
+                self.stats.evictions += 1
+                self._per_class(old_key[1]).evictions += 1
         else:
+            self._fns.move_to_end(key)                       # mark MRU
             self.stats.hits += 1
+            cls.hits += 1
         return fn
+
+    def class_stats(self) -> dict:
+        """Per-shape-class telemetry: {summary str: hit/miss/evict dict}."""
+        return {sc.summary(): st.as_dict()
+                for sc, st in self._class_stats.items()}
 
     # ------------------------------------------------------------ spmm -----
     def spmm(self, sc: ShapeClass, f: int):
@@ -110,5 +150,6 @@ class ExecutorCache:
         for key in self._fns:
             kinds[key[0]] = kinds.get(key[0], 0) + 1
         return (f"ExecutorCache backend={self.backend} "
-                f"executors={len(self._fns)} ({kinds}) "
-                f"hits={self.stats.hits} misses={self.stats.misses}")
+                f"executors={len(self._fns)}/{self.max_entries} ({kinds}) "
+                f"hits={self.stats.hits} misses={self.stats.misses} "
+                f"evictions={self.stats.evictions}")

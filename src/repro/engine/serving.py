@@ -57,12 +57,13 @@ class Engine:
     def __init__(self, *, policy: ShapePolicy = ShapePolicy(),
                  partition_cfg: PartitionConfig = PartitionConfig(tile=64),
                  backend: str = "xla", block_cols: int = 0,
-                 ell_dispatch: str = "fused"):
+                 ell_dispatch: str = "ragged", executor_max_entries: int = 128):
         self.policy = policy
         self.partition_cfg = partition_cfg
         self.registry = ClassRegistry(policy)
         self.executors = ExecutorCache(backend=backend, block_cols=block_cols,
-                                       ell_dispatch=ell_dispatch)
+                                       ell_dispatch=ell_dispatch,
+                                       max_entries=executor_max_entries)
         self._graphs: dict = {}
         # serve_batch group stacks, keyed by the sorted member-name
         # tuple: partitions/weights don't change between register calls,
@@ -211,8 +212,11 @@ class Engine:
             "graphs": len(self._graphs),
             "shape_classes": len(classes),
             "executors": len(self.executors._fns),
+            "executor_max_entries": self.executors.max_entries,
             "cache_hits": self.executors.stats.hits,
             "cache_misses": self.executors.stats.misses,
+            "cache_evictions": self.executors.stats.evictions,
+            "per_class": self.executors.class_stats(),
         }
 
     def summary(self) -> str:

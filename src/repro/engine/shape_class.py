@@ -1,4 +1,4 @@
-"""Shape-class canonicalization of TriPartitions (serving layer, ISSUE 1).
+"""Shape-class canonicalization of TriPartitions (serving layer).
 
 The paper's premise (§IV) is ahead-of-time, density-aware mapping of SpMM
 work onto *fixed-shape* engines; the JAX analogue is that every distinct
@@ -8,16 +8,27 @@ canonical static shapes — a **shape class** — so structurally-similar
 graphs share one compiled executor:
 
   * dense tile count          -> geometric (power-of-two) bucket
-  * ELL bucket K widths       -> snapped up a fixed K ladder, buckets
-                                 that land on the same rung are merged
-  * ELL unit count per rung   -> geometric bucket
+  * ELL ragged array          -> (Kmax, total units): Kmax snapped up the
+                                 K ladder, unit count geometric-bucketed,
+                                 reuse bounded by a padded-MAC budget
   * COO nnz                   -> geometric bucket
   * row/col tile counts       -> geometric bucket (bounds B padding)
 
-All padding is value-neutral: zero tiles, zero ELL entries, sentinel
-output rows, zero COO triples — the padded partition computes exactly the
-same product as the original (`pad_to_class` is tested against
-`partition_to_dense`).
+**Retired K-ladder semantics.** The pre-ragged classing carried a per-K
+rung *set* (``ell=((K, n_units), ...)``) because the executor launched
+one fixed-K kernel per rung: every class had to pre-commit to which K
+widths existed, carry all-padding units on every absent rung
+(``full_ladder``), and check capacity rung by rung. With the single
+ragged launch, K is a *runtime* per-unit value — the only shape facts
+are the slab width ``Kmax`` and the unit count, so a class is just
+``(ell_kmax, ell_units)`` and the fit check bounds total padded MACs
+instead of per-rung counts. Fewer classes, no all-padding rung work,
+and ``pad_to_class`` is a plain 2-axis pad.
+
+All padding is value-neutral: zero tiles, zero ELL entries (``unit_k``
+pads with 0), sentinel output rows, zero COO triples — the padded
+partition computes exactly the same product as the original
+(`pad_to_class` is tested against `partition_to_dense`).
 """
 from __future__ import annotations
 
@@ -25,14 +36,13 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.formats import (CooResidual, DenseTiles, EllTileBucket,
-                                PartitionMeta, TriPartition)
+from repro.core.formats import (CooResidual, DenseTiles, PartitionMeta,
+                                RaggedEll, TriPartition)
 
-# Canonical ELL widths. Power-of-two rungs bound K-padding waste at 2x
-# on the ELL slice; more importantly the ladder is SMALL, so a class can
-# carry every rung and the rung *set* stops depending on which K values
-# a particular graph happened to produce — that set variance is what
-# fragments classes and defeats executor sharing.
+# Canonical slab widths for the ragged ELL array. Power-of-two rungs
+# bound Kmax-padding waste at 2x on the widest unit; unlike the retired
+# per-rung classing, only the partition's MAXIMUM K is snapped — the
+# per-unit K stays exact in ``unit_k``.
 DEFAULT_K_LADDER = (1, 2, 4, 8, 16, 32, 64, 128)
 
 
@@ -68,14 +78,10 @@ class ShapePolicy:
     """
 
     k_ladder: tuple = DEFAULT_K_LADDER
-    unit_granule: int = 4        # ELL units per K rung
+    unit_granule: int = 4        # ragged ELL unit count
     dense_tile_granule: int = 4  # dense tile count
     coo_granule: int = 256       # COO nnz
     row_tile_granule: int = 4    # n_row_tiles / n_col_tiles
-    # Carry EVERY ladder rung up to the tile size in every class (absent
-    # rungs get one granule of all-padding units — negligible zero work)
-    # so stray high-K rows in a later graph never force a new class.
-    full_ladder: bool = True
     # ClassRegistry knobs: a newly-founded class over-allocates every
     # count by ``growth`` (headroom for the next similar graph), and a
     # graph reuses an existing class only while the class's padded work
@@ -94,14 +100,17 @@ class ShapeClass:
     """A canonical static partition signature — the executor-cache key.
 
     Two graphs with equal ShapeClass (and equal feature widths) run
-    through the *same* jit'd executor with zero retracing.
+    through the *same* jit'd executor with zero retracing. The ELL slice
+    is fully described by ``(ell_kmax, ell_units)`` — the ragged kernel
+    takes per-unit K as data, so no K set is part of the shape.
     """
 
     tile: int
     n_row_tiles: int
     n_col_tiles: int
     n_dense_tiles: int
-    ell: tuple                # sorted ((K, n_units), ...) after snapping
+    ell_kmax: int             # ragged slab width (ladder-snapped)
+    ell_units: int            # ragged unit capacity
     coo_nnz: int
     r_block: int = 8          # unit row height — every member must match
 
@@ -110,39 +119,41 @@ class ShapeClass:
 
         nnz statistics are per-graph facts, not shape facts, so they are
         zeroed here — the executor never reads them, and keeping them
-        would split classes that should share a trace.
+        would split classes that should share a trace. The segment map
+        collapses to one (Kmax, U) run: a padded member's units are all
+        Kmax-wide slabs as far as static shapes go (``unit_k`` carries
+        the live widths).
         """
         return PartitionMeta(
             n_rows=self.n_row_tiles * self.tile,
             n_cols=self.n_col_tiles * self.tile,
             tile=self.tile,
-            ell_ks=tuple(k for k, _ in self.ell),
+            ell_ks=(self.ell_kmax,) if self.ell_units else (),
             n_row_tiles=self.n_row_tiles,
             n_col_tiles=self.n_col_tiles,
             n_dense_tiles=self.n_dense_tiles,
             nnz_dense=0, nnz_ell=0, nnz_ell_padded=0, nnz_coo=0,
             density_thresholds=(0.0, 0.0),
+            ell_segments=((self.ell_kmax, self.ell_units),)
+            if self.ell_units else (),
         )
+
+    @property
+    def ell_mac_capacity(self) -> int:
+        """Padded MAC slots on the ELL slice (per output feature)."""
+        return self.ell_kmax * self.ell_units * self.r_block
 
     def summary(self) -> str:
         return (f"ShapeClass T={self.tile} tiles={self.n_row_tiles}x"
                 f"{self.n_col_tiles} dense={self.n_dense_tiles} "
-                f"ell={list(self.ell)} coo={self.coo_nnz}")
-
-
-def _merged_ell_counts(meta: PartitionMeta, part: TriPartition,
-                       ladder) -> dict:
-    """units-per-canonical-K after snapping each bucket up the ladder."""
-    counts: dict = {}
-    for k, bucket in zip(meta.ell_ks, part.ell):
-        ck = round_up_ladder(int(k), ladder)
-        counts[ck] = counts.get(ck, 0) + int(bucket.cols.shape[0])
-    return counts
+                f"ell=(Kmax={self.ell_kmax}, units={self.ell_units}) "
+                f"coo={self.coo_nnz}")
 
 
 def _part_r_block(part: TriPartition, default: int = 8) -> int:
-    """The partition's ELL unit row height (uniform across buckets)."""
-    return int(part.ell[0].rows.shape[1]) if part.ell else default
+    """The partition's ELL unit row height (array-carried, U may be 0)."""
+    r = int(part.ell.rows.shape[1]) if part.ell.rows.ndim == 2 else default
+    return r or default
 
 
 def shape_class_of(part: TriPartition, meta: PartitionMeta,
@@ -169,14 +180,15 @@ def shape_class_of(part: TriPartition, meta: PartitionMeta,
 
 @dataclasses.dataclass(frozen=True)
 class ClassNeed:
-    """A partition's exact static-shape requirements (after K snapping)."""
+    """A partition's exact static-shape requirements (pre-snapping)."""
 
     tile: int
     n_row_tiles: int
     n_col_tiles: int
     square: bool
     n_dense_tiles: int
-    rung_units: tuple         # sorted ((K, units), ...) on the ladder
+    ell_kmax: int             # widest unit's real K
+    ell_units: int            # real unit count
     coo_nnz: int
     r_block: int = 8
 
@@ -188,14 +200,15 @@ def _round_mult(x: int, granule: int) -> int:
 
 def class_requirements(part: TriPartition, meta: PartitionMeta,
                        policy: ShapePolicy = ShapePolicy()) -> ClassNeed:
-    counts = _merged_ell_counts(meta, part, policy.k_ladder)
+    unit_k = np.asarray(part.ell.unit_k)
     return ClassNeed(
         tile=meta.tile,
         n_row_tiles=meta.n_row_tiles,
         n_col_tiles=meta.n_col_tiles,
         square=meta.n_rows == meta.n_cols,
         n_dense_tiles=int(part.dense.tiles.shape[0]),
-        rung_units=tuple(sorted(counts.items())),
+        ell_kmax=int(unit_k.max()) if unit_k.size else 0,
+        ell_units=int(unit_k.size),
         coo_nnz=int(part.coo.vals.shape[0]),
         r_block=_part_r_block(part),
     )
@@ -211,7 +224,7 @@ def class_fits(need: ClassNeed, sc: ShapeClass,
 
     if sc.tile != need.tile:
         return False
-    if need.rung_units and sc.r_block != need.r_block:
+    if need.ell_units and sc.r_block != need.r_block:
         return False
     if need.square and sc.n_row_tiles != sc.n_col_tiles:
         return False
@@ -225,24 +238,23 @@ def class_fits(need: ClassNeed, sc: ShapeClass,
     if not ok(sc.coo_nnz, need.coo_nnz, policy.coo_granule):
         return False
 
-    # ELL: route each needed rung to the class rung it would pad into,
-    # check per-rung capacity, then bound total padded MACs.
-    class_rungs = tuple(k for k, _ in sc.ell)
-    cap = dict(sc.ell)
-    load: dict = {}
-    need_ops = 0
-    for k, u in need.rung_units:
-        if not class_rungs or k > class_rungs[-1]:
+    # ELL: the ragged kernel needs only slab width (Kmax) and unit
+    # capacity — no rung set. Two waste guards replace the retired
+    # per-rung checks: the slab-width bound (joining a much wider class
+    # turns every unit's masked tail into dead trips) and the
+    # padded-MAC budget (all-padding capacity units are zero work the
+    # kernel still executes at full Kmax width).
+    if sc.ell_kmax < need.ell_kmax or sc.ell_units < need.ell_units:
+        return False
+    if need.ell_units:
+        if sc.ell_kmax > slack * need.ell_kmax:
             return False
-        ck = round_up_ladder(k, class_rungs)
-        load[ck] = load.get(ck, 0) + u
-        need_ops += ck * u
-    for ck, u in load.items():
-        if u > cap[ck]:
-            return False
-    class_ops = sum(k * n for k, n in sc.ell)
-    floor = policy.unit_granule * sum(class_rungs)   # one granule per rung
-    return class_ops <= slack * need_ops + floor
+        class_macs = sc.ell_kmax * sc.ell_units
+        budget = (slack * sc.ell_kmax * need.ell_units
+                  + policy.unit_granule * sc.ell_kmax)
+        return class_macs <= budget
+    # a graph with no ELL work only joins classes with negligible slabs
+    return sc.ell_units <= policy.unit_granule
 
 
 def grow_class(need: ClassNeed,
@@ -253,19 +265,20 @@ def grow_class(need: ClassNeed,
     nct = round_up_pow2(need.n_col_tiles, policy.row_tile_granule)
     if need.square:
         nrt = nct = max(nrt, nct)
-    counts = {k: _round_mult(int(u * g), policy.unit_granule)
-              for k, u in need.rung_units}
-    if policy.full_ladder and counts:
-        for rung in policy.k_ladder:
-            if rung <= need.tile:
-                counts.setdefault(rung, policy.unit_granule)
     return ShapeClass(
         tile=need.tile,
         n_row_tiles=nrt,
         n_col_tiles=nct,
         n_dense_tiles=_round_mult(int(need.n_dense_tiles * g),
                                   policy.dense_tile_granule),
-        ell=tuple(sorted(counts.items())),
+        # Kmax gets growth headroom too (capped at the tile edge — a
+        # tile-local row can never exceed T nnz) so family members whose
+        # widest unit jitters past the founder's still share the class.
+        ell_kmax=round_up_ladder(min(int(need.ell_kmax * g), need.tile),
+                                 policy.k_ladder)
+        if need.ell_units else 0,
+        ell_units=_round_mult(int(need.ell_units * g), policy.unit_granule)
+        if need.ell_units else 0,
         coo_nnz=_round_mult(int(need.coo_nnz * policy.coo_growth),
                             policy.coo_granule),
         r_block=need.r_block,
@@ -299,8 +312,10 @@ def pad_to_class(part: TriPartition, meta: PartitionMeta,
     value-neutral by construction:
 
       * dense: zero tiles scattered onto block-row 0 (adds 0)
-      * ELL:   zero (cols, vals) K-columns; whole padding units carry the
-               padded meta's sentinel output row
+      * ELL:   the ragged slab widens to the class Kmax (zero cols/vals
+               columns, ``unit_k`` untouched) and gains all-padding
+               units (``unit_k == 0``) carrying the padded meta's
+               sentinel output row
       * COO:   (row 0, col 0, val 0) triples (adds 0)
     """
     if sc.tile != meta.tile:
@@ -329,53 +344,41 @@ def pad_to_class(part: TriPartition, meta: PartitionMeta,
                                  np.zeros(pad_t, np.int32)]),
     )
 
-    # ---- ELL: merge buckets onto ladder rungs, then pad unit counts -------
+    # ---- ELL: widen the slab to class Kmax, append all-padding units ------
     sentinel_old = meta.ell_sentinel_row
     sentinel_new = pmeta.ell_sentinel_row
-    ladder = {k: n for k, n in sc.ell}
-    by_k: dict = {}
-    for k, bucket in zip(meta.ell_ks, part.ell):
-        ck = round_up_ladder(int(k), tuple(ladder))
-        if ck not in ladder:
-            raise ValueError(f"K={k} snaps to rung {ck} absent from class")
-        by_k.setdefault(ck, []).append(bucket)
-
-    buckets = []
-    for ck, n_units_class in sc.ell:
-        members = by_k.get(ck, [])
-        cols_l, vals_l, rows_l, tcol_l = [], [], [], []
-        for b in members:
-            u, r, k = b.cols.shape
-            if r != sc.r_block:
-                raise ValueError(f"unit row height {r} != class r_block "
-                                 f"{sc.r_block}")
-            cols = np.zeros((u, r, ck), np.int32)
-            vals = np.zeros((u, r, ck), np.float32)
-            cols[:, :, :k] = np.asarray(b.cols, np.int32)
-            vals[:, :, :k] = np.asarray(b.vals, np.float32)
-            rows = np.asarray(b.rows, np.int32).copy()
-            # remap the source partition's sentinel into the padded space
-            rows[rows == sentinel_old] = sentinel_new
-            cols_l.append(cols)
-            vals_l.append(vals)
-            rows_l.append(rows)
-            tcol_l.append(np.asarray(b.tile_col, np.int32))
-        n_units = sum(c.shape[0] for c in cols_l)
-        if n_units > n_units_class:
-            raise ValueError(f"class rung K={ck} holds {n_units_class} "
-                             f"units, partition has {n_units}")
-        pad_u = n_units_class - n_units
-        rb = sc.r_block
-        cols_l.append(np.zeros((pad_u, rb, ck), np.int32))
-        vals_l.append(np.zeros((pad_u, rb, ck), np.float32))
-        rows_l.append(np.full((pad_u, rb), sentinel_new, np.int32))
-        tcol_l.append(np.zeros(pad_u, np.int32))
-        buckets.append(EllTileBucket(
-            cols=np.concatenate(cols_l, axis=0),
-            vals=np.concatenate(vals_l, axis=0),
-            rows=np.concatenate(rows_l, axis=0),
-            tile_col=np.concatenate(tcol_l),
-        ))
+    u, rb, kmax = (int(s) for s in part.ell.cols.shape)
+    if u > sc.ell_units:
+        raise ValueError(f"class holds {sc.ell_units} ELL units, "
+                         f"partition has {u}")
+    if u and kmax > sc.ell_kmax:
+        raise ValueError(f"class slab Kmax={sc.ell_kmax} narrower than "
+                         f"partition Kmax={kmax}")
+    if u and rb != sc.r_block:
+        raise ValueError(f"unit row height {rb} != class r_block "
+                         f"{sc.r_block}")
+    rb = sc.r_block
+    pad_u = sc.ell_units - u
+    cols = np.zeros((sc.ell_units, rb, sc.ell_kmax), np.int32)
+    vals = np.zeros((sc.ell_units, rb, sc.ell_kmax), np.float32)
+    if u:
+        cols[:u, :, :kmax] = np.asarray(part.ell.cols, np.int32)
+        vals[:u, :, :kmax] = np.asarray(part.ell.vals, np.float32)
+        rows = np.asarray(part.ell.rows, np.int32).copy()
+        # remap the source partition's sentinel into the padded space
+        rows[rows == sentinel_old] = sentinel_new
+    else:
+        rows = np.zeros((0, rb), np.int32)
+    ell = RaggedEll(
+        cols=cols,
+        vals=vals,
+        rows=np.concatenate(
+            [rows, np.full((pad_u, rb), sentinel_new, np.int32)], axis=0),
+        tile_col=np.concatenate([np.asarray(part.ell.tile_col, np.int32),
+                                 np.zeros(pad_u, np.int32)]),
+        unit_k=np.concatenate([np.asarray(part.ell.unit_k, np.int32),
+                               np.zeros(pad_u, np.int32)]),
+    )
 
     # ---- COO --------------------------------------------------------------
     nnz = int(part.coo.vals.shape[0])
@@ -392,4 +395,4 @@ def pad_to_class(part: TriPartition, meta: PartitionMeta,
                              np.zeros(pad_c, np.float32)]),
     )
 
-    return TriPartition(dense=dense, ell=tuple(buckets), coo=coo), pmeta
+    return TriPartition(dense=dense, ell=ell, coo=coo), pmeta

@@ -1,10 +1,19 @@
-"""Sparse systolic tensor engine — ELL-bucket SpMM Pallas kernel.
+"""Sparse systolic tensor engine — ragged single-launch ELL SpMM kernel.
 
-The ACAP sparse tensor PE executes a *fixed* number K of MACs per row
-(Algorithm 1's padded groups) so the VLIW compiler can pipeline. The TPU
-translation: a bucket of ELL units with static K gives a python-unrolled
-K-step gather+FMA loop over a VMEM-resident B tile — static shapes that
-Mosaic can vectorize, the exact same compiler contract.
+H-GCN's sparse tensor array maps ELL groups of *differing* K onto one
+systolic array by making K a per-tile parameter, not a per-kernel one.
+The TPU translation (``ragged_ell_spmm``): ONE kernel launch over the
+concatenated unit array, with a static ``Kmax``-trip gather+FMA loop and
+a per-unit mask ``kk < unit_k[u]`` — ``unit_k`` rides the scalar-prefetch
+path next to ``tile_col``, so both the B-tile choice and the live trip
+count are known before each grid step's body runs. Entries at or past a
+unit's K are zero (the partition's padding-sentinel convention), so the
+mask costs nothing in correctness and saves the masked FMAs from ever
+mattering; the static Kmax bound keeps Mosaic's pipelining contract.
+
+The legacy fixed-K kernel (``ell_spmm``) is retained for the
+"fused"/"loop" A/B dispatches: one launch per distinct K with a fully
+static trip count (the pre-ragged layout).
 
 B-tile selection per unit uses the scalar-prefetch block-sparse pattern
 (`PrefetchScalarGridSpec`): ``tile_col[u]`` is known before the body runs,
@@ -69,4 +78,60 @@ def ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray, tile_col: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((u, r, fp), jnp.float32),
         interpret=interpret,
     )(tile_col, cols, vals, b_p)
+    return out[:, :, :f]
+
+
+def _ragged_ell_kernel(tile_col_ref, unit_k_ref, cols_ref, vals_ref, b_ref,
+                       o_ref, *, kmax: int):
+    del tile_col_ref  # consumed by the index maps
+    ku = unit_k_ref[pl.program_id(0)]                # this unit's live K
+    b = b_ref[0]                                     # [T, bf]
+    cols = cols_ref[0]                               # [R, Kmax]
+    vals = vals_ref[0].astype(jnp.float32)           # [R, Kmax]
+    acc = jnp.zeros((cols.shape[0], b.shape[1]), jnp.float32)
+    for kk in range(kmax):                           # static trip count
+        g = jnp.take(b, cols[:, kk], axis=0)         # [R, bf] row gather
+        # Mask the VALUES, not the product: the FMA below then has the
+        # exact expression shape of the fixed-K kernel, so live lanes
+        # stay bit-identical to the legacy per-K launches.
+        v = jnp.where(kk < ku, vals[:, kk], 0.0)
+        acc = acc + v[:, None] * g.astype(jnp.float32)
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+def ragged_ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray,
+                    tile_col: jnp.ndarray, unit_k: jnp.ndarray,
+                    b_tiles: jnp.ndarray, *, bf: int = DEFAULT_BF,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Per-unit ELL products over the concatenated ragged unit array.
+
+    cols [U, R, Kmax] int32 (tile-local), vals [U, R, Kmax],
+    tile_col [U] int32, unit_k [U] int32, b_tiles [nct, T, F]
+    ->  [U, R, F] float32.  ONE launch covers every K width.
+    """
+    u, r, kmax = cols.shape
+    nct, t, f = b_tiles.shape
+    if u == 0 or kmax == 0:
+        return jnp.zeros((u, r, f), jnp.float32)
+    bf_ = min(bf, f)
+    fp = -(-f // bf_) * bf_
+    b_p = jnp.pad(b_tiles, ((0, 0), (0, 0), (0, fp - f))) if fp != f else b_tiles
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(u, fp // bf_),
+        in_specs=[
+            pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
+            pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
+            pl.BlockSpec((1, t, bf_), lambda i, j, tc, ks: (tc[i], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, r, bf_), lambda i, j, tc, ks: (i, 0, j)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_ragged_ell_kernel, kmax=kmax),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, r, fp), jnp.float32),
+        interpret=interpret,
+    )(tile_col, unit_k, cols, vals, b_p)
     return out[:, :, :f]

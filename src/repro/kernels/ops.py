@@ -7,8 +7,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import (PartitionMeta, TriPartition, pad_b_to_tiles,
-                                scatter_ell_partials)
+from repro.core.formats import (PartitionMeta, TriPartition, ell_buckets,
+                                pad_b_to_tiles, scatter_ell_partials)
 
 from . import bsr_spmm as _bsr
 from . import ell_spmm as _ell
@@ -38,27 +38,37 @@ def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
 
 
 def ell_matmul(part: TriPartition, b: jnp.ndarray, meta: PartitionMeta,
-               *, dispatch: str = "fused") -> jnp.ndarray:
-    """Sparse-engine partial product via the Pallas ELL kernel, [nrt*T, F].
+               *, dispatch: str = "ragged") -> jnp.ndarray:
+    """Sparse-engine partial product via the Pallas ELL kernels, [nrt*T, F].
 
-    One ``ell_spmm`` launch per K bucket computes the per-unit partial
-    products; ``dispatch="fused"`` then concatenates all buckets and
-    scatter-adds them in a single kernel, while ``"loop"`` keeps the
-    historical per-bucket scatter for A/B testing.
+    ``dispatch="ragged"`` (default) issues exactly ONE ``ragged_ell_spmm``
+    launch over the concatenated unit array — K varies per unit via the
+    scalar-prefetched ``unit_k``. ``"fused"`` / ``"loop"`` are the legacy
+    per-K-launch paths kept for A/B parity: buckets are derived from the
+    ragged array (``meta.ell_segments``), one ``ell_spmm`` launch each;
+    "fused" scatters all buckets at once, "loop" scatters per bucket.
     """
-    if dispatch not in ("fused", "loop"):
+    if dispatch not in ("ragged", "fused", "loop"):
         raise ValueError(f"unknown ell dispatch {dispatch!r}")
     T = meta.tile
     f = b.shape[1]
-    if not part.ell:
+    u = part.ell.cols.shape[0]
+    if u == 0:
         return jnp.zeros((meta.n_padded_rows, f), jnp.float32)
     bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, T, f)
+    if dispatch == "ragged":
+        r = part.ell.cols.shape[1]
+        prod = _ell.ragged_ell_spmm(part.ell.cols, part.ell.vals,
+                                    part.ell.tile_col, part.ell.unit_k, bt,
+                                    interpret=not _on_tpu())
+        return scatter_ell_partials(part.ell.rows.reshape(-1),
+                                    prod.reshape(u * r, f), meta)
     partials, rows = [], []
-    for bucket in part.ell:
-        u, r, _ = bucket.cols.shape
+    for bucket in ell_buckets(part.ell, meta.ell_segments):
+        ub, r, _ = bucket.cols.shape
         prod = _ell.ell_spmm(bucket.cols, bucket.vals, bucket.tile_col, bt,
                              interpret=not _on_tpu())
-        partials.append(prod.reshape(u * r, f))
+        partials.append(prod.reshape(ub * r, f))
         rows.append(bucket.rows.reshape(-1))
     if dispatch == "fused":
         return scatter_ell_partials(jnp.concatenate(rows),

@@ -41,3 +41,22 @@ def ell_spmm_ref(cols: jnp.ndarray, vals: jnp.ndarray,
         g = jnp.take_along_axis(bt, cols[:, :, kk][:, :, None], axis=1)
         acc = acc + vals[:, :, kk][:, :, None].astype(jnp.float32) * g
     return acc
+
+
+def ragged_ell_spmm_ref(cols: jnp.ndarray, vals: jnp.ndarray,
+                        tile_col: jnp.ndarray, unit_k: jnp.ndarray,
+                        b_tiles: jnp.ndarray) -> jnp.ndarray:
+    """Per-unit ragged ELL products (masked Kmax loop, per-unit live K).
+
+    cols [U, R, Kmax] tile-local, vals [U, R, Kmax], tile_col [U],
+    unit_k [U], b_tiles [nct, T, F]; returns [U, R, F] f32.
+    """
+    u, r, kmax = cols.shape
+    f = b_tiles.shape[-1]
+    bt = jnp.take(b_tiles, tile_col, axis=0)              # [U, T, F]
+    acc = jnp.zeros((u, r, f), jnp.float32)
+    for kk in range(kmax):
+        g = jnp.take_along_axis(bt, cols[:, :, kk][:, :, None], axis=1)
+        v = jnp.where((kk < unit_k)[:, None], vals[:, :, kk], 0.0)
+        acc = acc + v[:, :, None].astype(jnp.float32) * g
+    return acc

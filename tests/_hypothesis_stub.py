@@ -116,8 +116,8 @@ def given(*strategies, **kw_strategies):
                         f"stub-hypothesis example #{i} failed for "
                         f"{fn.__qualname__} with {drawn}: {e}") from e
 
-        kept = [p for p in params[:len(params) - n_bound]
-                if p.name not in kw_strategies]
+        bound = set(pos_names) | set(kw_strategies)
+        kept = [p for p in params if p.name not in bound]
         wrapper.__signature__ = sig.replace(parameters=kept)
         wrapper.__name__ = fn.__name__
         wrapper.__qualname__ = fn.__qualname__

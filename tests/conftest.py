@@ -14,6 +14,26 @@ except ImportError:
     sys.modules["hypothesis"] = _hypothesis_stub
 
 
+def make_overflow_matrix(n: int = 128) -> np.ndarray:
+    """Every ELL row overflows nnz to COO: rows carry 0-1 nnz in tile 0
+    vs 5 in tile 1, so a tiny coverage p caps the Algorithm-2 ELL width
+    at 1 and tile 1 spills 4 nnz per row — while the 0-nnz holes keep the
+    post-padding density below the band-promotion threshold. Partition it
+    with OVERFLOW_CFG."""
+    a = np.zeros((n, n), np.float32)
+    rng = np.random.default_rng(0)
+    for j in range(64):
+        if j % 2 == 0:
+            a[j, rng.choice(64, 1, replace=False)] = 1.0
+        a[j, 64 + rng.choice(64, 5, replace=False)] = 1.0
+    return a
+
+
+# Algorithm-2 thresholds that force the overflow path for
+# make_overflow_matrix (keep the two in sync).
+OVERFLOW_CFG = dict(tile=64, d_dense=0.9, d_scatter=1e-4, delta=1.2, p=0.3)
+
+
 def make_heterogeneous_matrix(n: int, seed: int = 0,
                               dense_frac: float = 0.27,
                               medium_frac: float = 0.3,

@@ -12,26 +12,13 @@ from repro.engine import (ClassRegistry, Engine, ShapePolicy, class_fits,
                           class_requirements, grow_class, pad_to_class,
                           round_up_ladder, round_up_pow2, shape_class_of)
 
-from conftest import make_heterogeneous_matrix
+from conftest import (OVERFLOW_CFG, make_heterogeneous_matrix,
+                      make_overflow_matrix)
 
 TOL = dict(rtol=2e-5, atol=2e-4)
 
 
 # ----------------------------------------------------- edge-case graphs ----
-def _overflow_matrix(n=128):
-    """Every ELL row overflows nnz to COO: rows carry 0-1 nnz in tile 0
-    vs 5 in tile 1, so a tiny coverage p caps the Algorithm-2 ELL width
-    at 1 and tile 1 spills 4 nnz per row — while the 0-nnz holes keep the
-    post-padding density below the band-promotion threshold."""
-    a = np.zeros((n, n), np.float32)
-    rng = np.random.default_rng(0)
-    for j in range(64):
-        if j % 2 == 0:
-            a[j, rng.choice(64, 1, replace=False)] = 1.0
-        a[j, 64 + rng.choice(64, 5, replace=False)] = 1.0
-    return a
-
-
 EDGE_CASES = {
     "empty": lambda: np.zeros((100, 100), np.float32),
     "single_tile": lambda: np.pad(
@@ -40,12 +27,11 @@ EDGE_CASES = {
     "all_dense": lambda: np.abs(
         np.random.default_rng(2).standard_normal((64, 64))
     ).astype(np.float32),
-    "ell_overflow": _overflow_matrix,
+    "ell_overflow": make_overflow_matrix,
 }
 
 EDGE_CFGS = {
-    "ell_overflow": PartitionConfig(tile=64, d_dense=0.9, d_scatter=1e-4,
-                                    delta=1.2, p=0.3),
+    "ell_overflow": PartitionConfig(**OVERFLOW_CFG),
 }
 
 
@@ -105,7 +91,7 @@ class TestFusedDispatch:
     def test_fused_equals_loop(self, hetero300, backend):
         part, meta, _ = analyze_and_partition(csr_from_dense(hetero300),
                                               PartitionConfig(tile=64))
-        assert len(part.ell) > 1, "need multiple K buckets to fuse"
+        assert len(meta.ell_segments) > 1, "need multiple K widths to fuse"
         rng = np.random.default_rng(0)
         b = jnp.asarray(rng.standard_normal((300, 32)), jnp.float32)
         y_fused = np.asarray(hybrid_spmm(part, b, meta=meta, backend=backend,

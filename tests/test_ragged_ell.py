@@ -1,0 +1,273 @@
+"""The ragged single-launch ELL pipeline (ISSUE 2).
+
+Covers every layer of the ragged path: the ``ragged_ell_spmm`` Pallas
+kernel against its jnp oracle, the dispatch parity triangle
+(ragged / fused / loop) against ``hybrid_spmm_ref`` on edge-case graphs,
+the single-kernel-launch guarantee (asserted on the traced jaxpr), the
+bucket-derivation round trip, and the engine default.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.hlo import count_pallas_calls
+from repro.core import (PartitionConfig, analyze_and_partition,
+                        csr_from_dense, ell_buckets, hybrid_spmm,
+                        hybrid_spmm_ref, partition_to_dense)
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.ell_spmm import ell_spmm, ragged_ell_spmm
+
+from conftest import (OVERFLOW_CFG, make_heterogeneous_matrix,
+                      make_overflow_matrix)
+
+RNG = np.random.default_rng(0)
+TOL = dict(rtol=2e-5, atol=2e-4)
+DISPATCHES = ("ragged", "fused", "loop")
+
+
+# ------------------------------------------------------ fixture graphs -----
+def _single_k_matrix(n=192):
+    """Every ELL row has exactly 3 nnz in ONE of three loose tiles: a
+    single K=3 group, but the band's padded density (1/3) stays below
+    the dense-promotion threshold."""
+    a = np.zeros((n, n), np.float32)
+    rng = np.random.default_rng(1)
+    for j in range(64):
+        t = (j * 3) // 64
+        a[j, 64 * t + rng.choice(64, 3, replace=False)] = \
+            rng.standard_normal(3)
+    return a
+
+
+EDGE_CASES = {
+    "no_ell_empty": (lambda: np.zeros((100, 100), np.float32),
+                     PartitionConfig(tile=64)),
+    "no_ell_dense": (lambda: np.abs(np.random.default_rng(2)
+                                    .standard_normal((64, 64))
+                                    ).astype(np.float32),
+                     PartitionConfig(tile=64)),
+    "single_k": (_single_k_matrix, PartitionConfig(tile=64)),
+    "mixed_k": (lambda: make_heterogeneous_matrix(300, seed=0),
+                PartitionConfig(tile=64)),
+    "ell_overflow": (make_overflow_matrix, PartitionConfig(**OVERFLOW_CFG)),
+}
+
+
+def _edge(name):
+    build, cfg = EDGE_CASES[name]
+    a = build()
+    part, meta, _ = analyze_and_partition(csr_from_dense(a), cfg)
+    return a, part, meta
+
+
+# ------------------------------------------------------------- kernel ------
+class TestRaggedKernel:
+    @pytest.mark.parametrize("u,kmax,nct,t,f", [
+        (1, 1, 1, 64, 32), (6, 5, 3, 64, 128),
+        (4, 17, 2, 128, 64), (2, 64, 2, 64, 8),
+    ])
+    def test_sweep_vs_ref(self, u, kmax, nct, t, f):
+        cols = jnp.asarray(RNG.integers(0, t, (u, 8, kmax)), jnp.int32)
+        vals = jnp.asarray(RNG.standard_normal((u, 8, kmax)), jnp.float32)
+        tcol = jnp.asarray(RNG.integers(0, nct, u), jnp.int32)
+        unit_k = jnp.asarray(RNG.integers(0, kmax + 1, u), jnp.int32)
+        btiles = jnp.asarray(RNG.standard_normal((nct, t, f)), jnp.float32)
+        got = ragged_ell_spmm(cols, vals, tcol, unit_k, btiles,
+                              interpret=True)
+        want = ref.ragged_ell_spmm_ref(cols, vals, tcol, unit_k, btiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+    def test_uniform_k_equals_fixed_k_kernel(self):
+        # every unit live to the full slab -> must match the legacy
+        # fixed-K kernel bitwise (identical FMA structure)
+        u, k, t, f = 3, 7, 64, 48
+        cols = jnp.asarray(RNG.integers(0, t, (u, 8, k)), jnp.int32)
+        vals = jnp.asarray(RNG.standard_normal((u, 8, k)), jnp.float32)
+        tcol = jnp.asarray(RNG.integers(0, 2, u), jnp.int32)
+        btiles = jnp.asarray(RNG.standard_normal((2, t, f)), jnp.float32)
+        got = ragged_ell_spmm(cols, vals, tcol,
+                              jnp.full((u,), k, jnp.int32), btiles,
+                              interpret=True)
+        want = ell_spmm(cols, vals, tcol, btiles, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_masked_tail_ignored(self):
+        # entries past unit_k must not contribute even when NONZERO —
+        # the mask, not the zero-padding convention, enforces raggedness
+        u, kmax, t, f = 2, 6, 64, 16
+        cols = jnp.asarray(RNG.integers(0, t, (u, 8, kmax)), jnp.int32)
+        vals = jnp.asarray(np.full((u, 8, kmax), 7.5), jnp.float32)
+        tcol = jnp.zeros(u, jnp.int32)
+        unit_k = jnp.asarray([2, 0], jnp.int32)
+        btiles = jnp.asarray(RNG.standard_normal((1, t, f)), jnp.float32)
+        got = ragged_ell_spmm(cols, vals, tcol, unit_k, btiles,
+                              interpret=True)
+        want = ref.ragged_ell_spmm_ref(cols, vals, tcol, unit_k, btiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+        np.testing.assert_array_equal(np.asarray(got[1]), 0.0)
+
+    def test_zero_units(self):
+        got = ragged_ell_spmm(jnp.zeros((0, 8, 4), jnp.int32),
+                              jnp.zeros((0, 8, 4), jnp.float32),
+                              jnp.zeros((0,), jnp.int32),
+                              jnp.zeros((0,), jnp.int32),
+                              jnp.asarray(RNG.standard_normal((1, 64, 16)),
+                                          jnp.float32), interpret=True)
+        assert got.shape == (0, 8, 16)
+
+    @given(st.integers(0, 5000))
+    @settings(max_examples=15, deadline=None)
+    def test_property_random(self, seed):
+        rng = np.random.default_rng(seed)
+        u = int(rng.integers(1, 6))
+        kmax = int(rng.integers(1, 20))
+        nct = int(rng.integers(1, 4))
+        f = int(rng.integers(1, 140))
+        cols = jnp.asarray(rng.integers(0, 64, (u, 8, kmax)), jnp.int32)
+        vals = jnp.asarray(rng.standard_normal((u, 8, kmax)), jnp.float32)
+        tcol = jnp.asarray(rng.integers(0, nct, u), jnp.int32)
+        unit_k = jnp.asarray(rng.integers(0, kmax + 1, u), jnp.int32)
+        btiles = jnp.asarray(rng.standard_normal((nct, 64, f)), jnp.float32)
+        got = ragged_ell_spmm(cols, vals, tcol, unit_k, btiles,
+                              interpret=True)
+        want = ref.ragged_ell_spmm_ref(cols, vals, tcol, unit_k, btiles)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **TOL)
+
+
+# ------------------------------------------------------- dispatch parity ---
+class TestDispatchParity:
+    @pytest.mark.parametrize("name", sorted(EDGE_CASES))
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_all_dispatches_match_ref(self, name, backend):
+        a, part, meta = _edge(name)
+        rng = np.random.default_rng(0)
+        b = jnp.asarray(rng.standard_normal((a.shape[1], 16)), jnp.float32)
+        want = np.asarray(hybrid_spmm_ref(jnp.asarray(a), b))
+        ys = {}
+        for d in DISPATCHES:
+            ys[d] = np.asarray(hybrid_spmm(part, b, meta=meta,
+                                           backend=backend, ell_dispatch=d))
+            np.testing.assert_allclose(ys[d], want, **TOL)
+        # acceptance: ragged == fused bitwise on float32
+        np.testing.assert_array_equal(ys["ragged"], ys["fused"])
+
+    @pytest.mark.parametrize("name", ["mixed_k", "ell_overflow"])
+    def test_ragged_reconstruction_exact(self, name):
+        a, part, meta = _edge(name)
+        np.testing.assert_allclose(partition_to_dense(part, meta), a,
+                                   rtol=0, atol=0)
+
+    def test_bucket_derivation_round_trip(self):
+        _, part, meta = _edge("mixed_k")
+        assert len(meta.ell_segments) > 1, "fixture must mix K widths"
+        buckets = ell_buckets(part.ell, meta.ell_segments)
+        assert len(buckets) == len(meta.ell_segments)
+        unit_k = np.asarray(part.ell.unit_k)
+        at = 0
+        for bucket, (k, n) in zip(buckets, meta.ell_segments):
+            assert bucket.cols.shape == (n, part.ell.r_block, k)
+            np.testing.assert_array_equal(unit_k[at:at + n], k)
+            # the ragged slab beyond each unit's K must be all zeros
+            np.testing.assert_array_equal(
+                np.asarray(part.ell.vals[at:at + n, :, k:]), 0.0)
+            at += n
+        assert at == part.ell.n_units
+
+    def test_unknown_dispatch_raises(self):
+        _, part, meta = _edge("mixed_k")
+        with pytest.raises(ValueError):
+            hybrid_spmm(part, jnp.ones((300, 4)), meta=meta,
+                        ell_dispatch="bogus")
+
+    @given(st.integers(0, 10_000))
+    @settings(max_examples=10, deadline=None)
+    def test_property_ragged_equals_dense(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(40, 180))
+        a = make_heterogeneous_matrix(n, seed=seed)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                              PartitionConfig(tile=64))
+        b = rng.standard_normal((n, 8)).astype(np.float32)
+        y = np.asarray(hybrid_spmm(part, jnp.asarray(b), meta=meta,
+                                   ell_dispatch="ragged"))
+        np.testing.assert_allclose(y, a @ b, **TOL)
+
+
+# ------------------------------------------------- single-launch traces ----
+class TestSingleLaunch:
+    def test_one_ell_launch_regardless_of_k_widths(self):
+        _, part, meta = _edge("mixed_k")
+        n_widths = len(meta.ell_segments)
+        assert n_widths > 1, "fixture must mix K widths"
+        b = jnp.ones((meta.n_cols, 16), jnp.float32)
+
+        def launches(dispatch):
+            jaxpr = jax.make_jaxpr(
+                lambda bb: kops.ell_matmul(part, bb, meta,
+                                           dispatch=dispatch))(b)
+            return count_pallas_calls(jaxpr.jaxpr)
+
+        assert launches("ragged") == 1
+        assert launches("loop") == n_widths
+        assert launches("fused") == n_widths
+
+    def test_single_launch_single_k(self):
+        _, part, meta = _edge("single_k")
+        assert len(meta.ell_segments) == 1, "fixture must have exactly one K"
+        assert part.ell.n_units > 0
+        b = jnp.ones((meta.n_cols, 16), jnp.float32)
+        jaxpr = jax.make_jaxpr(
+            lambda bb: kops.ell_matmul(part, bb, meta,
+                                       dispatch="ragged"))(b)
+        assert count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+# ------------------------------------------------------------- engine ------
+class TestEngineRagged:
+    def test_engine_default_is_ragged(self):
+        from repro.engine import Engine
+        eng = Engine()
+        assert eng.executors.ell_dispatch == "ragged"
+        a = make_heterogeneous_matrix(300, seed=0)
+        eng.register("g", csr_from_dense(a))
+        rng = np.random.default_rng(0)
+        b = rng.standard_normal((300, 16)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(eng.spmm("g", b)), a @ b,
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_classes_ignore_k_width_sets(self):
+        # two graphs with different K-width SETS but similar totals must
+        # share a class now that only (Kmax, units) is shape-relevant
+        from repro.engine import class_fits, class_requirements, grow_class
+        a1 = make_heterogeneous_matrix(300, seed=0)
+        a2 = make_heterogeneous_matrix(300, seed=5)
+        p1, m1, _ = analyze_and_partition(csr_from_dense(a1),
+                                          PartitionConfig(tile=64))
+        p2, m2, _ = analyze_and_partition(csr_from_dense(a2),
+                                          PartitionConfig(tile=64))
+        assert (tuple(k for k, _ in m1.ell_segments)
+                != tuple(k for k, _ in m2.ell_segments)), \
+            "fixture graphs should produce different K sets"
+        sc = grow_class(class_requirements(p1, m1))
+        assert class_fits(class_requirements(p2, m2), sc)
+
+    def test_lru_eviction_and_telemetry(self):
+        from repro.engine import Engine
+        eng = Engine(executor_max_entries=2)
+        a = make_heterogeneous_matrix(200, seed=1)
+        eng.register("g", csr_from_dense(a))
+        rng = np.random.default_rng(0)
+        for f in (4, 8, 16):   # three widths -> three executors, cap 2
+            eng.spmm("g", rng.standard_normal((200, f)).astype(np.float32))
+        s = eng.stats()
+        assert s["executors"] == 2
+        assert s["cache_evictions"] == 1
+        assert s["cache_misses"] == 3
+        (cls_stats,) = s["per_class"].values()
+        assert cls_stats["misses"] == 3 and cls_stats["evictions"] == 1
+        # evicted width recompiles: miss, not hit
+        eng.spmm("g", rng.standard_normal((200, 4)).astype(np.float32))
+        assert eng.stats()["cache_misses"] == 4

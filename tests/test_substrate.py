@@ -117,6 +117,41 @@ class TestCheckpoint:
             os.makedirs(os.path.join(d, ".tmp-step_2"))  # crashed write
             assert mgr.all_steps() == [1]
 
+    def test_uncommitted_step_skipped_by_other_instance(self):
+        # The commit-marker handshake: a step directory that a DIFFERENT
+        # manager instance has renamed into place but not yet marked
+        # COMMITTED must be invisible to an already-live reader's
+        # restore_latest.
+        from repro.checkpoint import COMMIT_MARKER
+        with tempfile.TemporaryDirectory() as d:
+            writer = CheckpointManager(d, async_save=False)
+            tree = {"x": jnp.arange(3, dtype=jnp.float32)}
+            writer.save(1, tree)
+            reader = CheckpointManager(d, async_save=False)  # live reader
+            writer.save(2, jax.tree.map(lambda v: v * 2, tree))
+            # simulate the writer mid-save of step 2: dir + manifest
+            # visible, marker not yet written
+            os.remove(os.path.join(d, "step_2", COMMIT_MARKER))
+            assert reader.all_steps() == [1]
+            restored, man = reader.restore_latest(tree)
+            assert man["step"] == 1
+            np.testing.assert_allclose(np.asarray(restored["x"]),
+                                       np.arange(3))
+
+    def test_premarker_checkpoints_backfilled_on_init(self):
+        # Checkpoints written before the marker existed (manifest but no
+        # COMMITTED file) must stay restorable: a new manager instance
+        # stamps them at construction time.
+        from repro.checkpoint import COMMIT_MARKER
+        with tempfile.TemporaryDirectory() as d:
+            writer = CheckpointManager(d, async_save=False)
+            tree = {"x": jnp.arange(3, dtype=jnp.float32)}
+            writer.save(5, tree)
+            os.remove(os.path.join(d, "step_5", COMMIT_MARKER))  # old format
+            mgr = CheckpointManager(d, async_save=False)
+            assert mgr.all_steps() == [5]
+            assert os.path.exists(os.path.join(d, "step_5", COMMIT_MARKER))
+
 
 class TestFaultTolerance:
     def _quad_step(self):
