@@ -1,0 +1,216 @@
+"""Standing request queue vs call-at-a-time serving, under real traffic.
+
+The shape-class engine made *executors* cheap to share; this benchmark
+measures whether the serving frontend makes *launches* cheap to share:
+the same Poisson / bursty arrival trace over an SBM graph family is
+replayed twice —
+
+  call-at-a-time — ``engine.serve_batch([(name, x)])`` per arrival, the
+      pre-frontend request path: occupancy is locked at 1 request per
+      vmapped launch no matter how bunched the arrivals are.
+  queue         — arrivals land in the standing `RequestQueue`; the
+      scheduler closes batches on pow2 target size / deadline slack /
+      drain and dispatches each through ONE ``serve_group`` launch.
+
+Reports occupancy (mean batch size), pad occupancy, latency
+percentiles, and deadline misses per mode, then checks the acceptance
+invariants: queue occupancy strictly above call-at-a-time, zero misses
+at the default deadline, and every queue output bitwise-equal to the
+per-request ``engine.infer`` answer.
+
+Run:    PYTHONPATH=src python benchmarks/bench_serving.py [--graphs 6]
+Smoke:  PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+        (deterministic scheduler simulation, virtual clock, no compiles)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.serving import (Arrival, RequestQueue, bursty_trace,
+                           poisson_trace, replay_trace, run_smoke)
+
+
+def make_family(n_graphs: int, f_in: int, hidden: int, n_classes: int,
+                n: int = 2000, seed0: int = 0):
+    """SBM family with shared weight shapes: same config, jittered sizes,
+    so every graph pads into one shape class and one serve group."""
+    from repro.core import csr_from_scipy
+    from repro.data.graphs import normalized_adjacency, sbm_graph
+    rng = np.random.default_rng(seed0)
+    graphs = []
+    for i in range(n_graphs):
+        g = np.random.default_rng(seed0 + i)
+        ni = n + int(g.integers(-n // 50, n // 50))
+        a = sbm_graph(ni, 8 * ni, seed=seed0 + i)
+        ws = [(rng.standard_normal((f_in, hidden)) * 0.05).astype(np.float32),
+              (rng.standard_normal((hidden, n_classes)) * 0.05
+               ).astype(np.float32)]
+        graphs.append((f"sbm{i}", csr_from_scipy(normalized_adjacency(a)),
+                       ni, ws))
+    return graphs
+
+
+def build_engine(graphs):
+    from repro.engine import Engine
+    engine = Engine()
+    for name, csr, _n, ws in graphs:
+        engine.register(name, csr, weights=ws)
+    return engine
+
+
+def warm_executors(engine, graphs, target_batch: int):
+    """Compile every executor the replay can hit (single + pow2 batched)
+    before traffic starts — cold XLA compiles are an offline cost in
+    this serving model, never part of a request's deadline budget."""
+    name0, _, n0, _ = graphs[0]
+    x0 = np.zeros((n0, engine.handle(name0).weights[0].shape[0]), np.float32)
+    engine.infer(name0, x0)
+    bs = 1
+    while bs < target_batch:
+        bs <<= 1
+        engine.serve_group([(name0, x0)] * bs)
+
+
+def _sleep_until(until_s: float) -> None:
+    dt = until_s - time.monotonic()
+    if dt > 0:
+        time.sleep(dt)
+
+
+def run_baseline(engine, trace, xs) -> dict:
+    """Call-at-a-time: serve each arrival alone, as it lands."""
+    lat = []
+    t_start = time.monotonic()
+    t0 = time.monotonic()
+    for i, arr in enumerate(trace):
+        _sleep_until(t_start + arr.t_s)
+        y = engine.serve_batch([(arr.name, xs[i])])[0]
+        y.block_until_ready()
+        lat.append(time.monotonic() - (t_start + arr.t_s))
+    wall = time.monotonic() - t0
+    lat_ms = np.asarray(lat) * 1e3
+    return {"mode": "call-at-a-time", "batches": len(trace),
+            "mean_batch": 1.0, "pad_occupancy": 1.0,
+            "p50_ms": float(np.percentile(lat_ms, 50)),
+            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "deadline_misses": 0, "wall_s": wall,
+            "req_per_s": len(trace) / wall}
+
+
+def run_queue(engine, trace, xs, *, target_batch: int,
+              deadline_ms=None) -> tuple:
+    """Replay the trace through the standing queue in real time."""
+    queue = RequestQueue(engine, target_batch=target_batch)
+    t_start = time.monotonic()
+    shifted = [Arrival(t_start + a.t_s, a.name) for a in trace]
+    it = iter(range(len(trace)))
+    x_of = lambda _name: xs[next(it)]        # noqa: E731 — trace-ordered
+    t0 = time.monotonic()
+    futures, rejected = replay_trace(queue, shifted, x_of,
+                                     wait=_sleep_until,
+                                     deadline_ms=deadline_ms)
+    assert not any(rejected), "default admission policy must admit all"
+    outs = [f.result(timeout=30.0) for f in futures]
+    for y in outs:
+        y.block_until_ready()
+    wall = time.monotonic() - t0
+    snap = queue.stats.snapshot()
+    res = {"mode": f"queue(target={target_batch})",
+           "batches": snap["batches"], "mean_batch": snap["mean_batch"],
+           "pad_occupancy": snap["pad_occupancy"],
+           "p50_ms": snap["p50_ms"], "p99_ms": snap["p99_ms"],
+           "deadline_misses": snap["deadline_misses"], "wall_s": wall,
+           "req_per_s": len(trace) / wall}
+    return res, outs, queue
+
+
+def _report(rows):
+    cols = ("mode", "batches", "mean_batch", "pad_occupancy", "p50_ms",
+            "p99_ms", "deadline_misses", "req_per_s")
+    print(f"{'mode':22s} {'batches':>7} {'meanB':>6} {'padOcc':>6} "
+          f"{'p50ms':>8} {'p99ms':>8} {'misses':>6} {'req/s':>7}")
+    for r in rows:
+        print(f"{r['mode']:22s} {r['batches']:>7d} {r['mean_batch']:>6.2f} "
+              f"{r['pad_occupancy']:>6.2f} {r['p50_ms']:>8.1f} "
+              f"{r['p99_ms']:>8.1f} {r['deadline_misses']:>6d} "
+              f"{r['req_per_s']:>7.1f}")
+    return {r["mode"]: {c: r[c] for c in cols} for r in rows}
+
+
+def run(n_graphs: int = 6, n_requests: int = 96, rate_hz: float = 150.0,
+        f_in: int = 32, hidden: int = 32, n_classes: int = 8,
+        target_batch: int = 8, verbose: bool = True) -> dict:
+    graphs = make_family(n_graphs, f_in, hidden, n_classes)
+    engine = build_engine(graphs)
+    warm_executors(engine, graphs, target_batch)
+    sizes = {name: n for name, _, n, _ in graphs}
+    names = [name for name, _, _, _ in graphs]
+    rng = np.random.default_rng(1)
+
+    results: dict = {}
+    traces = {
+        "poisson": poisson_trace(n_requests, rate_hz, names, seed=7),
+        "bursty": bursty_trace(n_requests // 12, 12,
+                               12 / rate_hz * 2.0, names, seed=8,
+                               jitter_s=0.002),
+    }
+    for tname, trace in traces.items():
+        xs = [rng.standard_normal((sizes[a.name], f_in)).astype(np.float32)
+              for a in trace]
+        base = run_baseline(engine, trace, xs)
+        qres, qouts, queue = run_queue(engine, trace, xs,
+                                       target_batch=target_batch)
+        if verbose:
+            print(f"\n== {tname} trace | {len(trace)} requests over "
+                  f"{len(names)} SBM graphs (rate~{rate_hz:.0f}/s) ==")
+        results[tname] = _report([base, qres])
+
+        # acceptance invariants (ISSUE 3) — checked on every run
+        assert qres["mean_batch"] > base["mean_batch"], \
+            f"{tname}: queue occupancy {qres['mean_batch']} must beat " \
+            f"call-at-a-time {base['mean_batch']}"
+        assert qres["deadline_misses"] == 0, \
+            f"{tname}: default deadline must never be missed: {qres}"
+        mism = 0
+        for arr, x, y in zip(trace, xs, qouts):
+            ref = engine.infer(arr.name, x)
+            if not np.array_equal(np.asarray(y), np.asarray(ref)):
+                mism += 1
+        assert mism == 0, f"{tname}: {mism} batch outputs differ bitwise " \
+                          f"from per-request infer"
+        if verbose:
+            print(f"[{tname}] occupancy {qres['mean_batch']:.2f}x vs 1.00x "
+                  f"baseline; 0 deadline misses; {len(trace)}/{len(trace)} "
+                  f"outputs bitwise-equal to per-request infer")
+    if verbose:
+        st = engine.stats()
+        print(f"\nengine: {st['executors']} executors, "
+              f"{st['shape_classes']} classes, stacks "
+              f"hits={st['stack_hits']} misses={st['stack_misses']} "
+              f"evictions={st['stack_evictions']}")
+        waste = next(iter(st["class_waste"].values()), {})
+        if waste:
+            print(f"class_waste[0]: members={waste['members']} "
+                  f"ell_waste={waste['ell_waste_frac']:.2f} "
+                  f"total_pad_waste={waste['padded_mac_waste_frac']:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="deterministic scheduler simulation only "
+                         "(virtual clock, stub engine, no compiles)")
+    ap.add_argument("--graphs", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--rate", type=float, default=150.0)
+    ap.add_argument("--target-batch", type=int, default=8)
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+    else:
+        run(args.graphs, args.requests, args.rate,
+            target_batch=args.target_batch)

@@ -1,11 +1,18 @@
-"""End-to-end serving driver (the paper's kind: GCN *inference*).
+"""End-to-end async serving driver (the paper's kind: GCN *inference*).
 
-A batched-request inference service on the shape-class engine: graphs
-are registered once (reorder + tri-partition + pad into a canonical
-shape class, like the paper's offline stage), then traffic is served by
-cached compiled executors — structurally-similar graphs share one trace,
-and each arriving batch is grouped by shape class and vmapped per group.
-Reports per-request latency percentiles and throughput.
+The full production request path on the shape-class engine:
+
+  offline  — graphs are registered once (reorder + tri-partition + pad
+             into a canonical shape class) and executors are warmed.
+  online   — a standing `RequestQueue` worker thread takes Poisson
+             traffic: ``submit(name, x, deadline_ms)`` returns a future
+             immediately; the scheduler accumulates per-class pending
+             queues and closes a batch on pow2 target size or when the
+             oldest request's deadline slack drops below the EWMA
+             latency estimate, dispatching one vmapped launch per batch.
+
+Reports the ServerStats telemetry block (occupancy, batch histogram,
+latency percentiles, deadline misses) and engine cache counters.
 
 Run:  PYTHONPATH=src python examples/serve_gcn.py [--requests 24]
 """
@@ -16,13 +23,24 @@ import numpy as np
 
 from repro.data.graphs import make_paper_dataset
 from repro.engine import Engine
+from repro.serving import LatencyModel, RequestQueue
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--batch", type=int, default=4,
-                    help="requests per serve_batch call")
+    ap.add_argument("--rate", type=float, default=2.0,
+                    help="Poisson arrival rate (requests/s); paper-scale "
+                         "pubmed serves ~1 batch/3s on CPU, so keep this "
+                         "near capacity")
+    ap.add_argument("--target-batch", type=int, default=4,
+                    help="pow2 batch size the scheduler aims for")
+    ap.add_argument("--deadline-ms", type=float, default=15000.0)
+    ap.add_argument("--max-linger-ms", type=float, default=4000.0,
+                    help="close a batch once its oldest member waited "
+                         "this long, even with deadline slack left — "
+                         "keeps latency bounded when dispatches queue "
+                         "behind each other near capacity")
     ap.add_argument("--datasets", default="cora,citeseer,pubmed")
     ap.add_argument("--hidden", type=int, default=128)
     args = ap.parse_args()
@@ -45,47 +63,62 @@ def main():
               f"{h.meta.summary()}")
         print(f"          class: {h.sclass.summary()}")
 
-    # warmup: compile the single-request executor AND the batched
-    # executor at the pow2 batch sizes the loop below can produce, so no
-    # trace lands inside the latency measurements
+    # Warm every executor the scheduler can dispatch (single + pow2
+    # batches) so no trace/compile lands inside a request's deadline,
+    # and PRIME the queue's EWMA latency model from warm re-runs — the
+    # deadline rule then starts with real per-class estimates instead of
+    # the conservative default.
+    lat_model = LatencyModel()
     for name, x in feats.items():
-        engine.infer(name, x).block_until_ready()
+        key = engine.group_key(name, x)
         bs = 1
-        while bs < args.batch:
-            bs <<= 1
-            for o in engine.serve_batch([(name, x)] * bs):
+        while True:
+            for o in engine.serve_group([(name, x)] * bs):   # compile
                 o.block_until_ready()
+            t0 = time.monotonic()
+            for o in engine.serve_group([(name, x)] * bs):   # warm probe
+                o.block_until_ready()
+            lat_model.observe(key, bs, time.monotonic() - t0)
+            if bs >= args.target_batch:
+                break
+            bs <<= 1
     print(f"[warmup] {engine.summary()}")
 
+    # Online: the standing queue's worker thread owns batch closing;
+    # this thread only submits on the Poisson schedule and collects
+    # futures — exactly a frontend handler's view of the server.
+    queue = RequestQueue(engine, target_batch=args.target_batch,
+                         default_deadline_ms=args.deadline_ms,
+                         max_linger_ms=args.max_linger_ms,
+                         latency_model=lat_model).start()
     names = list(feats)
-    lat = {n: [] for n in names}
-    served = 0
-    t_all = time.perf_counter()
-    while served < args.requests:
-        k = min(args.batch, args.requests - served)
-        batch = []
-        for _ in range(k):
-            name = names[int(rng.integers(len(names)))]
-            batch.append((name, feats[name] * rng.random()))
-        t0 = time.perf_counter()
-        outs = engine.serve_batch(batch)
-        for o in outs:
-            o.block_until_ready()
-        # every member of the batch waited the full batch wall time —
-        # that IS its request latency, don't amortize it away
-        dt = time.perf_counter() - t0
-        for (name, _x) in batch:
-            lat[name].append(dt)
-        served += k
-    wall = time.perf_counter() - t_all
+    futures = []
+    t0 = time.monotonic()
+    t_next = t0
+    for _ in range(args.requests):
+        t_next += float(rng.exponential(1.0 / args.rate))
+        dt = t_next - time.monotonic()
+        if dt > 0:
+            time.sleep(dt)
+        name = names[int(rng.integers(len(names)))]
+        futures.append((name, queue.submit(name, feats[name] * rng.random())))
+    outs = [(n, f.result(timeout=30.0)) for n, f in futures]
+    queue.stop()
+    wall = time.monotonic() - t0
 
-    print(f"\nserved {served} requests in {wall:.2f}s "
-          f"({served / wall:.1f} req/s, batch={args.batch})")
+    snap = queue.stats.snapshot()
+    print(f"\nserved {snap['completed']} requests in {wall:.2f}s "
+          f"({snap['completed'] / wall:.1f} req/s, arrival rate "
+          f"{snap['arrival_rate_hz']:.0f}/s)")
+    print(f"  occupancy: {snap['mean_batch']:.2f} requests/launch "
+          f"(batch_hist={snap['batch_hist']}, "
+          f"close_reasons={snap['close_reasons']})")
+    print(f"  latency:   p50={snap['p50_ms']:.1f}ms p99={snap['p99_ms']:.1f}ms "
+          f"deadline_misses={snap['deadline_misses']} "
+          f"(deadline {args.deadline_ms:.0f}ms)")
     for name in names:
-        ls = np.asarray(lat[name]) * 1e3
-        if len(ls):
-            print(f"  {name:9s} n={len(ls):3d} p50={np.percentile(ls,50):7.1f}ms "
-                  f"p99={np.percentile(ls,99):7.1f}ms")
+        n_out = sum(1 for n, y in outs if n == name)
+        print(f"  {name:9s} answered {n_out} requests")
     print(engine.summary())
 
 

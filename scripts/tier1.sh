@@ -9,3 +9,8 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # regressions the pure-jnp test oracles could mask.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_spmm.py --dispatch ragged --smoke
+# Scheduler smoke: deterministic serving-frontend simulation (synthetic
+# arrival trace, SimClock, stub engine — zero real compiles) exercising
+# every batch-closing rule, deadline accounting, and admission control.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_serving.py --smoke

@@ -2,7 +2,8 @@
 
 Pads TriPartitions into canonical shape classes so structurally-similar
 graphs share one compiled executor, caches the jit'd executors, and
-batches multi-graph traffic with per-class vmap.
+batches multi-graph traffic with per-class vmap. The async standing
+request queue in front of this lives in `repro.serving`.
 """
 from .executor import CacheStats, ExecutorCache
 from .serving import Engine, GraphHandle

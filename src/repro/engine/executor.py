@@ -89,6 +89,15 @@ class ExecutorCache:
             cls.hits += 1
         return fn
 
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    @property
+    def size(self) -> int:
+        """Number of live compiled executors (public; callers must not
+        reach into ``_fns``)."""
+        return len(self._fns)
+
     def class_stats(self) -> dict:
         """Per-shape-class telemetry: {summary str: hit/miss/evict dict}."""
         return {sc.summary(): st.as_dict()
@@ -150,6 +159,6 @@ class ExecutorCache:
         for key in self._fns:
             kinds[key[0]] = kinds.get(key[0], 0) + 1
         return (f"ExecutorCache backend={self.backend} "
-                f"executors={len(self._fns)}/{self.max_entries} ({kinds}) "
+                f"executors={self.size}/{self.max_entries} ({kinds}) "
                 f"hits={self.stats.hits} misses={self.stats.misses} "
                 f"evictions={self.stats.evictions}")

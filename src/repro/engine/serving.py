@@ -7,13 +7,20 @@ Request path (mirrors the paper's offline/online split):
   online   — ``spmm`` / ``infer``: pad the request features, run the
              class's cached executor, slice + un-permute the output.
            — ``serve_batch``: group requests by (shape class, widths),
-             stack each group and run one vmapped executor per group.
+             then ``serve_group`` stacks each group and runs one
+             vmapped executor per group.
+
+``serve_group`` is the single-group dispatch primitive shared by
+``serve_batch`` (which forms groups from one call's requests) and the
+standing `repro.serving.RequestQueue` (which forms groups from traffic
+accumulated across calls and closes them on deadline pressure).
 
 All host-side padding/slicing happens outside jit, so the traced
 computation depends only on the shape class and feature widths.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Optional
@@ -57,7 +64,8 @@ class Engine:
     def __init__(self, *, policy: ShapePolicy = ShapePolicy(),
                  partition_cfg: PartitionConfig = PartitionConfig(tile=64),
                  backend: str = "xla", block_cols: int = 0,
-                 ell_dispatch: str = "ragged", executor_max_entries: int = 128):
+                 ell_dispatch: str = "ragged", executor_max_entries: int = 128,
+                 max_stacks: int = 32):
         self.policy = policy
         self.partition_cfg = partition_cfg
         self.registry = ClassRegistry(policy)
@@ -65,12 +73,21 @@ class Engine:
                                        ell_dispatch=ell_dispatch,
                                        max_entries=executor_max_entries)
         self._graphs: dict = {}
-        # serve_batch group stacks, keyed by the sorted member-name
-        # tuple: partitions/weights don't change between register calls,
-        # so a repeat group reuses its stacked pytrees zero-copy.
-        # Bounded FIFO; re-registering a name evicts its entries.
-        self._stacks: dict = {}
-        self._max_stacks = 32
+        # serve_group member stacks, keyed by the canonicalized member-
+        # name tuple: partitions/weights don't change between register
+        # calls, so a repeat group reuses its stacked pytrees zero-copy.
+        # Bounded LRU (a hit moves the stack to MRU, eviction drops the
+        # least-recently-served stack — the hottest repeated group can
+        # never be evicted by a parade of one-off groups); re-registering
+        # a name evicts its entries.
+        if max_stacks < 1:
+            raise ValueError(f"max_stacks must be >= 1, got {max_stacks}")
+        self._stacks: collections.OrderedDict = collections.OrderedDict()
+        self._max_stacks = max_stacks
+        self.stack_hits = 0
+        self.stack_misses = 0
+        self.stack_evictions = 0
+        self._frontend = None   # attached repro.serving.RequestQueue
 
     # --------------------------------------------------------- offline -----
     def register(self, name: str, csr: CSRMatrix, *,
@@ -110,8 +127,8 @@ class Engine:
         # a re-registered name invalidates every cached group stack that
         # contains it — otherwise serve_batch would keep serving the old
         # partition/weights
-        self._stacks = {k: v for k, v in self._stacks.items()
-                        if name not in k}
+        self._stacks = collections.OrderedDict(
+            (k, v) for k, v in self._stacks.items() if name not in k)
         return handle
 
     def handle(self, name: str) -> GraphHandle:
@@ -153,71 +170,173 @@ class Engine:
         fn = self.executors.gcn(h.sclass, int(x.shape[1]), w_shapes)
         return self._unpad_y(h, fn(h.part, self._pad_x(h, x), h.weights))
 
+    def _group_key(self, h: GraphHandle, x) -> tuple:
+        if h.weights is None:
+            raise ValueError(f"graph {h.name!r} registered without weights")
+        w_shapes = tuple(tuple(w.shape) for w in h.weights)
+        return (h.sclass, int(x.shape[1]), w_shapes)
+
+    def group_key(self, name: str, x) -> tuple:
+        """The (shape class, f_in, weight shapes) tuple that decides
+        which requests may share one ``serve_group`` dispatch. The
+        serving frontend groups on exactly this — single source of
+        truth, so frontend grouping can never drift from what
+        ``serve_group`` accepts."""
+        return self._group_key(self._graphs[name], x)
+
     def serve_batch(self, requests) -> list:
         """Serve [(name, x), ...]; returns logits in request order.
 
         Requests are grouped by (shape class, feature width, weight
-        shapes); each group is stacked leaf-wise and dispatched through
-        one vmapped executor, so a group of any size costs one launch.
+        shapes); each group is dispatched through ``serve_group``, so a
+        group of any size costs one launch.
         """
         groups: dict = {}
         for i, (name, x) in enumerate(requests):
-            h = self._graphs[name]
-            if h.weights is None:
-                raise ValueError(f"graph {name!r} registered without weights")
-            w_shapes = tuple(tuple(w.shape) for w in h.weights)
-            key = (h.sclass, int(x.shape[1]), w_shapes)
-            groups.setdefault(key, []).append((i, h, x))
-
+            key = self._group_key(self._graphs[name], x)
+            groups.setdefault(key, []).append((i, name, x))
         results: list = [None] * len(requests)
-        for (sc, f_in, w_shapes), members in groups.items():
-            if len(members) == 1:
-                i, h, x = members[0]
-                fn = self.executors.gcn(sc, f_in, w_shapes)
-                results[i] = self._unpad_y(h, fn(h.part, self._pad_x(h, x),
-                                                 h.weights))
-                continue
-            # Canonicalize group order by name so (g0,g1) and (g1,g0)
-            # share one cached stack, then pad to the next power-of-two
-            # batch (repeating the last member; its extra outputs are
-            # dropped) so the set of compiled batch sizes stays
-            # logarithmic in traffic, not linear in observed group sizes.
-            members.sort(key=lambda m: m[1].name)
-            bs = 1 << (len(members) - 1).bit_length()
-            padded = members + [members[-1]] * (bs - len(members))
-            fn = self.executors.gcn_batched(sc, f_in, w_shapes, bs)
-            stack_key = tuple(h.name for _, h, _ in padded)
-            stacks = self._stacks.get(stack_key)
-            if stacks is None:
-                part_stack = jtu.tree_map(
-                    lambda *leaves: jnp.stack(leaves),
-                    *[h.part for _, h, _ in padded])
-                w_stack = jtu.tree_map(
-                    lambda *ws: jnp.stack(ws),
-                    *[h.weights for _, h, _ in padded])
-                while len(self._stacks) >= self._max_stacks:
-                    self._stacks.pop(next(iter(self._stacks)))
-                stacks = self._stacks[stack_key] = (part_stack, w_stack)
-            part_stack, w_stack = stacks
-            x_stack = jnp.stack([self._pad_x(h, x) for _, h, x in padded])
-            ys = fn(part_stack, x_stack, w_stack)
-            for j, (i, h, _) in enumerate(members):
-                results[i] = self._unpad_y(h, ys[j])
+        for members in groups.values():
+            ys = self.serve_group([(name, x) for _, name, x in members])
+            for (i, _, _), y in zip(members, ys):
+                results[i] = y
+        return results
+
+    def serve_group(self, requests) -> list:
+        """One-launch dispatch of a same-key group [(name, x), ...].
+
+        Every request must share (shape class, feature width, weight
+        shapes) — ``serve_batch`` and the serving frontend's scheduler
+        both guarantee this by construction. The group is stacked
+        leaf-wise and run through one vmapped executor; outputs return
+        in request order.
+        """
+        if not requests:
+            return []
+        members = []
+        key0 = None
+        for i, (name, x) in enumerate(requests):
+            h = self._graphs[name]
+            key = self._group_key(h, x)
+            if key0 is None:
+                key0 = key
+            elif key != key0:
+                raise ValueError(
+                    f"serve_group members must share one (class, f_in, "
+                    f"weight-shapes) key; {requests[0][0]!r} and {name!r} "
+                    f"differ")
+            members.append((i, h, x))
+        sc, f_in, w_shapes = key0
+
+        if len(members) == 1:
+            i, h, x = members[0]
+            fn = self.executors.gcn(sc, f_in, w_shapes)
+            return [self._unpad_y(h, fn(h.part, self._pad_x(h, x),
+                                        h.weights))]
+        # Canonicalize group order by name so (g0,g1) and (g1,g0)
+        # share one cached stack, then pad to the next power-of-two
+        # batch (repeating the last member; its extra outputs are
+        # dropped) so the set of compiled batch sizes stays
+        # logarithmic in traffic, not linear in observed group sizes.
+        members.sort(key=lambda m: m[1].name)
+        bs = 1 << (len(members) - 1).bit_length()
+        padded = members + [members[-1]] * (bs - len(members))
+        fn = self.executors.gcn_batched(sc, f_in, w_shapes, bs)
+        stack_key = tuple(h.name for _, h, _ in padded)
+        stacks = self._stacks.get(stack_key)
+        if stacks is None:
+            self.stack_misses += 1
+            part_stack = jtu.tree_map(
+                lambda *leaves: jnp.stack(leaves),
+                *[h.part for _, h, _ in padded])
+            w_stack = jtu.tree_map(
+                lambda *ws: jnp.stack(ws),
+                *[h.weights for _, h, _ in padded])
+            while len(self._stacks) >= self._max_stacks:
+                self._stacks.popitem(last=False)       # LRU out
+                self.stack_evictions += 1
+            stacks = self._stacks[stack_key] = (part_stack, w_stack)
+        else:
+            self._stacks.move_to_end(stack_key)        # mark MRU
+            self.stack_hits += 1
+        part_stack, w_stack = stacks
+        x_stack = jnp.stack([self._pad_x(h, x) for _, h, x in padded])
+        ys = fn(part_stack, x_stack, w_stack)
+        results: list = [None] * len(members)
+        for j, (i, h, _) in enumerate(members):
+            results[i] = self._unpad_y(h, ys[j])
         return results
 
     # ----------------------------------------------------------- stats -----
+    def attach_frontend(self, frontend) -> None:
+        """Register a serving frontend (`repro.serving.RequestQueue`) so
+        its `ServerStats` surface through ``stats()["serving"]``. One
+        frontend slot: attaching replaces the previous one, so a
+        secondary/throwaway queue over the same engine should pass
+        ``RequestQueue(..., attach=False)``."""
+        self._frontend = frontend
+
+    def class_waste(self) -> dict:
+        """Per-shape-class padded-MAC waste: members' true nnz vs the
+        class's padded capacity, per engine slice.
+
+        ``ell_capacity`` counts the MAC slots the ragged kernel actually
+        executes per member (Kmax × units × r_block — masked lanes are
+        dead trips, not skipped ones), so ``ell_waste_frac`` is the
+        fraction of ELL kernel work spent on padding. This is the
+        drift signal the ROADMAP's recompile-on-drift class retirement
+        will act on: a class whose waste stays high should be retired
+        and its members re-founded tighter.
+        """
+        agg: dict = {}
+        for h in self._graphs.values():
+            d = agg.setdefault(h.sclass, {
+                "members": 0, "ell_nnz": 0, "dense_nnz": 0, "coo_nnz": 0})
+            d["members"] += 1
+            d["ell_nnz"] += h.meta.nnz_ell
+            d["dense_nnz"] += h.meta.nnz_dense
+            d["coo_nnz"] += h.meta.nnz_coo
+        out: dict = {}
+        for sc, d in agg.items():
+            m = d["members"]
+            caps = {
+                "ell_capacity": sc.ell_mac_capacity * m,
+                "dense_capacity": sc.n_dense_tiles * sc.tile * sc.tile * m,
+                "coo_capacity": sc.coo_nnz * m,
+            }
+            true_total = d["ell_nnz"] + d["dense_nnz"] + d["coo_nnz"]
+            cap_total = sum(caps.values())
+            entry = dict(d)
+            entry.update(caps)
+            entry["ell_waste_frac"] = (
+                1.0 - d["ell_nnz"] / caps["ell_capacity"]
+                if caps["ell_capacity"] else 0.0)
+            entry["padded_mac_waste_frac"] = (
+                1.0 - true_total / cap_total if cap_total else 0.0)
+            out[sc.summary()] = entry
+        return out
+
     def stats(self) -> dict:
         classes = {h.sclass for h in self._graphs.values()}
-        return {
+        out = {
             "graphs": len(self._graphs),
             "shape_classes": len(classes),
-            "executors": len(self.executors._fns),
+            "executors": self.executors.size,
             "executor_max_entries": self.executors.max_entries,
             "cache_hits": self.executors.stats.hits,
             "cache_misses": self.executors.stats.misses,
             "cache_evictions": self.executors.stats.evictions,
             "per_class": self.executors.class_stats(),
+            "stacks": len(self._stacks),
+            "stack_max": self._max_stacks,
+            "stack_hits": self.stack_hits,
+            "stack_misses": self.stack_misses,
+            "stack_evictions": self.stack_evictions,
+            "class_waste": self.class_waste(),
         }
+        if self._frontend is not None:
+            out["serving"] = self._frontend.stats.snapshot()
+        return out
 
     def summary(self) -> str:
         s = self.stats()

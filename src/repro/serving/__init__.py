@@ -1,0 +1,26 @@
+"""Async serving frontend over the shape-class Engine (ISSUE 3).
+
+A standing `RequestQueue` accepts ``submit(name, x, deadline_ms)`` and
+returns futures; the `Scheduler` accumulates per-(shape class, f_in,
+weight shapes) pending queues and closes a batch on pow2 target size,
+deadline slack vs the EWMA `LatencyModel` estimate, or drain — then
+dispatches through the engine's cached vmapped executors. Admission
+control sheds load with a reason; `ServerStats` telemetry surfaces
+through ``Engine.stats()["serving"]``. `simulate` replays deterministic
+synthetic traces with zero real compiles.
+"""
+from .frontend import (DEFAULT_DEADLINE_MS, AdmissionError, AdmissionPolicy,
+                       RequestFuture, RequestQueue)
+from .latency import LatencyModel
+from .scheduler import BatchPlan, PendingRequest, Scheduler, pow2_ceil
+from .stats import ServerStats, SimClock
+from .simulate import (Arrival, StubEngine, bursty_trace, poisson_trace,
+                       replay_trace, run_smoke)
+
+__all__ = [
+    "DEFAULT_DEADLINE_MS", "AdmissionError", "AdmissionPolicy",
+    "RequestFuture", "RequestQueue", "LatencyModel", "BatchPlan",
+    "PendingRequest", "Scheduler", "pow2_ceil", "ServerStats", "SimClock",
+    "Arrival", "StubEngine", "bursty_trace", "poisson_trace",
+    "replay_trace", "run_smoke",
+]

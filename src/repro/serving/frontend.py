@@ -1,0 +1,238 @@
+"""The standing request queue: async frontend over the shape-class Engine.
+
+Turns `Engine` (register once, answer calls) into a server (accept
+traffic continuously, batch opportunistically):
+
+  submit(name, x, deadline_ms) ──▶ admission control ──▶ per-group
+  pending queue ──▶ `Scheduler` closes a batch (size / deadline slack /
+  drain) ──▶ one `Engine.serve_group` dispatch through the cached
+  vmapped executor ──▶ futures resolve.
+
+The queue is synchronous at heart — ``pump()`` closes and dispatches
+everything due *now*, ``drain()`` flushes — so replays and tests drive
+it deterministically on a `SimClock`. ``start()`` wraps the same pump in
+a daemon thread for real async serving: submitters block only for
+admission control, and the worker wakes on submission or when the
+scheduler forecasts the next deadline close.
+
+Dispatch wall time feeds the EWMA `LatencyModel`; dispatches that
+triggered an executor compile (detected via the engine's cache-miss
+counter) are reported cold and excluded, so one trace+compile can't
+poison the deadline rule. All counters land in `ServerStats`, surfaced
+through ``Engine.stats()["serving"]``.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import threading
+import time
+from typing import Optional
+
+from .latency import LatencyModel
+from .scheduler import Scheduler
+from .stats import ServerStats
+
+DEFAULT_DEADLINE_MS = 2000.0
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected at submit; ``reason`` names the exceeded budget."""
+
+    def __init__(self, reason: str, detail: str):
+        super().__init__(f"admission rejected ({reason}): {detail}")
+        self.reason = reason
+
+
+class RequestFuture(concurrent.futures.Future):
+    """Future for one submitted request — the stdlib `Future` used
+    executor-less (thread-safe set_result/set_exception/result(timeout),
+    plus done-callbacks and ``cancel()``: a request cancelled while
+    still pending never resolves, and the dispatch path skips it)."""
+
+
+class AdmissionPolicy:
+    """Budgets checked at submit; ``None`` disables a check."""
+
+    def __init__(self, max_depth: Optional[int] = 1024,
+                 max_wait_ms: Optional[float] = None):
+        self.max_depth = max_depth
+        self.max_wait_ms = max_wait_ms
+
+
+class RequestQueue:
+    """Standing request queue with deadline-based batch closing."""
+
+    def __init__(self, engine, *, target_batch: int = 8,
+                 default_deadline_ms: float = DEFAULT_DEADLINE_MS,
+                 admission: Optional[AdmissionPolicy] = None,
+                 latency_model: Optional[LatencyModel] = None,
+                 safety_factor: float = 2.0,
+                 max_linger_ms: Optional[float] = None,
+                 clock=time.monotonic, attach: bool = True):
+        self.engine = engine
+        self.clock = clock
+        self.default_deadline_ms = default_deadline_ms
+        self.admission = admission if admission is not None \
+            else AdmissionPolicy()
+        self.latency = latency_model if latency_model is not None \
+            else LatencyModel()
+        self.scheduler = Scheduler(
+            self.latency, target_batch=target_batch,
+            safety_factor=safety_factor,
+            max_linger_s=None if max_linger_ms is None
+            else max_linger_ms / 1e3)
+        self.stats = ServerStats()
+        self._lock = threading.RLock()
+        self._wake = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+        if attach:
+            attach_fn = getattr(engine, "attach_frontend", None)
+            if attach_fn is not None:
+                attach_fn(self)
+
+    # ---------------------------------------------------------- submit ----
+    def _group_key(self, name: str, x) -> tuple:
+        # delegated: the engine's group_key is the single source of
+        # truth for what may share one serve_group dispatch
+        return self.engine.group_key(name, x)
+
+    def submit(self, name: str, x,
+               deadline_ms: Optional[float] = None) -> RequestFuture:
+        """Queue one inference request; returns a future.
+
+        Raises `AdmissionError` (with ``.reason`` of ``"depth"`` or
+        ``"wait"``) instead of queueing when a budget is exceeded —
+        callers shed load at the door rather than timing out inside.
+        """
+        key = self._group_key(name, x)
+        if deadline_ms is None:
+            deadline_ms = self.default_deadline_ms
+        with self._lock:
+            now = self.clock()
+            pol = self.admission
+            if self._stopping:
+                # after stop() no worker will ever dispatch this; admit
+                # nothing rather than strand a future until its timeout
+                self.stats.on_reject("stopped")
+                raise AdmissionError("stopped", "queue worker stopped")
+            depth = self.scheduler.depth()
+            if pol.max_depth is not None and depth >= pol.max_depth:
+                self.stats.on_reject("depth")
+                raise AdmissionError(
+                    "depth", f"queue depth {depth} >= {pol.max_depth}")
+            if pol.max_wait_ms is not None:
+                wait_s = self.scheduler.estimated_wait_s(key, now)
+                if wait_s * 1e3 > pol.max_wait_ms:
+                    self.stats.on_reject("wait")
+                    raise AdmissionError(
+                        "wait", f"estimated wait {wait_s * 1e3:.1f}ms > "
+                                f"{pol.max_wait_ms}ms")
+            fut = RequestFuture()
+            self.stats.on_arrival(now)
+            self.scheduler.add(name, x, key, now,
+                               deadline_s=now + deadline_ms / 1e3,
+                               future=fut)
+            self._wake.notify_all()
+        return fut
+
+    # -------------------------------------------------------- dispatch ----
+    def _dispatch(self, plan) -> None:
+        """Run one closed batch through the engine; resolve its futures.
+
+        A failing dispatch resolves ITS members' futures with the error
+        and is counted — it never propagates, so sibling plans from the
+        same poll still dispatch and a threaded worker survives (a dead
+        pump that keeps admitting traffic is the worst failure mode).
+        """
+        members = plan.members
+        misses0 = self.engine.executors.stats.misses
+        t0 = self.clock()
+        try:
+            outs = self.engine.serve_group(
+                [(r.name, r.x) for r in members])
+            # JAX dispatch is async: wait for the results, or dt would
+            # be enqueue time and every latency/deadline number a lie.
+            for y in outs:
+                ready = getattr(y, "block_until_ready", None)
+                if ready is not None:
+                    ready()
+        except Exception as err:   # noqa: BLE001 — futures carry it
+            self.stats.dispatch_errors += 1
+            for r in members:
+                if r.future is not None and not r.future.cancelled():
+                    r.future.set_exception(err)
+            return
+        dt = self.clock() - t0
+        now = self.clock()
+        cold = self.engine.executors.stats.misses > misses0
+        self.latency.observe(plan.key, plan.padded, dt, cold=cold)
+        self.stats.on_batch(len(members), plan.padded, plan.reason)
+        for r, y in zip(members, outs):
+            if r.future is not None and not r.future.cancelled():
+                r.future.set_result(y)
+            self.stats.on_complete(now - r.submit_s,
+                                   missed=now > r.deadline_s)
+
+    def pump(self) -> int:
+        """Close and dispatch every batch due now; returns batches run."""
+        with self._lock:
+            plans = self.scheduler.poll(self.clock())
+        for plan in plans:
+            self._dispatch(plan)
+        return len(plans)
+
+    def drain(self) -> int:
+        """Rule (c): the caller declares the queue drained — close and
+        dispatch everything still pending."""
+        n = self.pump()
+        with self._lock:
+            plans = self.scheduler.flush()
+        for plan in plans:
+            self._dispatch(plan)
+        return n + len(plans)
+
+    def depth(self) -> int:
+        with self._lock:
+            return self.scheduler.depth()
+
+    # -------------------------------------------------- threaded serving --
+    def start(self) -> "RequestQueue":
+        """Run the pump in a daemon worker until ``stop()``."""
+        if self._thread is not None:
+            raise RuntimeError("worker already running")
+        self._stopping = False
+        self._thread = threading.Thread(
+            target=self._worker, name="repro-serving-pump", daemon=True)
+        self._thread.start()
+        return self
+
+    def _worker(self) -> None:
+        while True:
+            if self.pump():
+                # more batches may already be closable (e.g. a burst
+                # that size-filled several queues while we dispatched,
+                # whose notifies fired with no waiter) — don't sleep
+                # until a poll comes back empty
+                continue
+            with self._lock:
+                if self._stopping:   # stop() drains synchronously after join
+                    return
+                due = self.scheduler.next_due_s(self.clock())
+                if due is None:
+                    self._wake.wait(timeout=0.1)
+                else:
+                    delay = due - self.clock()
+                    if delay > 0:
+                        self._wake.wait(timeout=delay)
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker; by default flush pending work first."""
+        thread, self._thread = self._thread, None
+        if thread is not None:
+            with self._lock:
+                self._stopping = True
+                self._wake.notify_all()
+            thread.join()
+        if drain:
+            self.drain()

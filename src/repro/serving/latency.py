@@ -1,0 +1,70 @@
+"""Online EWMA latency model per executor key.
+
+The scheduler's deadline rule needs "how long would dispatching this
+batch take?" *before* dispatching it. One exponentially-weighted moving
+average per ``(group key, pow2 batch size)`` — the same granularity the
+`ExecutorCache` compiles at — answers that, learned purely from observed
+warm dispatch wall times.
+
+Cold samples (a dispatch that triggered an executor compile) must NOT be
+folded in: a single multi-second trace+XLA-compile would inflate the
+EWMA by orders of magnitude and make every later deadline check close
+batches absurdly early. The queue detects compiles via the executor
+cache's miss counter and reports them with ``cold=True``; they are
+counted but never averaged.
+
+Estimates for never-observed batch sizes fall back to the nearest
+observed size for the same key — scaled linearly UP for larger batches
+(vmap work is ~linear in the stacked axis) but NOT down for smaller
+ones, where fixed launch overhead dominates and linear scaling would be
+optimistic enough to close batches too late — then to ``default_s``.
+"""
+from __future__ import annotations
+
+
+class LatencyModel:
+    """EWMA of warm dispatch latency, keyed by (group key, batch size)."""
+
+    def __init__(self, alpha: float = 0.3, default_s: float = 0.05):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self.default_s = default_s
+        self._ewma: dict = {}      # (key, batch) -> seconds
+        self.observed = 0
+        self.cold_skipped = 0
+
+    def observe(self, key, batch: int, dt_s: float,
+                cold: bool = False) -> None:
+        """Fold one dispatch wall time in; cold samples are only counted."""
+        if cold:
+            self.cold_skipped += 1
+            return
+        self.observed += 1
+        k = (key, int(batch))
+        prev = self._ewma.get(k)
+        self._ewma[k] = (dt_s if prev is None
+                         else (1 - self.alpha) * prev + self.alpha * dt_s)
+
+    def estimate(self, key, batch: int) -> float:
+        """Expected warm latency of a ``batch``-sized dispatch of ``key``."""
+        batch = int(batch)
+        exact = self._ewma.get((key, batch))
+        if exact is not None:
+            return exact
+        # nearest observed batch for the same key; scale up, never down
+        best = None
+        for (k, b), v in self._ewma.items():
+            if k != key:
+                continue
+            cand = (abs(b - batch), v * max(1.0, batch / b))
+            if best is None or cand[0] < best[0]:
+                best = cand
+        return best[1] if best is not None else self.default_s
+
+    def known(self, key, batch: int) -> bool:
+        return (key, int(batch)) in self._ewma
+
+    def snapshot(self) -> dict:
+        return {"entries": len(self._ewma), "observed": self.observed,
+                "cold_skipped": self.cold_skipped}

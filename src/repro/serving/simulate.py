@@ -1,0 +1,258 @@
+"""Deterministic scheduler simulation: synthetic traffic, no compiles.
+
+CI needs to exercise the queue→scheduler→dispatch control flow on every
+push without paying a single XLA compile or depending on wall-clock
+timing. This module fakes the only two things the frontend touches —
+the clock (`SimClock`) and the engine (`StubEngine`, a configurable
+service-time model with the same ``handle`` / ``serve_group`` /
+``executors.stats.misses`` surface) — so an entire arrival trace replays
+in microseconds, bit-for-bit reproducibly.
+
+The same replay loop (`replay_trace`) also drives the *real* engine in
+``benchmarks/bench_serving.py``: only the clock and the dispatch target
+change between simulation and production measurement.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .frontend import AdmissionError, AdmissionPolicy, RequestQueue
+from .scheduler import pow2_ceil
+from .stats import SimClock
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    t_s: float
+    name: str
+
+
+def poisson_trace(n: int, rate_hz: float, names, seed: int = 0) -> list:
+    """n arrivals with Exp(rate) gaps, names drawn uniformly."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_hz))
+        out.append(Arrival(t, names[int(rng.integers(len(names)))]))
+    return out
+
+
+def bursty_trace(n_bursts: int, burst: int, gap_s: float, names,
+                 seed: int = 0, jitter_s: float = 0.0) -> list:
+    """n_bursts bursts of ``burst`` near-simultaneous arrivals, gap_s
+    apart — the arrival-time heterogeneity that starves call-at-a-time
+    batching."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_bursts):
+        t0 = i * gap_s
+        for j in range(burst):
+            t = t0 + (float(rng.exponential(jitter_s)) if jitter_s else 0.0)
+            out.append(Arrival(t, names[int(rng.integers(len(names)))]))
+    out.sort(key=lambda a: a.t_s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Stub engine: the frontend-facing Engine surface with modeled latency
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _StubHandle:
+    name: str
+    sclass: object
+    weights: object
+
+
+class _StubExecStats:
+    def __init__(self):
+        self.misses = 0
+
+
+class _StubExecutors:
+    def __init__(self):
+        self.stats = _StubExecStats()
+
+
+class StubEngine:
+    """Engine stand-in: serve_group advances the SimClock by a modeled
+    service time instead of running kernels.
+
+    ``service_s(batch)`` models warm dispatch latency; the first dispatch
+    of each (group key, padded batch) additionally pays ``compile_s`` and
+    bumps the executor-cache miss counter — exactly the signal the
+    frontend uses to keep cold samples out of the EWMA.
+    """
+
+    def __init__(self, clock: SimClock, *, base_s: float = 0.004,
+                 per_item_s: float = 0.001, compile_s: float = 0.25,
+                 sclass_of=None):
+        self.clock = clock
+        self.base_s = base_s
+        self.per_item_s = per_item_s
+        self.compile_s = compile_s
+        self.executors = _StubExecutors()
+        self._graphs: dict = {}
+        self._compiled: set = set()
+        self._sclass_of = sclass_of or (lambda name: "simclass")
+        self.dispatches: list = []     # (key, batch, reason placeholder)
+
+    def register(self, name: str) -> _StubHandle:
+        h = _StubHandle(name=name, sclass=self._sclass_of(name),
+                        weights=[np.zeros((2, 2), np.float32)])
+        self._graphs[name] = h
+        return h
+
+    def handle(self, name: str) -> _StubHandle:
+        return self._graphs[name]
+
+    def group_key(self, name: str, x) -> tuple:
+        h = self._graphs[name]
+        return (h.sclass, int(x.shape[1]),
+                tuple(tuple(w.shape) for w in h.weights))
+
+    def service_s(self, batch: int) -> float:
+        return self.base_s + self.per_item_s * batch
+
+    def serve_group(self, requests) -> list:
+        key = self.group_key(requests[0][0], requests[0][1])
+        bs = pow2_ceil(len(requests))
+        exec_key = (key, bs)
+        if exec_key not in self._compiled:
+            self._compiled.add(exec_key)
+            self.executors.stats.misses += 1
+            self.clock.advance(self.compile_s)
+        self.clock.advance(self.service_s(bs))
+        self.dispatches.append((key, len(requests)))
+        # deterministic output the tests can verify end-to-end
+        return [x * 2.0 for _, x in requests]
+
+
+# ---------------------------------------------------------------------------
+# Replay loop — shared by the simulation smoke and the real benchmark
+# ---------------------------------------------------------------------------
+
+def replay_trace(queue: RequestQueue, trace, x_of, *, wait=None,
+                 deadline_ms=None) -> tuple:
+    """Synchronously replay ``trace`` through ``queue``.
+
+    Between arrivals, any scheduler close that falls due fires at its
+    due time, not at the next arrival — ``wait(until_s)`` owns the
+    passage of time (SimClock.advance-based for simulation,
+    sleep-based for real measurement). Returns (futures, rejected)
+    aligned with the trace.
+    """
+    clock = queue.clock
+    if wait is None:                       # simulation default
+        def wait(until_s):
+            if until_s > clock():
+                clock.advance(until_s - clock())
+
+    futures, rejected = [], []
+    for arr in trace:
+        while True:
+            due = queue.scheduler.next_due_s(clock())
+            if due is None or due >= arr.t_s:
+                break
+            wait(due)
+            queue.pump()
+        wait(arr.t_s)
+        try:
+            futures.append(queue.submit(arr.name, x_of(arr.name),
+                                        deadline_ms=deadline_ms))
+            rejected.append(False)
+        except AdmissionError:
+            futures.append(None)
+            rejected.append(True)
+        queue.pump()
+    # rule (c): the trace is over — drain, honoring remaining deadlines
+    while queue.depth():
+        due = queue.scheduler.next_due_s(clock())
+        if due is not None:
+            wait(due)
+        if not queue.pump():
+            queue.drain()
+    return futures, rejected
+
+
+# ---------------------------------------------------------------------------
+# The CI smoke
+# ---------------------------------------------------------------------------
+
+def run_smoke(verbose: bool = True) -> dict:
+    """Deterministic end-to-end check of every closing rule + admission.
+
+    Raises AssertionError on any invariant break; returns the stats
+    snapshot for reporting.
+    """
+    clock = SimClock()
+    engine = StubEngine(clock)
+    names = [f"sim{i}" for i in range(4)]
+    for n in names:
+        engine.register(n)
+    xs = {n: np.full((4, 3), float(i + 1), np.float32)
+          for i, n in enumerate(names)}
+    queue = RequestQueue(engine, target_batch=4, default_deadline_ms=500.0,
+                         clock=clock)
+
+    # Warm the stub's executor keys at every pow2 batch the queue can
+    # dispatch — exactly what a production frontend does before taking
+    # traffic, so compile time never lands inside a request's deadline.
+    for bs in (1, 2, 4):
+        engine.serve_group([(names[0], xs[names[0]])] * bs)
+
+    # Phase 1 — a burst bigger than target_batch must close by SIZE.
+    burst = bursty_trace(2, 6, 2.0, names[:1], seed=1)
+    futs, _ = replay_trace(queue, burst, xs.__getitem__)
+    assert queue.stats.close_reasons.get("size", 0) >= 2, \
+        f"burst must close size-batches: {queue.stats.close_reasons}"
+
+    # Phase 2 — sparse Poisson arrivals: lone requests must linger, then
+    # close by DEADLINE slack, and still complete before their deadline.
+    sparse = [Arrival(clock() + 1.0 + i, names[i % 4]) for i in range(6)]
+    replay_trace(queue, sparse, xs.__getitem__)
+    assert queue.stats.close_reasons.get("deadline", 0) >= 1, \
+        f"sparse arrivals must deadline-close: {queue.stats.close_reasons}"
+
+    # Phase 3 — dense Poisson traffic over all graphs.
+    dense = poisson_trace(48, 200.0, names, seed=2)
+    dense = [Arrival(a.t_s + clock() + 0.5, a.name) for a in dense]
+    futs, _ = replay_trace(queue, dense, xs.__getitem__)
+    for arr, f in zip(dense, futs):
+        got = f.result(timeout=0)
+        np.testing.assert_array_equal(got, xs[arr.name] * 2.0)
+
+    snap = queue.stats.snapshot()
+    assert snap["deadline_misses"] == 0, snap
+    assert snap["completed"] == snap["arrivals"], snap
+    assert snap["mean_batch"] > 1.0, \
+        f"queue must batch Poisson traffic: {snap}"
+
+    # Phase 4 — admission control: a zero-capacity policy rejects with
+    # reason, and the rejection is counted.
+    tight = RequestQueue(engine, target_batch=4, clock=clock,
+                         admission=AdmissionPolicy(max_depth=2),
+                         default_deadline_ms=500.0, attach=False)
+    flood = [Arrival(clock(), names[0])] * 5
+    _, rej = replay_trace(tight, flood, xs.__getitem__)
+    tight.drain()
+    assert not any(rej[:2]) and any(rej), \
+        "overflow beyond max_depth must be rejected"
+    assert tight.stats.rejected.get("depth", 0) >= 1
+
+    if verbose:
+        print("[sim] " + queue.stats.summary())
+        print(f"[sim] batch_hist={snap['batch_hist']} "
+              f"close_reasons={snap['close_reasons']} "
+              f"latency_model={queue.latency.snapshot()}")
+        print(f"[sim] admission: rejected={tight.stats.rejected}")
+        print("[sim] scheduler-simulation smoke OK "
+              f"(virtual time {clock():.2f}s, real compiles: 0)")
+    return snap

@@ -1,0 +1,129 @@
+"""Serving-frontend telemetry (`ServerStats`) and the simulation clock.
+
+Every number a capacity planner needs to size the frontend lives here:
+arrival rate, batch-size histogram (occupancy), request latency
+percentiles, deadline misses, and per-reason admission rejections. The
+queue updates counters inline; ``snapshot()`` renders one JSON-able dict
+that `Engine.stats()` surfaces as its ``serving`` block.
+
+`SimClock` is the injectable manual clock the deterministic scheduler
+simulation and the tests run on — the production default is
+``time.monotonic``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Cap on retained per-request latency samples: percentiles come from the
+# most recent window, so a long-lived server's stats dict stays bounded.
+LATENCY_WINDOW = 8192
+
+
+class SimClock:
+    """Manual monotonic clock for deterministic scheduler simulation."""
+
+    def __init__(self, t0: float = 0.0):
+        self.now = float(t0)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"SimClock cannot go backwards (dt={dt})")
+        self.now += dt
+        return self.now
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Counters for one serving frontend; all times in seconds."""
+
+    arrivals: int = 0
+    completed: int = 0
+    batches: int = 0
+    deadline_misses: int = 0
+    dispatch_errors: int = 0
+    rejected: dict = dataclasses.field(default_factory=dict)
+    batch_hist: dict = dataclasses.field(default_factory=dict)
+    close_reasons: dict = dataclasses.field(default_factory=dict)
+    padded_slots: int = 0          # pow2 vmap slots actually dispatched
+    first_arrival_s: float = 0.0
+    last_arrival_s: float = 0.0
+    latency_s: list = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------ hooks ----
+    def on_arrival(self, now: float) -> None:
+        if self.arrivals == 0:
+            self.first_arrival_s = now
+        self.last_arrival_s = now
+        self.arrivals += 1
+
+    def on_reject(self, reason: str) -> None:
+        self.rejected[reason] = self.rejected.get(reason, 0) + 1
+
+    def on_batch(self, size: int, padded: int, reason: str) -> None:
+        self.batches += 1
+        self.padded_slots += padded
+        self.batch_hist[size] = self.batch_hist.get(size, 0) + 1
+        self.close_reasons[reason] = self.close_reasons.get(reason, 0) + 1
+
+    def on_complete(self, latency_s: float, missed: bool) -> None:
+        self.completed += 1
+        if missed:
+            self.deadline_misses += 1
+        self.latency_s.append(latency_s)
+        if len(self.latency_s) > LATENCY_WINDOW:
+            del self.latency_s[: len(self.latency_s) - LATENCY_WINDOW]
+
+    # --------------------------------------------------------- rollups ----
+    @property
+    def rejected_total(self) -> int:
+        return sum(self.rejected.values())
+
+    @property
+    def mean_batch(self) -> float:
+        """Occupancy: served requests per dispatched batch."""
+        return self.completed / self.batches if self.batches else 0.0
+
+    @property
+    def pad_occupancy(self) -> float:
+        """Live members per pow2-padded vmap slot (1.0 = no pad waste)."""
+        return self.completed / self.padded_slots if self.padded_slots else 0.0
+
+    def arrival_rate_hz(self) -> float:
+        span = self.last_arrival_s - self.first_arrival_s
+        return (self.arrivals - 1) / span if span > 0 else 0.0
+
+    def latency_percentile_ms(self, q: float) -> float:
+        if not self.latency_s:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latency_s), q) * 1e3)
+
+    def snapshot(self) -> dict:
+        return {
+            "arrivals": self.arrivals,
+            "completed": self.completed,
+            "rejected": dict(self.rejected),
+            "rejected_total": self.rejected_total,
+            "batches": self.batches,
+            "batch_hist": dict(sorted(self.batch_hist.items())),
+            "mean_batch": self.mean_batch,
+            "pad_occupancy": self.pad_occupancy,
+            "close_reasons": dict(self.close_reasons),
+            "arrival_rate_hz": self.arrival_rate_hz(),
+            "p50_ms": self.latency_percentile_ms(50),
+            "p99_ms": self.latency_percentile_ms(99),
+            "deadline_misses": self.deadline_misses,
+            "dispatch_errors": self.dispatch_errors,
+        }
+
+    def summary(self) -> str:
+        return (f"ServerStats arrivals={self.arrivals} "
+                f"completed={self.completed} rejected={self.rejected_total} "
+                f"batches={self.batches} mean_batch={self.mean_batch:.2f} "
+                f"p50={self.latency_percentile_ms(50):.1f}ms "
+                f"p99={self.latency_percentile_ms(99):.1f}ms "
+                f"misses={self.deadline_misses}")
