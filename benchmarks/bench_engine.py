@@ -16,7 +16,17 @@ Reports per-dispatch cold/warm wall-clock, shape-class count, and the
 ELL kernel launches per SpMM — the ragged path must hold throughput
 against the fused baseline while tracing exactly one ELL kernel.
 
+``--drift`` runs the shape-class lifecycle scenario instead: an SBM
+family whose size distribution shifts mid-run (big graphs register and
+serve, then smaller cousins arrive and pad into the oversized class).
+Two identical traffic replays — retirement disabled vs enabled
+(`LifecycleManager`) — must show LOWER total padded-MAC waste with
+retirement, recompiles bounded by the per-window budget, and bitwise
+IDENTICAL outputs (class padding is value-neutral, so the lifecycle can
+never change an answer).
+
 Run:  PYTHONPATH=src python benchmarks/bench_engine.py [--graphs 6]
+      PYTHONPATH=src python benchmarks/bench_engine.py --drift
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ from repro.core import csr_from_scipy
 from repro.core.hybrid_spmm import hybrid_spmm
 from repro.core.partition import PartitionConfig, analyze_and_partition
 from repro.data.graphs import normalized_adjacency, sbm_graph
-from repro.engine import Engine
+from repro.engine import Engine, LifecycleConfig, LifecycleManager
 
 ENGINE_DISPATCHES = ("ragged", "fused")
 
@@ -142,10 +152,127 @@ def run(n_graphs: int = 6, reps: int = 20, f: int = 64,
     return res
 
 
+# ---------------------------------------------------------------------------
+# Drift scenario: waste-budget retirement vs the no-retirement baseline
+# ---------------------------------------------------------------------------
+
+def _total_waste(engine):
+    """(absolute padded-MAC slots wasted, waste fraction) over all classes."""
+    cw = engine.class_waste()
+    cap = sum(e["ell_capacity"] + e["dense_capacity"] + e["coo_capacity"]
+              for e in cw.values())
+    true = sum(e["ell_nnz"] + e["dense_nnz"] + e["coo_nnz"]
+               for e in cw.values())
+    return cap - true, (1.0 - true / cap) if cap else 0.0
+
+
+def run_drift(n_big: int = 3, n_small: int = 4, reps: int = 2, f: int = 32,
+              windows: int = 3, waste_budget: float = None,
+              verbose: bool = True) -> dict:
+    """Identical drifting traffic, retirement disabled vs enabled.
+
+    Phase 1 registers + serves the big family (founds the class); the
+    mix then shifts to a family half the size that pads into the same
+    class. ``windows`` serve-then-``step()`` rounds follow. The budget
+    defaults to the midpoint between the steady-state and post-drift
+    waste fractions measured on the baseline run — i.e. the retirement
+    trigger is the *drift*, not the founding headroom.
+    """
+    big = make_family(n_big, n=1024, seed0=0)
+    small = [(f"small{i}", csr, n) for i, (_, csr, n)
+             in enumerate(make_family(n_small, n=512, seed0=100))]
+    rng = np.random.default_rng(1)
+    feats = {name: rng.standard_normal((n, f)).astype(np.float32)
+             for name, _, n in big + small}
+
+    def drive(budget):
+        engine = Engine()
+        for name, csr, n in big:
+            engine.register(name, csr)
+        for name, _, n in big:
+            engine.spmm(name, feats[name]).block_until_ready()
+        waste_steady = _total_waste(engine)[1]
+        for name, csr, n in small:
+            engine.register(name, csr)
+        waste_drifted = _total_waste(engine)[1]
+        mgr = None
+        if budget is not None:
+            cfg = LifecycleConfig(waste_budget=budget, breach_windows=2,
+                                  min_traffic=1, max_retires_per_window=1,
+                                  max_recompiles_per_window=4)
+            mgr = LifecycleManager(engine, config=cfg)
+        outs = {}
+        reports = []
+        for w in range(windows):
+            for name, _, n in big + small:
+                for _ in range(reps):
+                    y = engine.spmm(name, feats[name]).block_until_ready()
+                outs[name] = np.asarray(y)
+            if mgr is not None:
+                reports.append(mgr.step())
+        return engine, mgr, outs, waste_steady, waste_drifted, reports
+
+    base_eng, _, base_outs, w_steady, w_drift, _ = drive(None)
+    if waste_budget is None:
+        waste_budget = 0.5 * (w_steady + w_drift)
+    life_eng, mgr, life_outs, _, _, reports = drive(waste_budget)
+
+    # padding is value-neutral: retirement must never change an answer
+    for name in base_outs:
+        assert np.array_equal(base_outs[name], life_outs[name]), \
+            f"retirement changed outputs for {name!r}"
+    per_window_ok = all(r["recompiles"] <= mgr.config.max_recompiles_per_window
+                       for r in reports)
+    assert per_window_ok, reports
+    base_abs, base_frac = _total_waste(base_eng)
+    life_abs, life_frac = _total_waste(life_eng)
+    assert mgr.retires >= 1, "drift must trigger at least one retirement"
+    assert life_abs < base_abs, \
+        f"retirement must cut padded-MAC waste ({life_abs} vs {base_abs})"
+
+    res = {
+        "waste_budget": waste_budget,
+        "waste_steady_frac": w_steady, "waste_drifted_frac": w_drift,
+        "baseline_waste_slots": base_abs, "baseline_waste_frac": base_frac,
+        "lifecycle_waste_slots": life_abs, "lifecycle_waste_frac": life_frac,
+        "retires": mgr.retires, "reclassed": mgr.reclassed_members,
+        "recompiles": mgr.recompiles,
+        "recompile_budget_per_window": mgr.config.max_recompiles_per_window,
+        "baseline_compiles": base_eng.stats()["cache_misses"],
+        "lifecycle_compiles": life_eng.stats()["cache_misses"],
+        "outputs_bitwise_equal": True,
+    }
+    if verbose:
+        print(f"== drift scenario | {n_big} big + {n_small} small graphs, "
+              f"{windows} windows x {reps} reps, F={f} ==")
+        print(f"waste frac: steady {w_steady:.3f} -> drifted {w_drift:.3f} "
+              f"(budget {waste_budget:.3f})")
+        print(f"{'':14s} {'waste slots':>12} {'waste frac':>11} "
+              f"{'compiles':>9}")
+        print(f"{'no retirement':14s} {base_abs:>12d} {base_frac:>11.3f} "
+              f"{res['baseline_compiles']:>9d}")
+        print(f"{'lifecycle':14s} {life_abs:>12d} {life_frac:>11.3f} "
+              f"{res['lifecycle_compiles']:>9d}")
+        print(f"retires={mgr.retires} reclassed={mgr.reclassed_members} "
+              f"recompiles={mgr.recompiles} (<= "
+              f"{mgr.config.max_recompiles_per_window}/window over "
+              f"{windows} windows) | outputs bitwise-equal: yes")
+        print(life_eng.summary())
+    return res
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", type=int, default=6)
-    ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--reps", type=int, default=None,
+                    help="reps per graph (default: 20, or 2 with --drift)")
     ap.add_argument("--features", type=int, default=64)
+    ap.add_argument("--drift", action="store_true",
+                    help="run the shape-class lifecycle drift scenario")
     args = ap.parse_args()
-    run(args.graphs, args.reps, args.features)
+    if args.drift:
+        run_drift(reps=2 if args.reps is None else args.reps,
+                  f=args.features)
+    else:
+        run(args.graphs, 20 if args.reps is None else args.reps,
+            args.features)

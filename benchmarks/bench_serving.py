@@ -30,7 +30,8 @@ import time
 import numpy as np
 
 from repro.serving import (Arrival, RequestQueue, bursty_trace,
-                           poisson_trace, replay_trace, run_smoke)
+                           poisson_trace, replay_trace,
+                           run_lifecycle_smoke, run_smoke)
 
 
 def make_family(n_graphs: int, f_in: int, hidden: int, n_classes: int,
@@ -211,6 +212,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.smoke:
         run_smoke()
+        run_lifecycle_smoke()
     else:
         run(args.graphs, args.requests, args.rate,
             target_batch=args.target_batch)

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Docs link checker (tier-1): every internal markdown link resolves.
+
+Scans README.md and docs/**/*.md for markdown links `[text](target)`
+and verifies:
+
+  * relative file targets exist (resolved against the linking file);
+  * `#anchor` fragments — both same-file (`#x`) and cross-file
+    (`file.md#x`) — match a heading in the target file, using
+    GitHub-style slugging (lowercase, spaces to dashes, punctuation
+    dropped);
+  * no link target is an absolute filesystem path.
+
+External links (http/https/mailto) are intentionally NOT fetched: CI
+must stay offline-deterministic. Exit 1 with a per-link report on any
+failure.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("**/*.md"))]
+
+# [text](target) — skips images' leading ! capture-wise (same rules apply)
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: strip markup, lowercase, dash-join."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return re.sub(r" +", "-", text)
+
+
+def anchors_of(path: Path) -> set:
+    return {slugify(h) for h in HEADING_RE.findall(
+        path.read_text(encoding="utf-8"))}
+
+
+def check_file(path: Path) -> list:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("/"):
+            errors.append(f"{path.relative_to(ROOT)}: absolute path "
+                          f"link {target!r}")
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = (path if not file_part
+                else (path.parent / file_part).resolve())
+        if not dest.exists():
+            errors.append(f"{path.relative_to(ROOT)}: broken link "
+                          f"{target!r} (no such file)")
+            continue
+        if anchor and dest.suffix == ".md":
+            if slugify(anchor) not in anchors_of(dest):
+                errors.append(f"{path.relative_to(ROOT)}: broken anchor "
+                              f"{target!r} (no matching heading)")
+    return errors
+
+
+def main() -> int:
+    missing = [p for p in DOC_FILES if not p.exists()]
+    if missing:
+        for p in missing:
+            print(f"docs check: required file missing: {p}")
+        return 1
+    errors = []
+    n_links = 0
+    for path in DOC_FILES:
+        n_links += len(LINK_RE.findall(path.read_text(encoding="utf-8")))
+        errors.extend(check_file(path))
+    if errors:
+        print(f"docs check: {len(errors)} broken link(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs check OK: {len(DOC_FILES)} files, {n_links} links "
+          f"(internal targets + anchors resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

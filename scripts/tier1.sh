@@ -11,6 +11,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_spmm.py --dispatch ragged --smoke
 # Scheduler smoke: deterministic serving-frontend simulation (synthetic
 # arrival trace, SimClock, stub engine — zero real compiles) exercising
-# every batch-closing rule, deadline accounting, and admission control.
+# every batch-closing rule, deadline accounting, admission control, and
+# the shape-class lifecycle drift policy (retirement + drain barrier).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serving.py --smoke
+# Docs check: the serving API docstring examples actually run, and every
+# internal link in README.md + docs/ resolves (files and anchors).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m pytest --doctest-modules -q src/repro/serving
+python scripts/check_docs.py

@@ -2,19 +2,26 @@
 
 Pads TriPartitions into canonical shape classes so structurally-similar
 graphs share one compiled executor, caches the jit'd executors, and
-batches multi-graph traffic with per-class vmap. The async standing
+batches multi-graph traffic with per-class vmap. `lifecycle` closes the
+density-aware loop: classes whose rolling padded-MAC waste exceeds a
+budget are retired and their members re-founded into tighter classes,
+with hysteresis and a bounded recompile budget. The async standing
 request queue in front of this lives in `repro.serving`.
 """
 from .executor import CacheStats, ExecutorCache
+from .lifecycle import LifecycleConfig, LifecycleManager, RetirementPlan
 from .serving import Engine, GraphHandle
 from .shape_class import (DEFAULT_K_LADDER, ClassNeed, ClassRegistry,
                           ShapeClass, ShapePolicy, class_fits,
                           class_requirements, grow_class, pad_to_class,
-                          round_up_ladder, round_up_pow2, shape_class_of)
+                          round_up_ladder, round_up_pow2, shape_class_of,
+                          unpad_from_class)
 
 __all__ = [
     "CacheStats", "ExecutorCache", "Engine", "GraphHandle",
+    "LifecycleConfig", "LifecycleManager", "RetirementPlan",
     "DEFAULT_K_LADDER", "ClassNeed", "ClassRegistry", "ShapeClass",
     "ShapePolicy", "class_fits", "class_requirements", "grow_class",
     "pad_to_class", "round_up_ladder", "round_up_pow2", "shape_class_of",
+    "unpad_from_class",
 ]

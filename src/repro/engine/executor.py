@@ -34,7 +34,8 @@ from .shape_class import ShapeClass
 class CacheStats:
     hits: int = 0
     misses: int = 0
-    evictions: int = 0
+    evictions: int = 0     # dropped by LRU capacity pressure
+    invalidations: int = 0  # dropped because the class was retired
 
     @property
     def total(self) -> int:
@@ -42,7 +43,8 @@ class CacheStats:
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
-                "evictions": self.evictions}
+                "evictions": self.evictions,
+                "invalidations": self.invalidations}
 
 
 class ExecutorCache:
@@ -102,6 +104,32 @@ class ExecutorCache:
         """Per-shape-class telemetry: {summary str: hit/miss/evict dict}."""
         return {sc.summary(): st.as_dict()
                 for sc, st in self._class_stats.items()}
+
+    def traffic_by_class(self) -> dict:
+        """Cumulative executor lookups (hits + misses) per ShapeClass.
+
+        The lifecycle manager's traffic gate reads this: a class with no
+        lookups in a window runs no kernels, so retiring it buys nothing
+        and would only spend recompile budget.
+        """
+        return {sc: st.total for sc, st in self._class_stats.items()}
+
+    def invalidate_class(self, sc: ShapeClass) -> int:
+        """Drop every cached executor keyed on ``sc`` (class retired).
+
+        Distinct from LRU eviction — invalidations are counted
+        separately (globally and per class) so capacity pressure and
+        lifecycle churn stay distinguishable in telemetry. The LRU
+        order of surviving entries is untouched. Returns the number of
+        executors dropped.
+        """
+        dead = [key for key in self._fns if key[1] == sc]
+        for key in dead:
+            del self._fns[key]
+        if dead:
+            self.stats.invalidations += len(dead)
+            self._per_class(sc).invalidations += len(dead)
+        return len(dead)
 
     # ------------------------------------------------------------ spmm -----
     def spmm(self, sc: ShapeClass, f: int):

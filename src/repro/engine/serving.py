@@ -35,8 +35,9 @@ from repro.core.partition import PartitionConfig, analyze_and_partition
 from repro.core.reorder import reorder as reorder_csr
 
 from .executor import ExecutorCache
-from .shape_class import (ClassRegistry, ShapeClass, ShapePolicy,
-                          pad_to_class)
+from .lifecycle import RetirementPlan
+from .shape_class import (ClassNeed, ClassRegistry, ShapeClass, ShapePolicy,
+                          class_requirements, pad_to_class, unpad_from_class)
 
 
 @dataclasses.dataclass
@@ -52,6 +53,9 @@ class GraphHandle:
     inv_perm: Optional[np.ndarray]
     weights: Optional[list]     # per-graph GCN weights (jnp), or None
     preprocess_s: float = 0.0
+    # exact pre-snapping shape requirements, kept so the lifecycle can
+    # re-classify this graph on retirement without re-partitioning
+    need: Optional[ClassNeed] = None
 
     @property
     def n_rows(self) -> int:
@@ -88,6 +92,7 @@ class Engine:
         self.stack_misses = 0
         self.stack_evictions = 0
         self._frontend = None   # attached repro.serving.RequestQueue
+        self._lifecycle = None  # attached LifecycleManager
 
     # --------------------------------------------------------- offline -----
     def register(self, name: str, csr: CSRMatrix, *,
@@ -112,7 +117,8 @@ class Engine:
                 inv_perm = np.empty_like(perm)
                 inv_perm[perm] = np.arange(len(perm))
             part, meta, _ = analyze_and_partition(csr, self.partition_cfg)
-        sc = self.registry.classify(part, meta)
+        need = class_requirements(part, meta, self.policy)
+        sc = self.registry.classify_need(need)
         padded, pmeta = pad_to_class(part, meta, sc)
         # Place the padded partition on device once; jit args that are
         # already device arrays are zero-copy on every later call.
@@ -122,7 +128,7 @@ class Engine:
             perm=perm, inv_perm=inv_perm,
             weights=None if weights is None else [jnp.asarray(w)
                                                   for w in weights],
-            preprocess_s=time.perf_counter() - t0)
+            preprocess_s=time.perf_counter() - t0, need=need)
         self._graphs[name] = handle
         # a re-registered name invalidates every cached group stack that
         # contains it — otherwise serve_batch would keep serving the old
@@ -276,17 +282,18 @@ class Engine:
         ``RequestQueue(..., attach=False)``."""
         self._frontend = frontend
 
-    def class_waste(self) -> dict:
-        """Per-shape-class padded-MAC waste: members' true nnz vs the
-        class's padded capacity, per engine slice.
+    def class_waste_by_class(self) -> dict:
+        """Per-shape-class padded-MAC waste, keyed by ShapeClass object:
+        members' true nnz vs the class's padded capacity, per engine
+        slice.
 
         ``ell_capacity`` counts the MAC slots the ragged kernel actually
         executes per member (Kmax × units × r_block — masked lanes are
         dead trips, not skipped ones), so ``ell_waste_frac`` is the
-        fraction of ELL kernel work spent on padding. This is the
-        drift signal the ROADMAP's recompile-on-drift class retirement
-        will act on: a class whose waste stays high should be retired
-        and its members re-founded tighter.
+        fraction of ELL kernel work spent on padding. This is the drift
+        signal the lifecycle manager acts on: a class whose rolling
+        waste stays above budget is retired and its members re-founded
+        tighter (`repro.engine.lifecycle`).
         """
         agg: dict = {}
         for h in self._graphs.values():
@@ -313,8 +320,91 @@ class Engine:
                 if caps["ell_capacity"] else 0.0)
             entry["padded_mac_waste_frac"] = (
                 1.0 - true_total / cap_total if cap_total else 0.0)
-            out[sc.summary()] = entry
+            out[sc] = entry
         return out
+
+    def class_waste(self) -> dict:
+        """`class_waste_by_class` rendered with summary-string keys —
+        the JSON-able ``stats()["class_waste"]`` block."""
+        return {sc.summary(): entry
+                for sc, entry in self.class_waste_by_class().items()}
+
+    def class_traffic(self) -> dict:
+        """Cumulative executor lookups per ShapeClass (lifecycle input)."""
+        return self.executors.traffic_by_class()
+
+    # ------------------------------------------------------- lifecycle -----
+    def attach_lifecycle(self, manager) -> None:
+        """Register a `repro.engine.lifecycle.LifecycleManager` so its
+        counters surface through ``stats()["lifecycle"]``. One slot,
+        like ``attach_frontend``."""
+        self._lifecycle = manager
+
+    def members_of(self, sc: ShapeClass) -> list:
+        """Names of every registered graph currently padded into ``sc``."""
+        return [h.name for h in self._graphs.values() if h.sclass == sc]
+
+    def plan_retirement(self, sc: ShapeClass) -> Optional[RetirementPlan]:
+        """Plan (without mutating anything) the re-classing that
+        retiring ``sc`` implies.
+
+        Members are re-fit largest-first — first into surviving live
+        classes under the normal fit rules, then into tight
+        (growth=1.0) classes founded for this plan — so the biggest
+        member founds the successor and its smaller siblings join it
+        instead of each founding their own. Returns None when ``sc``
+        has no members (nothing to re-class; the registry can just
+        drop it).
+        """
+        members = [h for h in self._graphs.values() if h.sclass == sc]
+        if not members:
+            return None
+        members.sort(key=lambda h: (
+            -(h.need.ell_kmax * h.need.ell_units * h.need.r_block
+              + h.need.n_dense_tiles * h.need.tile * h.need.tile
+              + h.need.coo_nnz),
+            h.name))
+        targets, new = self.registry.plan_reclass(
+            [h.need for h in members], exclude=(sc,))
+        return RetirementPlan(
+            sclass=sc, names=tuple(h.name for h in members),
+            targets=tuple(targets), new_classes=tuple(new))
+
+    def execute_retirement(self, plan: RetirementPlan) -> dict:
+        """Apply a `RetirementPlan`: retire the class in the registry,
+        re-pad every member into its successor class, and invalidate
+        the retired class's cached executors and member stacks.
+
+        Callers that serve live traffic must drain in-flight batches
+        keyed on the retiring class FIRST (`RequestQueue.drain_class`
+        runs this as its ``action`` under the queue lock) — after this
+        returns, ``group_key`` routes the members to their successor
+        classes and the old executors are gone.
+        """
+        sc = plan.sclass
+        self.registry.retire(sc)
+        moved = []
+        for name, target in zip(plan.names, plan.targets):
+            h = self._graphs.get(name)
+            if h is None or h.sclass != sc:
+                continue    # re-registered since planning; already moved on
+            self.registry.admit(target)
+            part = unpad_from_class(h.part, h.padded_meta, h.meta)
+            padded, pmeta = pad_to_class(part, h.meta, target)
+            h.part = jax.device_put(padded)
+            h.padded_meta = pmeta
+            h.sclass = target
+            moved.append(name)
+        invalidated = self.executors.invalidate_class(sc)
+        # cached member stacks hold the OLD padded arrays of moved
+        # graphs — any stack containing one is stale
+        moved_set = set(moved)
+        self._stacks = collections.OrderedDict(
+            (k, v) for k, v in self._stacks.items()
+            if not moved_set.intersection(k))
+        return {"members": len(moved),
+                "executors_invalidated": invalidated,
+                "new_classes": len(plan.new_classes)}
 
     def stats(self) -> dict:
         classes = {h.sclass for h in self._graphs.values()}
@@ -333,9 +423,12 @@ class Engine:
             "stack_misses": self.stack_misses,
             "stack_evictions": self.stack_evictions,
             "class_waste": self.class_waste(),
+            "registry": self.registry.stats(),
         }
         if self._frontend is not None:
             out["serving"] = self._frontend.stats.snapshot()
+        if self._lifecycle is not None:
+            out["lifecycle"] = self._lifecycle.snapshot()
         return out
 
     def summary(self) -> str:

@@ -33,6 +33,7 @@ partition computes exactly the same product as the original
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -286,21 +287,106 @@ def grow_class(need: ClassNeed,
 
 
 class ClassRegistry:
-    """First-fit registry of founded shape classes (one per Engine)."""
+    """First-fit registry of founded shape classes (one per Engine).
+
+    The registry is the single source of truth for grouping: every graph
+    the engine serves was classified here, and the lifecycle manager's
+    retirement decisions mutate *this* list — never per-graph state —
+    so classification and serving can't drift apart.
+
+    Lifecycle paths (PR 4):
+
+      * ``retire(sc)`` removes a class from the live list so no future
+        graph joins it; the class is remembered in ``retired`` so a
+        later identical founding is visible as a **refound** (a signal
+        the retirement was premature — the traffic came back).
+      * ``admit(sc)`` re-admits a concrete class (a retirement plan's
+        successor) into the live list, un-retiring it if needed.
+      * ``plan_reclass(needs, ...)`` is the pure planning half of
+        recompile-on-drift: first-fit the needs into surviving classes,
+        founding tight new ones only where nothing fits — without
+        mutating the registry, so the lifecycle manager can budget the
+        recompiles a retirement would cost *before* committing to it.
+    """
 
     def __init__(self, policy: ShapePolicy = ShapePolicy()):
         self.policy = policy
         self.classes: list = []
+        self.retired: list = []
+        self.retire_count = 0
+        self.refounds = 0
 
     def classify(self, part: TriPartition,
                  meta: PartitionMeta) -> ShapeClass:
-        need = class_requirements(part, meta, self.policy)
+        return self.classify_need(class_requirements(part, meta, self.policy))
+
+    def classify_need(self, need: ClassNeed) -> ShapeClass:
         for sc in self.classes:
             if class_fits(need, sc, self.policy):
                 return sc
         sc = grow_class(need, self.policy)
-        self.classes.append(sc)
+        self._found(sc)
         return sc
+
+    def _found(self, sc: ShapeClass) -> None:
+        """Add a class to the live list, counting retired-class revivals."""
+        if sc in self.retired:
+            self.retired.remove(sc)
+            self.refounds += 1
+        if sc not in self.classes:
+            self.classes.append(sc)
+
+    # ----------------------------------------------------- lifecycle ----
+    def retire(self, sc: ShapeClass) -> bool:
+        """Remove ``sc`` from the live list; no future graph joins it."""
+        if sc not in self.classes:
+            return False
+        self.classes.remove(sc)
+        if sc not in self.retired:
+            self.retired.append(sc)
+        self.retire_count += 1
+        return True
+
+    def admit(self, sc: ShapeClass) -> None:
+        """Re-admission path: make a planned successor class live."""
+        self._found(sc)
+
+    def plan_reclass(self, needs, exclude=(),
+                     found_policy: Optional[ShapePolicy] = None) -> tuple:
+        """Dry-run first-fit of ``needs`` with ``exclude`` classes gone.
+
+        Returns ``(targets, new_classes)``: ``targets[i]`` is the class
+        ``needs[i]`` would land in, drawn from surviving live classes
+        first, then from classes this plan already founded, then by
+        founding a fresh class with ``found_policy`` (default: the
+        registry policy with growth 1.0 — retirement re-founds *tight*,
+        the members are known and headroom is what caused the waste).
+        Pure: the registry is not mutated; ``Engine.execute_retirement``
+        applies the plan.
+        """
+        if found_policy is None:
+            found_policy = dataclasses.replace(self.policy, growth=1.0,
+                                               coo_growth=1.0)
+        live = [c for c in self.classes if c not in exclude]
+        new: list = []
+        targets: list = []
+        for need in needs:
+            target = next((c for c in live
+                           if class_fits(need, c, self.policy)), None)
+            if target is None:
+                target = next((c for c in new
+                               if class_fits(need, c, self.policy)), None)
+            if target is None:
+                target = grow_class(need, found_policy)
+                new.append(target)
+            targets.append(target)
+        return targets, new
+
+    def stats(self) -> dict:
+        return {"live_classes": len(self.classes),
+                "retired_classes": len(self.retired),
+                "retires": self.retire_count,
+                "refounds": self.refounds}
 
 
 def pad_to_class(part: TriPartition, meta: PartitionMeta,
@@ -396,3 +482,43 @@ def pad_to_class(part: TriPartition, meta: PartitionMeta,
     )
 
     return TriPartition(dense=dense, ell=ell, coo=coo), pmeta
+
+
+def unpad_from_class(part: TriPartition, padded_meta: PartitionMeta,
+                     meta: PartitionMeta) -> TriPartition:
+    """Invert `pad_to_class`: recover the original partition arrays.
+
+    ``pad_to_class`` only ever *appends* value-neutral padding (dense
+    tiles, ELL Kmax columns + all-padding units, COO triples), so the
+    original arrays are exact prefixes; the one non-slice operation is
+    mapping the padded meta's ELL sentinel row back to the original's.
+    This is what lets retirement re-pad a member into a tighter
+    successor class without keeping a second, unpadded copy of every
+    registered graph alive: ``pad_to_class(unpad_from_class(p), m, sc')``
+    round-trips bit-for-bit.
+
+    Host-side numpy throughout (``part`` may be device-resident).
+    """
+    u = sum(n for _, n in meta.ell_segments)
+    kmax = max((k for k, _ in meta.ell_segments), default=0)
+    rows = np.asarray(part.ell.rows)[:u].copy()
+    rows[rows == padded_meta.ell_sentinel_row] = meta.ell_sentinel_row
+    return TriPartition(
+        dense=DenseTiles(
+            tiles=np.asarray(part.dense.tiles)[: meta.n_dense_tiles],
+            tile_row=np.asarray(part.dense.tile_row)[: meta.n_dense_tiles],
+            tile_col=np.asarray(part.dense.tile_col)[: meta.n_dense_tiles],
+        ),
+        ell=RaggedEll(
+            cols=np.asarray(part.ell.cols)[:u, :, :kmax],
+            vals=np.asarray(part.ell.vals)[:u, :, :kmax],
+            rows=rows,
+            tile_col=np.asarray(part.ell.tile_col)[:u],
+            unit_k=np.asarray(part.ell.unit_k)[:u],
+        ),
+        coo=CooResidual(
+            rows=np.asarray(part.coo.rows)[: meta.nnz_coo],
+            cols=np.asarray(part.coo.cols)[: meta.nnz_coo],
+            vals=np.asarray(part.coo.vals)[: meta.nnz_coo],
+        ),
+    )

@@ -7,20 +7,25 @@ deadline slack vs the EWMA `LatencyModel` estimate, or drain — then
 dispatches through the engine's cached vmapped executors. Admission
 control sheds load with a reason; `ServerStats` telemetry surfaces
 through ``Engine.stats()["serving"]``. `simulate` replays deterministic
-synthetic traces with zero real compiles.
+synthetic traces with zero real compiles. The queue also hosts the
+shape-class lifecycle's drain barrier (`RequestQueue.drain_class`):
+batches in flight on a retiring class dispatch through the old
+executors before invalidation, and new submissions route to the
+successor class (ISSUE 4).
 """
 from .frontend import (DEFAULT_DEADLINE_MS, AdmissionError, AdmissionPolicy,
                        RequestFuture, RequestQueue)
 from .latency import LatencyModel
 from .scheduler import BatchPlan, PendingRequest, Scheduler, pow2_ceil
 from .stats import ServerStats, SimClock
-from .simulate import (Arrival, StubEngine, bursty_trace, poisson_trace,
-                       replay_trace, run_smoke)
+from .simulate import (Arrival, StubEngine, StubShapeClass, bursty_trace,
+                       poisson_trace, replay_trace, run_lifecycle_smoke,
+                       run_smoke)
 
 __all__ = [
     "DEFAULT_DEADLINE_MS", "AdmissionError", "AdmissionPolicy",
     "RequestFuture", "RequestQueue", "LatencyModel", "BatchPlan",
     "PendingRequest", "Scheduler", "pow2_ceil", "ServerStats", "SimClock",
-    "Arrival", "StubEngine", "bursty_trace", "poisson_trace",
-    "replay_trace", "run_smoke",
+    "Arrival", "StubEngine", "StubShapeClass", "bursty_trace",
+    "poisson_trace", "replay_trace", "run_lifecycle_smoke", "run_smoke",
 ]

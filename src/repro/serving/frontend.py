@@ -29,7 +29,7 @@ import time
 from typing import Optional
 
 from .latency import LatencyModel
-from .scheduler import Scheduler
+from .scheduler import Scheduler, pow2_ceil
 from .stats import ServerStats
 
 DEFAULT_DEADLINE_MS = 2000.0
@@ -51,7 +51,30 @@ class RequestFuture(concurrent.futures.Future):
 
 
 class AdmissionPolicy:
-    """Budgets checked at submit; ``None`` disables a check."""
+    """Budgets checked at ``submit`` time; ``None`` disables a check.
+
+    Admission control sheds load *at the door* — a request that cannot
+    be served inside its deadline is cheaper to reject immediately than
+    to queue, time out, and still consume a dispatch slot. Two budgets:
+
+    ``max_depth``
+        Cap on total pending requests across every group key. Exceeding
+        it rejects with reason ``"depth"``. This is the memory/backlog
+        bound: each pending request pins its feature array.
+    ``max_wait_ms``
+        Cap on the *estimated* service wait (milliseconds) the request
+        would face — the serial dispatch latency of every batch already
+        pending across **all** keys plus the batch the request joins
+        (`Scheduler.estimated_wait_s`). Exceeding it rejects with
+        reason ``"wait"``. This is the latency bound: it refuses work
+        that would miss its deadline anyway.
+
+    A third reject reason, ``"stopped"``, is raised by the queue itself
+    after ``stop()``: no worker will ever dispatch, so admitting would
+    strand the future until its timeout. Every rejection is counted per
+    reason in ``ServerStats.rejected`` and raises `AdmissionError` with
+    the machine-readable ``.reason``.
+    """
 
     def __init__(self, max_depth: Optional[int] = 1024,
                  max_wait_ms: Optional[float] = None):
@@ -84,6 +107,13 @@ class RequestQueue:
         self.stats = ServerStats()
         self._lock = threading.RLock()
         self._wake = threading.Condition(self._lock)
+        # Serializes dispatches across threads. Lock order is always
+        # _lock -> _dispatch_gate; a gate holder never takes _lock, so
+        # drain_class may hold both without deadlock. The normal pump
+        # path takes only the gate (submits stay unblocked during a
+        # dispatch); drain_class takes _lock first so the queue is
+        # frozen while a retiring class drains and swaps.
+        self._dispatch_gate = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
         if attach:
@@ -99,11 +129,42 @@ class RequestQueue:
 
     def submit(self, name: str, x,
                deadline_ms: Optional[float] = None) -> RequestFuture:
-        """Queue one inference request; returns a future.
+        """Queue one inference request for graph ``name`` with features
+        ``x``; returns a `RequestFuture` that resolves to the logits.
 
-        Raises `AdmissionError` (with ``.reason`` of ``"depth"`` or
-        ``"wait"``) instead of queueing when a budget is exceeded —
-        callers shed load at the door rather than timing out inside.
+        Deadline semantics
+            ``deadline_ms`` (default: the queue's ``default_deadline_ms``)
+            is a **relative soft deadline**: the request's absolute
+            deadline is ``now + deadline_ms / 1e3`` on the queue's
+            clock, fixed at submit. The scheduler lingers the request
+            for batch occupancy only while the tightest deadline in its
+            group retains more slack than ``safety_factor ×`` the
+            EWMA-estimated dispatch latency, so under honest estimates
+            the result lands before the deadline. The deadline is not a
+            hard timeout: a late result is still delivered, and the
+            overrun is counted in ``ServerStats.deadline_misses``.
+            ``future.result(timeout=...)`` is the caller's hard bound.
+
+        Admission
+            Budgets are checked before queueing; a violation raises
+            `AdmissionError` instead of returning a future — ``.reason``
+            is ``"depth"`` (queue backlog cap), ``"wait"`` (estimated
+            cross-key service wait exceeds ``max_wait_ms``), or
+            ``"stopped"`` (the queue was stopped). Rejected requests do
+            not count as arrivals.
+
+        Grouping
+            The request joins the pending queue for
+            ``engine.group_key(name, x)`` — (shape class, feature
+            width, weight shapes). Only same-key requests ever share a
+            dispatch; if the graph's class is retired by the lifecycle
+            mid-flight, `drain_class` flushes the old key first, so the
+            future still resolves.
+
+        Thread-safe. Callers block only for the admission checks —
+        except while a lifecycle retirement barrier (`drain_class`)
+        holds the queue lock, during which submits wait for the
+        retiring class's flush to finish dispatching.
         """
         key = self._group_key(name, x)
         if deadline_ms is None:
@@ -144,8 +205,39 @@ class RequestQueue:
         and is counted — it never propagates, so sibling plans from the
         same poll still dispatch and a threaded worker survives (a dead
         pump that keeps admitting traffic is the worst failure mode).
+
+        Members are re-grouped by their **current** ``group_key`` at
+        dispatch time, not the key the plan was closed under: a
+        lifecycle retirement can land between ``poll`` (which pops the
+        plan out of the scheduler, where `drain_class` can no longer
+        see it) and this dispatch, re-classing members — possibly into
+        *different* successor classes. Re-deriving keeps every
+        sub-dispatch same-key by construction, so a stale plan degrades
+        to an extra launch — never a mixed-key error or a stranded
+        future.
         """
-        members = plan.members
+        with self._dispatch_gate:
+            self._dispatch_plan(plan)
+
+    def _dispatch_plan(self, plan) -> None:
+        """Re-group a plan by current keys and dispatch each subgroup;
+        caller holds the dispatch gate."""
+        groups: dict = {}
+        try:
+            for r in plan.members:
+                groups.setdefault(self.engine.group_key(r.name, r.x),
+                                  []).append(r)
+        except Exception as err:   # noqa: BLE001 — futures carry it
+            self.stats.dispatch_errors += 1
+            for r in plan.members:
+                if r.future is not None and not r.future.cancelled():
+                    r.future.set_exception(err)
+            return
+        for key, members in groups.items():
+            self._dispatch_group(key, members, plan.reason)
+
+    def _dispatch_group(self, key, members, reason) -> None:
+        """One same-key engine dispatch; caller holds the dispatch gate."""
         misses0 = self.engine.executors.stats.misses
         t0 = self.clock()
         try:
@@ -165,9 +257,10 @@ class RequestQueue:
             return
         dt = self.clock() - t0
         now = self.clock()
+        padded = pow2_ceil(len(members))
         cold = self.engine.executors.stats.misses > misses0
-        self.latency.observe(plan.key, plan.padded, dt, cold=cold)
-        self.stats.on_batch(len(members), plan.padded, plan.reason)
+        self.latency.observe(key, padded, dt, cold=cold)
+        self.stats.on_batch(len(members), padded, reason)
         for r, y in zip(members, outs):
             if r.future is not None and not r.future.cancelled():
                 r.future.set_result(y)
@@ -191,6 +284,41 @@ class RequestQueue:
         for plan in plans:
             self._dispatch(plan)
         return n + len(plans)
+
+    def drain_class(self, sclass, action=None) -> int:
+        """Lifecycle barrier: flush every pending batch built on
+        ``sclass``, then run ``action`` — all atomically with respect
+        to ``submit``.
+
+        The shape-class lifecycle retires a class by (1) dispatching
+        every in-flight batch keyed on it through the OLD executors,
+        then (2) mutating the engine (``action`` =
+        ``Engine.execute_retirement``) so the class's members re-route
+        to their successor class. Both steps happen under the queue
+        lock, and the dispatch gate is awaited first, so:
+
+          * no request is ever stranded on a key whose class stopped
+            existing (flushed batches close with reason ``"retire"``);
+          * a ``submit`` racing the retirement either lands before (and
+            is flushed here, served by the old class) or after (and its
+            ``group_key`` resolves to the successor class) — never in
+            between;
+          * a dispatch already running on the worker thread finishes on
+            the old executors before the swap.
+
+        Submissions block for the duration (a retirement is rare and
+        its flush is small — at most one non-full batch per affected
+        key). Returns the number of batches flushed.
+        """
+        with self._lock:
+            plans = self.scheduler.close_matching(
+                lambda key: key[0] == sclass)
+            with self._dispatch_gate:   # waits out an in-flight dispatch
+                for plan in plans:
+                    self._dispatch_plan(plan)
+                if action is not None:
+                    action()
+        return len(plans)
 
     def depth(self) -> int:
         with self._lock:

@@ -23,7 +23,18 @@ from __future__ import annotations
 
 
 class LatencyModel:
-    """EWMA of warm dispatch latency, keyed by (group key, batch size)."""
+    """EWMA of warm dispatch latency, keyed by (group key, batch size).
+
+    >>> m = LatencyModel(alpha=0.5, default_s=0.05)
+    >>> m.observe("k", 4, 0.1)
+    >>> m.observe("k", 4, 30.0, cold=True)   # compile: counted, not folded
+    >>> m.estimate("k", 4)
+    0.1
+    >>> m.estimate("k", 8)                   # unseen size: scale UP only
+    0.2
+    >>> m.estimate("other", 4)               # unseen key: the default
+    0.05
+    """
 
     def __init__(self, alpha: float = 0.3, default_s: float = 0.05):
         if not 0.0 < alpha <= 1.0:

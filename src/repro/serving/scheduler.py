@@ -29,6 +29,11 @@ from typing import Optional
 
 
 def pow2_ceil(n: int) -> int:
+    """Smallest power of two >= n (n <= 1 maps to 1).
+
+    >>> [pow2_ceil(n) for n in (0, 1, 3, 8, 9)]
+    [1, 1, 4, 8, 16]
+    """
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
@@ -132,12 +137,25 @@ class Scheduler:
 
     def flush(self) -> list:
         """Close everything still pending (rule c: the queue drained)."""
+        return self.close_matching(lambda key: True, reason="drain")
+
+    def close_matching(self, pred, reason: str = "retire") -> list:
+        """Force-close every pending batch whose key satisfies ``pred``.
+
+        The shape-class lifecycle uses this with ``pred = key built on
+        the retiring class``: requests already queued under a key that
+        is about to stop existing must dispatch through the OLD
+        executors before those are invalidated, or they would strand
+        (their stored key would never match a live class again). Full
+        ``target_batch`` runs still close as ``"size"``; the remainder
+        closes with ``reason``.
+        """
         plans = []
-        for key in list(self._pending):
+        for key in [k for k in self._pending if pred(k)]:
             while self.depth(key) >= self.target_batch:
                 plans.append(self._close(key, self.target_batch, "size"))
             if self.depth(key):
-                plans.append(self._close(key, self.depth(key), "drain"))
+                plans.append(self._close(key, self.depth(key), reason))
         return plans
 
     # -------------------------------------------------------- forecast ----
@@ -159,11 +177,21 @@ class Scheduler:
     def estimated_wait_s(self, key: tuple, now: float) -> float:
         """Admission-control forecast: service backlog a request joining
         ``key`` now stands behind — the dispatch latency of every batch
-        ahead of it (batches dispatch serially per frontend). Lingering
-        for occupancy is excluded: the scheduler always closes before
-        the request's own deadline, so linger is deadline-bounded by
-        construction; unbounded wait only comes from dispatch backlog."""
-        q = self._pending.get(key)
-        depth_after = (len(q) if q is not None else 0) + 1
-        batches = -(-depth_after // self.target_batch)
-        return batches * self.latency.estimate(key, self.target_batch)
+        already pending across **all** keys, plus the batch the request
+        itself joins. Batches dispatch serially in the pump thread, so
+        a request's wait includes other keys' backlog, not just its
+        own; counting only the joining key (the pre-PR-4 behavior) let
+        a flood on key A sail past the wait budget by submitting under
+        key B. Lingering for occupancy is excluded: the scheduler
+        always closes before the request's own deadline, so linger is
+        deadline-bounded by construction; unbounded wait only comes
+        from dispatch backlog."""
+        total = 0.0
+        for k, q in self._pending.items():
+            depth = len(q) + (1 if k == key else 0)
+            batches = -(-depth // self.target_batch)
+            total += batches * self.latency.estimate(k, self.target_batch)
+        if key not in self._pending:
+            # the joining request opens a fresh queue: one more batch
+            total += self.latency.estimate(key, self.target_batch)
+        return total

@@ -69,6 +69,7 @@ class _StubHandle:
     name: str
     sclass: object
     weights: object
+    size: int = 0      # modeled padded-MAC need (lifecycle simulation)
 
 
 class _StubExecStats:
@@ -81,6 +82,19 @@ class _StubExecutors:
         self.stats = _StubExecStats()
 
 
+@dataclasses.dataclass(frozen=True)
+class StubShapeClass:
+    """Hashable one-number shape class for the lifecycle simulation:
+    ``cap`` models total padded-MAC capacity per member; ``gen`` keeps
+    same-capacity classes founded at different times distinct."""
+
+    cap: int
+    gen: int
+
+    def summary(self) -> str:
+        return f"StubClass cap={self.cap} gen={self.gen}"
+
+
 class StubEngine:
     """Engine stand-in: serve_group advances the SimClock by a modeled
     service time instead of running kernels.
@@ -89,30 +103,75 @@ class StubEngine:
     of each (group key, padded batch) additionally pays ``compile_s`` and
     bumps the executor-cache miss counter — exactly the signal the
     frontend uses to keep cold samples out of the EWMA.
+
+    Lifecycle surface: registering with a ``size`` switches the stub
+    from the fixed ``sclass_of`` labeling to a one-dimensional class
+    model mirroring the real `ClassRegistry` — first-fit into a live
+    `StubShapeClass` whose capacity covers the size within
+    ``fit_slack``× waste, else found a new class with ``growth``×
+    headroom. The stub then implements the same
+    ``class_waste_by_class`` / ``class_traffic`` / ``plan_retirement``
+    / ``execute_retirement`` quartet as the real engine, so the
+    `repro.engine.lifecycle.LifecycleManager` runs against it
+    unchanged — retirement, successor routing, and recompile
+    accounting all exercise with zero real compiles.
     """
 
     def __init__(self, clock: SimClock, *, base_s: float = 0.004,
                  per_item_s: float = 0.001, compile_s: float = 0.25,
-                 sclass_of=None):
+                 sclass_of=None, growth: float = 2.0,
+                 fit_slack: float = 4.0):
         self.clock = clock
         self.base_s = base_s
         self.per_item_s = per_item_s
         self.compile_s = compile_s
+        self.growth = growth
+        self.fit_slack = fit_slack
         self.executors = _StubExecutors()
         self._graphs: dict = {}
         self._compiled: set = set()
         self._sclass_of = sclass_of or (lambda name: "simclass")
         self.dispatches: list = []     # (key, batch, reason placeholder)
+        self.classes: list = []        # live StubShapeClass, found order
+        self._gen = 0
+        self._traffic: dict = {}       # sclass -> dispatch count
+        self.executors_invalidated = 0
+        self._frontend = None
+        self._lifecycle = None
 
-    def register(self, name: str) -> _StubHandle:
-        h = _StubHandle(name=name, sclass=self._sclass_of(name),
-                        weights=[np.zeros((2, 2), np.float32)])
+    # ------------------------------------------------------- offline ----
+    def _fits(self, size: int, sc: StubShapeClass) -> bool:
+        return size <= sc.cap <= self.fit_slack * size
+
+    def _found(self, cap: int) -> StubShapeClass:
+        sc = StubShapeClass(cap=int(cap), gen=self._gen)
+        self._gen += 1
+        self.classes.append(sc)
+        return sc
+
+    def register(self, name: str, size: int = 0) -> _StubHandle:
+        if size > 0:
+            sclass = next((sc for sc in self.classes
+                           if self._fits(size, sc)), None)
+            if sclass is None:
+                sclass = self._found(self.growth * size)
+        else:
+            sclass = self._sclass_of(name)
+        h = _StubHandle(name=name, sclass=sclass,
+                        weights=[np.zeros((2, 2), np.float32)], size=size)
         self._graphs[name] = h
         return h
 
     def handle(self, name: str) -> _StubHandle:
         return self._graphs[name]
 
+    def attach_frontend(self, frontend) -> None:
+        self._frontend = frontend
+
+    def attach_lifecycle(self, manager) -> None:
+        self._lifecycle = manager
+
+    # -------------------------------------------------------- online ----
     def group_key(self, name: str, x) -> tuple:
         h = self._graphs[name]
         return (h.sclass, int(x.shape[1]),
@@ -131,8 +190,78 @@ class StubEngine:
             self.clock.advance(self.compile_s)
         self.clock.advance(self.service_s(bs))
         self.dispatches.append((key, len(requests)))
+        sc = key[0]
+        self._traffic[sc] = self._traffic.get(sc, 0) + 1
         # deterministic output the tests can verify end-to-end
         return [x * 2.0 for _, x in requests]
+
+    # ------------------------------------------------ lifecycle surface ----
+    def class_waste_by_class(self) -> dict:
+        """Same shape as ``Engine.class_waste_by_class`` (the fields the
+        lifecycle consumes), from the one-number capacity model."""
+        agg: dict = {}
+        for h in self._graphs.values():
+            if not isinstance(h.sclass, StubShapeClass):
+                continue
+            d = agg.setdefault(h.sclass, {"members": 0, "ell_nnz": 0})
+            d["members"] += 1
+            d["ell_nnz"] += h.size
+        out: dict = {}
+        for sc, d in agg.items():
+            cap = sc.cap * d["members"]
+            d["ell_capacity"] = cap
+            d["padded_mac_waste_frac"] = (1.0 - d["ell_nnz"] / cap
+                                          if cap else 0.0)
+            out[sc] = d
+        return out
+
+    def class_traffic(self) -> dict:
+        return dict(self._traffic)
+
+    def plan_retirement(self, sc):
+        from repro.engine.lifecycle import RetirementPlan
+        members = [h for h in self._graphs.values() if h.sclass == sc]
+        if not members:
+            return None
+        members.sort(key=lambda h: (-h.size, h.name))
+        live = [c for c in self.classes if c != sc]
+        new: list = []
+        targets: list = []
+        for h in members:
+            target = next((c for c in live if self._fits(h.size, c)), None)
+            if target is None:
+                target = next((c for c in new if self._fits(h.size, c)),
+                              None)
+            if target is None:
+                # tight founding (growth 1.0), like the real registry's plan
+                target = StubShapeClass(cap=h.size, gen=self._gen + len(new))
+                new.append(target)
+            targets.append(target)
+        return RetirementPlan(sclass=sc,
+                              names=tuple(h.name for h in members),
+                              targets=tuple(targets),
+                              new_classes=tuple(new))
+
+    def execute_retirement(self, plan) -> dict:
+        sc = plan.sclass
+        if sc in self.classes:
+            self.classes.remove(sc)
+        moved = 0
+        for name, target in zip(plan.names, plan.targets):
+            h = self._graphs.get(name)
+            if h is None or h.sclass != sc:
+                continue
+            if target not in self.classes:
+                self.classes.append(target)
+                self._gen = max(self._gen, target.gen + 1)
+            h.sclass = target
+            moved += 1
+        dead = [k for k in self._compiled if k[0][0] == sc]
+        for k in dead:
+            self._compiled.discard(k)
+        self.executors_invalidated += len(dead)
+        return {"members": moved, "executors_invalidated": len(dead),
+                "new_classes": len(plan.new_classes)}
 
 
 # ---------------------------------------------------------------------------
@@ -254,5 +383,114 @@ def run_smoke(verbose: bool = True) -> dict:
               f"latency_model={queue.latency.snapshot()}")
         print(f"[sim] admission: rejected={tight.stats.rejected}")
         print("[sim] scheduler-simulation smoke OK "
+              f"(virtual time {clock():.2f}s, real compiles: 0)")
+    return snap
+
+
+def run_lifecycle_smoke(verbose: bool = True) -> dict:
+    """Deterministic drift scenario for the shape-class lifecycle.
+
+    A family of big graphs founds a class; the serving mix then drifts
+    to smaller cousins that keep padding into the oversized class, so
+    its rolling waste breaches the budget. The lifecycle must: hold off
+    through the hysteresis window, drain the in-flight batch keyed on
+    the retiring class (reason ``"retire"``, futures resolve — nothing
+    strands), re-found the members tighter within the recompile budget,
+    and route new submissions to the successor class. Zero real
+    compiles; raises AssertionError on any invariant break.
+    """
+    from repro.engine.lifecycle import LifecycleConfig, LifecycleManager
+
+    clock = SimClock()
+    engine = StubEngine(clock)
+    queue = RequestQueue(engine, target_batch=4, default_deadline_ms=500.0,
+                         clock=clock)
+    cfg = LifecycleConfig(waste_budget=0.52, breach_windows=2,
+                          max_retires_per_window=1,
+                          max_recompiles_per_window=2, min_traffic=1,
+                          cooldown_windows=2)
+    mgr = LifecycleManager(engine, frontend=queue, config=cfg)
+
+    big = [f"big{i}" for i in range(3)]
+    for n in big:
+        engine.register(n, size=100)     # founds StubClass cap=200
+    x = np.full((4, 3), 1.0, np.float32)
+
+    def serve(names):
+        futs = [queue.submit(n, x) for n in names]
+        queue.drain()
+        assert all(f.done() for f in futs)
+        return futs
+
+    # Steady phase: 0.5 waste < budget -> no lifecycle action, ever.
+    serve(big)
+    w0 = mgr.step()
+    assert w0["retired"] == [] and mgr.retires == 0
+    assert len(engine.classes) == 1
+    old_class = engine.classes[0]
+
+    # Drift phase: smaller cousins pad into the oversized class.
+    small = [f"small{i}" for i in range(4)]
+    for n in small:
+        engine.register(n, size=60)
+    assert engine.handle(small[0]).sclass == old_class, \
+        "drifted graphs must land in the oversized class for this smoke"
+    waste_before = mgr.engine.class_waste_by_class()[old_class][
+        "padded_mac_waste_frac"]
+    assert waste_before > cfg.waste_budget
+
+    # Window 1 of the breach: hysteresis must hold retirement back.
+    serve(big + small)
+    w1 = mgr.step()
+    assert w1["retired"] == [], "breach_windows=2 means no retire yet"
+
+    # Window 2: leave a batch IN FLIGHT on the retiring class, then
+    # step. The retire barrier must flush it (reason "retire") before
+    # the class vanishes — stranding it would hang these futures.
+    serve(big + small)
+    pending = [queue.submit(n, x) for n in small[:2]]
+    assert queue.depth() == 2
+    w2 = mgr.step()
+    assert w2["retired"] == [mgr._summary(old_class)]
+    assert all(f.done() for f in pending), \
+        "retirement stranded in-flight requests"
+    for f in pending:
+        np.testing.assert_array_equal(f.result(timeout=0), x * 2.0)
+    assert queue.stats.close_reasons.get("retire", 0) >= 1
+    assert queue.depth() == 0
+
+    # Members re-founded tighter, inside the recompile budget.
+    assert old_class not in engine.classes
+    assert w2["recompiles"] <= cfg.max_recompiles_per_window
+    waste_after = max(
+        (e["padded_mac_waste_frac"]
+         for e in engine.class_waste_by_class().values()), default=0.0)
+    assert waste_after < waste_before, (waste_after, waste_before)
+
+    # New submissions route to the successor class (fresh group key).
+    succ = engine.handle(big[0]).sclass
+    assert succ != old_class
+    fut = queue.submit(big[0], x)
+    key = next(iter(queue.scheduler._pending))
+    assert key[0] == succ, "post-retirement traffic must use the successor"
+    queue.drain()
+    np.testing.assert_array_equal(fut.result(timeout=0), x * 2.0)
+
+    # Cooldown: the successor is immune even if budget were breached.
+    w3 = mgr.step()
+    assert w3["retired"] == []
+
+    snap = mgr.snapshot()
+    assert snap["retires"] == 1
+    assert snap["reclassed_members"] == 7
+    assert snap["recompiles"] <= cfg.max_recompiles_per_window
+    assert queue.stats.dispatch_errors == 0
+    if verbose:
+        print(f"[sim] lifecycle: waste {waste_before:.3f} -> "
+              f"{waste_after:.3f} | retires={snap['retires']} "
+              f"reclassed={snap['reclassed_members']} "
+              f"recompiles={snap['recompiles']} "
+              f"drained={snap['drained_batches']}")
+        print("[sim] lifecycle drift smoke OK "
               f"(virtual time {clock():.2f}s, real compiles: 0)")
     return snap

@@ -22,7 +22,14 @@ LATENCY_WINDOW = 8192
 
 
 class SimClock:
-    """Manual monotonic clock for deterministic scheduler simulation."""
+    """Manual monotonic clock for deterministic scheduler simulation.
+
+    >>> clock = SimClock()
+    >>> clock.advance(1.5)
+    1.5
+    >>> clock()
+    1.5
+    """
 
     def __init__(self, t0: float = 0.0):
         self.now = float(t0)
@@ -39,7 +46,46 @@ class SimClock:
 
 @dataclasses.dataclass
 class ServerStats:
-    """Counters for one serving frontend; all times in seconds."""
+    """Counters for one serving frontend; all times in seconds.
+
+    Field reference (also rendered by ``snapshot()`` and documented
+    with interpretation guidance in ``docs/TELEMETRY.md``):
+
+    ``arrivals``
+        Requests **admitted** (rejections are not arrivals).
+    ``completed``
+        Futures resolved with a result; ``arrivals - completed`` is the
+        queue's current in-flight depth plus cancelled requests.
+    ``batches``
+        Dispatches executed; ``completed / batches`` is occupancy.
+    ``deadline_misses``
+        Requests whose result resolved *after* their absolute deadline.
+        Soft accounting: the late result is still delivered.
+    ``dispatch_errors``
+        Batches whose engine dispatch raised; every member future of
+        such a batch carries the exception.
+    ``rejected``
+        {admission reason: count} — ``"depth"`` / ``"wait"`` /
+        ``"stopped"`` (see `AdmissionPolicy`).
+    ``batch_hist``
+        {live batch size: count of dispatched batches}.
+    ``close_reasons``
+        {close rule: count} — ``"size"`` (pow2 target reached),
+        ``"deadline"`` (slack ran out), ``"drain"`` (flush), and
+        ``"retire"`` (flushed by a shape-class retirement barrier).
+    ``padded_slots``
+        Total pow2-padded vmap slots dispatched;
+        ``completed / padded_slots`` is pad occupancy.
+    ``latency_s``
+        Rolling window (most recent ``LATENCY_WINDOW`` samples) of
+        per-request submit→resolve latencies feeding the percentiles.
+
+    >>> s = ServerStats()
+    >>> s.on_arrival(0.0); s.on_batch(3, padded=4, reason="drain")
+    >>> s.on_complete(0.25, missed=False)
+    >>> s.batches, s.padded_slots, s.deadline_misses
+    (1, 4, 0)
+    """
 
     arrivals: int = 0
     completed: int = 0

@@ -1,0 +1,379 @@
+"""Shape-class lifecycle (PR 4): waste telemetry against hand-computed
+padded-MAC counts, registry retirement/re-admission, executor
+invalidation, the unpad round-trip, the LifecycleManager policy
+(hysteresis, traffic gate, budgets) on the zero-compile stub, and the
+real-engine retirement path (bitwise-stable outputs, no stranded
+in-flight batches)."""
+import numpy as np
+import pytest
+
+from repro.core import csr_from_dense
+from repro.core.partition import PartitionConfig, analyze_and_partition
+from repro.engine import (ClassRegistry, Engine, LifecycleConfig,
+                          LifecycleManager, ShapePolicy, class_requirements,
+                          grow_class, pad_to_class, unpad_from_class)
+from repro.serving import (RequestQueue, SimClock, StubEngine,
+                           StubShapeClass, run_lifecycle_smoke)
+
+from conftest import make_heterogeneous_matrix
+
+
+# ---------------------------------------------------------------------------
+# class_waste vs hand-computed padded-MAC counts
+# ---------------------------------------------------------------------------
+
+class TestClassWasteHandComputed:
+    def test_dense_only_graph_exact_counts(self):
+        """A fully-dense 64x64 graph: every number derivable by hand.
+
+        4096 nnz -> 1 dense tile. Founding applies growth 2.0 then the
+        dense granule 4: capacity = 4 tiles * 64*64 = 16384 MAC slots.
+        No ELL units, no COO nnz -> those capacities are 0, so
+        padded_mac_waste_frac = 1 - 4096/16384 = 0.75 exactly.
+        """
+        a = np.abs(np.random.default_rng(0).standard_normal(
+            (64, 64))).astype(np.float32)
+        eng = Engine(partition_cfg=PartitionConfig(tile=64))
+        eng.register("d", csr_from_dense(a))
+        waste = eng.stats()["class_waste"]
+        assert len(waste) == 1
+        w = next(iter(waste.values()))
+        assert w["members"] == 1
+        assert w["dense_nnz"] == 4096
+        assert w["dense_capacity"] == 4 * 64 * 64 == 16384
+        assert w["ell_nnz"] == 0 and w["ell_capacity"] == 0
+        assert w["coo_nnz"] == 0 and w["coo_capacity"] == 0
+        assert w["ell_waste_frac"] == 0.0
+        assert w["padded_mac_waste_frac"] == pytest.approx(0.75)
+
+    def test_two_members_double_capacity(self):
+        a = np.abs(np.random.default_rng(0).standard_normal(
+            (64, 64))).astype(np.float32)
+        eng = Engine(partition_cfg=PartitionConfig(tile=64))
+        eng.register("d0", csr_from_dense(a))
+        eng.register("d1", csr_from_dense(a))
+        w = next(iter(eng.stats()["class_waste"].values()))
+        assert w["members"] == 2
+        assert w["dense_nnz"] == 2 * 4096
+        assert w["dense_capacity"] == 2 * 16384
+        assert w["padded_mac_waste_frac"] == pytest.approx(0.75)
+
+    def test_formulas_match_documented_contract(self):
+        """The telemetry contract (docs/TELEMETRY.md): per class,
+        ell_capacity = Kmax*units*r_block*members, dense_capacity =
+        n_dense_tiles*T^2*members, coo_capacity = coo_nnz*members, and
+        the fracs follow from members' true meta nnz."""
+        eng = Engine()
+        metas = {}
+        for i, n in enumerate([300, 304, 308]):
+            a = make_heterogeneous_matrix(n, seed=i)
+            h = eng.register(f"g{i}", csr_from_dense(a))
+            metas[f"g{i}"] = (h.sclass, h.meta)
+        for sc, entry in eng.class_waste_by_class().items():
+            members = [(s, m) for s, m in metas.values() if s == sc]
+            m = len(members)
+            assert entry["members"] == m
+            assert entry["ell_capacity"] == \
+                sc.ell_kmax * sc.ell_units * sc.r_block * m
+            assert entry["dense_capacity"] == \
+                sc.n_dense_tiles * sc.tile * sc.tile * m
+            assert entry["coo_capacity"] == sc.coo_nnz * m
+            ell_nnz = sum(meta.nnz_ell for _, meta in members)
+            assert entry["ell_nnz"] == ell_nnz
+            true = ell_nnz + sum(meta.nnz_dense + meta.nnz_coo
+                                 for _, meta in members)
+            cap = (entry["ell_capacity"] + entry["dense_capacity"]
+                   + entry["coo_capacity"])
+            assert entry["padded_mac_waste_frac"] == \
+                pytest.approx(1.0 - true / cap)
+            assert entry["ell_waste_frac"] == \
+                pytest.approx(1.0 - ell_nnz / entry["ell_capacity"])
+
+
+# ---------------------------------------------------------------------------
+# registry retirement / re-admission / planning
+# ---------------------------------------------------------------------------
+
+def _need_of(n, seed=0):
+    a = make_heterogeneous_matrix(n, seed=seed)
+    part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                          PartitionConfig(tile=64))
+    return class_requirements(part, meta)
+
+
+class TestRegistryLifecycle:
+    def test_retire_blocks_new_members_and_counts(self):
+        reg = ClassRegistry(ShapePolicy())
+        need = _need_of(300)
+        sc = reg.classify_need(need)
+        assert reg.retire(sc)
+        assert sc not in reg.classes and sc in reg.retired
+        assert not reg.retire(sc), "double-retire must be a no-op"
+        sc2 = reg.classify_need(need)
+        assert sc2 != sc or sc2 not in reg.retired
+        st = reg.stats()
+        assert st["retires"] == 1 and st["live_classes"] == 1
+
+    def test_refound_is_counted_and_revives(self):
+        reg = ClassRegistry(ShapePolicy())
+        need = _need_of(300)
+        sc = reg.classify_need(need)
+        reg.retire(sc)
+        sc2 = reg.classify_need(need)   # same need -> identical class
+        assert sc2 == sc
+        assert reg.refounds == 1
+        assert sc2 in reg.classes and sc2 not in reg.retired
+
+    def test_plan_reclass_is_pure_and_tight(self):
+        reg = ClassRegistry(ShapePolicy())
+        need = _need_of(300)
+        sc = reg.classify_need(need)
+        before = list(reg.classes)
+        targets, new = reg.plan_reclass([need], exclude=(sc,))
+        assert reg.classes == before, "planning must not mutate"
+        assert len(targets) == 1 and len(new) == 1
+        tight = grow_class(need, ShapePolicy(growth=1.0, coo_growth=1.0))
+        assert targets[0] == tight == new[0]
+        # with nothing excluded the need first-fits its own class
+        targets2, new2 = reg.plan_reclass([need])
+        assert targets2 == [sc] and new2 == []
+
+    def test_admit_readmits(self):
+        reg = ClassRegistry(ShapePolicy())
+        sc = reg.classify_need(_need_of(300))
+        reg.retire(sc)
+        reg.admit(sc)
+        assert sc in reg.classes and sc not in reg.retired
+        assert reg.refounds == 1
+
+
+# ---------------------------------------------------------------------------
+# executor invalidation + unpad round-trip
+# ---------------------------------------------------------------------------
+
+class TestInvalidationAndUnpad:
+    def test_invalidate_class_drops_only_that_class(self):
+        eng = Engine()
+        b = {}
+        for i, n in enumerate([300, 90]):   # far apart -> distinct classes
+            a = make_heterogeneous_matrix(n, seed=i)
+            eng.register(f"g{i}", csr_from_dense(a))
+            b[f"g{i}"] = np.random.default_rng(i).standard_normal(
+                (n, 8)).astype(np.float32)
+        eng.spmm("g0", b["g0"])
+        eng.spmm("g1", b["g1"])
+        sc0, sc1 = eng.handle("g0").sclass, eng.handle("g1").sclass
+        assert sc0 != sc1 and eng.executors.size == 2
+        n_dropped = eng.executors.invalidate_class(sc0)
+        assert n_dropped == 1 and eng.executors.size == 1
+        assert eng.executors.stats.invalidations == 1
+        assert eng.executors.stats.evictions == 0, \
+            "invalidation must not masquerade as LRU eviction"
+        # g1's executor survives: next call is a pure hit
+        hits = eng.executors.stats.hits
+        eng.spmm("g1", b["g1"])
+        assert eng.executors.stats.hits == hits + 1
+
+    def test_unpad_round_trips_bitwise(self):
+        a = make_heterogeneous_matrix(300, seed=0)
+        part, meta, _ = analyze_and_partition(csr_from_dense(a),
+                                              PartitionConfig(tile=64))
+        sc = grow_class(class_requirements(part, meta))
+        padded, pmeta = pad_to_class(part, meta, sc)
+        rec = unpad_from_class(padded, pmeta, meta)
+        for name in ("dense", "ell", "coo"):
+            orig, got = getattr(part, name), getattr(rec, name)
+            for field in orig._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(orig, field)),
+                    np.asarray(getattr(got, field)),
+                    err_msg=f"{name}.{field} did not round-trip")
+        # and the recovered partition re-pads into a DIFFERENT class
+        tight = grow_class(class_requirements(part, meta),
+                           ShapePolicy(growth=1.0, coo_growth=1.0))
+        repadded, _ = pad_to_class(rec, meta, tight)
+        assert repadded.ell.cols.shape[0] == tight.ell_units
+
+
+# ---------------------------------------------------------------------------
+# LifecycleManager policy on the zero-compile stub
+# ---------------------------------------------------------------------------
+
+def _stub_world(**cfg_kw):
+    clock = SimClock()
+    engine = StubEngine(clock)
+    queue = RequestQueue(engine, target_batch=4, default_deadline_ms=500.0,
+                         clock=clock)
+    cfg_kw.setdefault("waste_budget", 0.52)
+    cfg_kw.setdefault("breach_windows", 2)
+    cfg_kw.setdefault("min_traffic", 1)
+    mgr = LifecycleManager(engine, frontend=queue,
+                           config=LifecycleConfig(**cfg_kw))
+    x = np.full((4, 3), 1.0, np.float32)
+
+    def serve(names):
+        futs = [queue.submit(n, x) for n in names]
+        queue.drain()
+        return futs
+
+    return clock, engine, queue, mgr, x, serve
+
+
+class TestLifecyclePolicy:
+    def test_hysteresis_needs_consecutive_breaches(self):
+        clock, engine, queue, mgr, x, serve = _stub_world()
+        for i in range(3):
+            engine.register(f"b{i}", size=100)
+        for i in range(4):
+            engine.register(f"s{i}", size=60)   # waste 0.61 > budget
+        serve([f"b{i}" for i in range(3)])
+        assert mgr.step()["retired"] == [], "first breach must not retire"
+        # a window back under budget resets the streak entirely
+        mgr._tracks[engine.classes[0]].ewma_waste = 0.1
+        serve([f"b{i}" for i in range(3)])
+        assert mgr.step()["retired"] == []
+        assert mgr._tracks[engine.classes[0]].breaches <= 1, \
+            "dipping under budget must reset the breach streak"
+
+    def test_traffic_gate_spares_idle_classes(self):
+        clock, engine, queue, mgr, x, serve = _stub_world()
+        for i in range(3):
+            engine.register(f"b{i}", size=100)
+        for i in range(4):
+            engine.register(f"s{i}", size=60)
+        # never served: waste is high but the class runs no kernels
+        for _ in range(4):
+            w = mgr.step()
+        assert w["retired"] == [] and mgr.retires == 0
+
+    def test_recompile_budget_skips_not_truncates(self):
+        clock, engine, queue, mgr, x, serve = _stub_world(
+            max_recompiles_per_window=0)
+        for i in range(3):
+            engine.register(f"b{i}", size=100)
+        for i in range(4):
+            engine.register(f"s{i}", size=60)
+        names = [f"b{i}" for i in range(3)] + [f"s{i}" for i in range(4)]
+        serve(names)
+        mgr.step()
+        serve(names)
+        w = mgr.step()
+        assert w["retired"] == [], "plan exceeding recompile budget skips"
+        assert w["skipped"].get("recompile_budget", 0) == 1
+        assert len(engine.classes) == 1, "no partial retirement"
+
+    def test_no_tighter_plan_backs_off_instead_of_churning(self):
+        # A dense-only 64x64 graph: granule floors make the tight
+        # re-found IDENTICAL to its class (4-tile dense granule both
+        # ways), so retiring would invalidate + recompile the same
+        # executors forever. The policy must skip with "no_tighter"
+        # and cool the class down, not churn.
+        a = np.abs(np.random.default_rng(0).standard_normal(
+            (64, 64))).astype(np.float32)
+        eng = Engine(partition_cfg=PartitionConfig(tile=64))
+        eng.register("d", csr_from_dense(a))
+        eng.spmm("d", np.ones((64, 4), np.float32))
+        mgr = LifecycleManager(eng, config=LifecycleConfig(
+            waste_budget=0.05, breach_windows=1, min_traffic=0,
+            cooldown_windows=2))
+        w = mgr.step()
+        assert w["retired"] == []
+        assert w["skipped"].get("no_tighter") == 1
+        assert eng.registry.stats()["retires"] == 0
+        assert eng.executors.stats.invalidations == 0
+        # cooldown: the next window doesn't even re-plan
+        w2 = mgr.step()
+        assert w2["skipped"] == {}
+
+    def test_stale_plan_regroups_by_current_key(self):
+        # A plan popped out of the scheduler (worker mid-pump) is
+        # invisible to drain_class; if a retirement re-classes its
+        # members before dispatch, the dispatch must re-derive keys
+        # and split — never raise mixed-key or strand a future.
+        clock, engine, queue, mgr, x, serve = _stub_world()
+        engine.register("g0", size=100)
+        engine.register("g1", size=100)
+        f0, f1 = queue.submit("g0", x), queue.submit("g1", x)
+        plans = queue.scheduler.close_matching(lambda k: True)
+        assert len(plans) == 1 and len(plans[0].members) == 2
+        # retirement-like mutation lands between poll and dispatch
+        engine.handle("g1").sclass = StubShapeClass(cap=100, gen=99)
+        queue._dispatch(plans[0])
+        assert f0.done() and f1.done()
+        assert queue.stats.dispatch_errors == 0
+        np.testing.assert_array_equal(f1.result(timeout=0), x * 2.0)
+        assert queue.stats.batches == 2, \
+            "split members must dispatch as two same-key batches"
+
+    def test_smoke_end_to_end(self):
+        snap = run_lifecycle_smoke(verbose=False)
+        assert snap["retires"] == 1
+        assert snap["recompiles"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# real-engine retirement: the full drain -> swap -> recompile path
+# ---------------------------------------------------------------------------
+
+class TestRealEngineRetirement:
+    def _world(self):
+        eng = Engine()
+        rng = np.random.default_rng(0)
+        xs = {}
+        ws = [(rng.standard_normal((16, 8)) * 0.1).astype(np.float32),
+              (rng.standard_normal((8, 4)) * 0.1).astype(np.float32)]
+        for i, n in enumerate([300, 304, 308]):
+            a = make_heterogeneous_matrix(n, seed=i)
+            eng.register(f"g{i}", csr_from_dense(a), weights=ws)
+            xs[f"g{i}"] = rng.standard_normal((n, 16)).astype(np.float32)
+        return eng, xs
+
+    def test_retirement_is_bitwise_invisible(self):
+        eng, xs = self._world()
+        pre = {k: np.asarray(eng.infer(k, x)) for k, x in xs.items()}
+        sc = eng.handle("g0").sclass
+        plan = eng.plan_retirement(sc)
+        assert set(plan.names) == set(xs)
+        res = eng.execute_retirement(plan)
+        assert res["members"] == 3
+        assert res["executors_invalidated"] >= 1
+        assert eng.handle("g0").sclass != sc
+        assert eng.registry.stats()["retires"] == 1
+        for k, x in xs.items():
+            np.testing.assert_array_equal(
+                np.asarray(eng.infer(k, x)), pre[k],
+                err_msg="retirement must be value-neutral")
+        # successor class is tighter: strictly less ELL capacity
+        assert eng.handle("g0").sclass.ell_mac_capacity < sc.ell_mac_capacity
+
+    def test_retirement_drains_in_flight_batch(self):
+        eng, xs = self._world()
+        clock = SimClock()
+        queue = RequestQueue(eng, target_batch=8, clock=clock,
+                             default_deadline_ms=60_000.0)
+        mgr = LifecycleManager(
+            eng, frontend=queue,
+            config=LifecycleConfig(waste_budget=0.05, breach_windows=1,
+                                   min_traffic=0))
+        futs = [queue.submit(k, x) for k, x in xs.items()]
+        assert queue.depth() == 3, "batch must still be lingering"
+        w = mgr.step()
+        assert len(w["retired"]) == 1
+        assert queue.depth() == 0
+        assert all(f.done() for f in futs), \
+            "retirement stranded an in-flight batch"
+        assert queue.stats.close_reasons.get("retire") == 1
+        for (k, x), f in zip(xs.items(), futs):
+            np.testing.assert_array_equal(np.asarray(f.result(timeout=0)),
+                                          np.asarray(eng.infer(k, x)))
+        assert eng.stats()["lifecycle"]["retires"] == 1
+
+    def test_stats_lifecycle_block_surfaces(self):
+        eng, xs = self._world()
+        mgr = LifecycleManager(eng)
+        assert eng.stats()["lifecycle"]["windows"] == 0
+        mgr.step()
+        snap = eng.stats()["lifecycle"]
+        assert snap["windows"] == 1
+        assert snap["registry"]["live_classes"] >= 1
+        assert "last_window" in snap

@@ -196,6 +196,33 @@ class TestAdmission:
         assert ei.value.reason == "wait"
         assert queue.stats.rejected == {"wait": 1}
 
+    def test_wait_estimate_includes_cross_key_backlog(self):
+        # dispatch is serial in the pump thread, so a request's wait
+        # includes OTHER keys' pending batches — the pre-fix estimate
+        # let a flood on key A sail past the budget by arriving on B
+        lat = LatencyModel(default_s=1.0)
+        s = Scheduler(lat, target_batch=4)
+        for _ in range(8):                      # 2 pending batches on A
+            s.add("g", None, ("A",), now=0.0, deadline_s=100.0)
+        # joining B stands behind A's 2 batches + its own fresh batch
+        assert s.estimated_wait_s(("B",), 0.0) == pytest.approx(3.0)
+        # joining A: 9 pending -> 3 batches
+        assert s.estimated_wait_s(("A",), 0.0) == pytest.approx(3.0)
+
+    def test_wait_budget_sees_other_keys_backlog(self):
+        lat = LatencyModel(default_s=1.0)
+        queue, engine, clock = _sim_queue(
+            admission=AdmissionPolicy(max_wait_ms=2500.0),
+            latency_model=lat, target_batch=4)
+        for _ in range(8):                      # backlog on the f_in=3 key
+            queue.submit("g0", _x())
+        # a DIFFERENT group key must still be rejected: its wait is the
+        # cross-key backlog (2 batches) + its own batch = ~3s > 2.5s
+        with pytest.raises(AdmissionError) as ei:
+            queue.submit("g0", np.zeros((4, 7), np.float32))
+        assert ei.value.reason == "wait"
+        queue.drain()
+
     def test_submit_after_stop_rejects(self):
         queue, engine, clock = _sim_queue()
         queue.start()
