@@ -15,6 +15,12 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # the shape-class lifecycle drift policy (retirement + drain barrier).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serving.py --smoke
+# Pipelined-dispatch smoke: the same bursty near-capacity trace through
+# serial AND pipelined dispatch on the overlap-modeling stub — asserts
+# outputs bitwise-equal between modes, >=2x lower mean queue delay
+# pipelined, zero added deadline misses, and the in-flight window bound.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_serving.py --smoke --pipeline
 # Docs check: the serving API docstring examples actually run, and every
 # internal link in README.md + docs/ resolves (files and anchors).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

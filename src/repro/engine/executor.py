@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,14 @@ class ExecutorCache:
         self._fns: collections.OrderedDict = collections.OrderedDict()
         self.stats = CacheStats()
         self._class_stats: dict = {}   # ShapeClass -> CacheStats
+        # Guards _fns/_class_stats bookkeeping: the pipelined dispatch
+        # path looks executors up from staging workers concurrently with
+        # user-thread infer()/spmm() calls. build() (trace + compile)
+        # runs INSIDE the lock so one cold key compiles once, not once
+        # per racing thread — concurrent lookups of other, warm keys
+        # briefly queue behind it, which is the price of a coherent
+        # miss counter (the frontend's cold-sample detector).
+        self._lock = threading.RLock()
 
     def _per_class(self, sc: ShapeClass) -> CacheStats:
         st = self._class_stats.get(sc)
@@ -73,23 +82,24 @@ class ExecutorCache:
         return st
 
     def _get(self, key, build):
-        sc = key[1]
-        cls = self._per_class(sc)
-        fn = self._fns.get(key)
-        if fn is None:
-            self.stats.misses += 1
-            cls.misses += 1
-            fn = build()
-            self._fns[key] = fn
-            while len(self._fns) > self.max_entries:
-                old_key, _ = self._fns.popitem(last=False)   # LRU out
-                self.stats.evictions += 1
-                self._per_class(old_key[1]).evictions += 1
-        else:
-            self._fns.move_to_end(key)                       # mark MRU
-            self.stats.hits += 1
-            cls.hits += 1
-        return fn
+        with self._lock:
+            sc = key[1]
+            cls = self._per_class(sc)
+            fn = self._fns.get(key)
+            if fn is None:
+                self.stats.misses += 1
+                cls.misses += 1
+                fn = build()
+                self._fns[key] = fn
+                while len(self._fns) > self.max_entries:
+                    old_key, _ = self._fns.popitem(last=False)   # LRU out
+                    self.stats.evictions += 1
+                    self._per_class(old_key[1]).evictions += 1
+            else:
+                self._fns.move_to_end(key)                       # mark MRU
+                self.stats.hits += 1
+                cls.hits += 1
+            return fn
 
     def __len__(self) -> int:
         return len(self._fns)
@@ -123,13 +133,14 @@ class ExecutorCache:
         order of surviving entries is untouched. Returns the number of
         executors dropped.
         """
-        dead = [key for key in self._fns if key[1] == sc]
-        for key in dead:
-            del self._fns[key]
-        if dead:
-            self.stats.invalidations += len(dead)
-            self._per_class(sc).invalidations += len(dead)
-        return len(dead)
+        with self._lock:
+            dead = [key for key in self._fns if key[1] == sc]
+            for key in dead:
+                del self._fns[key]
+            if dead:
+                self.stats.invalidations += len(dead)
+                self._per_class(sc).invalidations += len(dead)
+            return len(dead)
 
     # ------------------------------------------------------------ spmm -----
     def spmm(self, sc: ShapeClass, f: int):

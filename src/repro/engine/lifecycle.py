@@ -19,7 +19,12 @@ nothing acting on it.
   2. **hysteresis** — a class becomes a retirement candidate only after
      its *rolling* waste exceeds ``waste_budget`` for ``breach_windows``
      consecutive windows AND it saw at least ``min_traffic`` executor
-     lookups this window. One bursty window or an idle wasteful class
+     lookups this window. The waste compared against the budget is
+     **traffic-weighted** (when ``traffic_weight`` and the gate are
+     on): the EWMA is scaled by the class's dispatch share relative to
+     the window's hottest class, so a cold class's waste — which burns
+     little kernel time — can't outrank a hot class's and spend
+     recompile budget where it buys nothing. One bursty window or an idle wasteful class
      never triggers churn; successor classes are additionally immune
      for ``cooldown_windows`` windows after founding.
   3. **budget** — candidates are ranked by rolling waste; at most
@@ -29,7 +34,16 @@ nothing acting on it.
      ``max_recompiles_per_window`` budget allows. Every new class is at
      most one executor compile per op signature, so this caps the
      compile storm drift-response can cause.
-  4. **retire** — the engine plans the re-classing
+  4. **timing** — an approved retirement still waits for a queue
+     **lull**: while any pending request on the retiring class has
+     slack below ``safety_factor ×`` its batch's estimated dispatch
+     latency (`RequestQueue.retirement_lull`), the drain barrier is
+     deferred (skip reason ``"deferred"``) so urgent requests ride
+     their natural deadline close instead of being flushed into
+     partial batches while submits block — up to ``max_defer_windows``
+     windows, after which the retirement proceeds regardless (drift
+     response must not be starvable by sustained traffic).
+  5. **retire** — the engine plans the re-classing
      (``Engine.plan_retirement``: first-fit members into surviving
      classes, found tight classes for the rest), the serving frontend
      drains every in-flight batch keyed on the retiring class
@@ -87,9 +101,24 @@ class LifecycleConfig:
         hysteresis that keeps transient traffic from churning classes.
     min_traffic
         Executor lookups (hits + misses) a class needs *in the window*
-        to be retirement-eligible; 0 disables the traffic gate. An idle
-        class wastes no kernel time, so retiring it spends recompile
-        budget for nothing.
+        to be retirement-eligible; 0 disables the traffic gate (and the
+        traffic weighting with it — a traffic-blind policy, used by
+        offline drift benchmarks). An idle class wastes no kernel time,
+        so retiring it spends recompile budget for nothing.
+    traffic_weight
+        When True (default) and the traffic gate is on, the waste
+        compared against ``waste_budget`` is ``ewma_waste × (class
+        dispatches / hottest class's dispatches)`` this window — the
+        hottest class is judged on its full waste, a class running 10%
+        of the hot path's traffic must waste ~10× the budget before it
+        outranks it. (Relative, not absolute, share: absolute shares
+        would discount every class once traffic spreads and no budget
+        would ever trip.) False restores the unweighted comparison.
+    max_defer_windows
+        Windows an approved retirement may be deferred waiting for a
+        queue lull (no pending member of the class within its
+        deadline-close horizon). 0 retires immediately regardless of
+        queue state.
     min_members
         Classes with fewer registered members are left alone.
     cooldown_windows
@@ -113,6 +142,8 @@ class LifecycleConfig:
     max_retires_per_window: int = 1
     max_recompiles_per_window: int = 4
     ewma_alpha: float = 0.5
+    traffic_weight: bool = True
+    max_defer_windows: int = 2
 
     def __post_init__(self):
         if not 0.0 < self.ewma_alpha <= 1.0:
@@ -123,6 +154,8 @@ class LifecycleConfig:
                              f"got {self.waste_budget}")
         if self.breach_windows < 1:
             raise ValueError("breach_windows must be >= 1")
+        if self.max_defer_windows < 0:
+            raise ValueError("max_defer_windows must be >= 0")
 
 
 @dataclasses.dataclass
@@ -134,6 +167,8 @@ class _ClassTrack:
     windows: int = 0
     cooldown: int = 0
     last_traffic: int = 0     # cumulative lookups at last window end
+    weighted_waste: float = 0.0   # last window's budget-compared value
+    defers: int = 0           # consecutive lull-deferred retirements
 
 
 class LifecycleManager:
@@ -186,6 +221,8 @@ class LifecycleManager:
         """
         cfg = self.config
         deltas: dict = {}
+        # first pass: EWMAs + window traffic deltas (the weighting
+        # needs the window's TOTAL dispatches before any breach call)
         for sc, entry in waste.items():
             t = self._tracks.get(sc)
             if t is None:
@@ -198,16 +235,29 @@ class LifecycleManager:
             cum = int(traffic.get(sc, 0))
             deltas[sc] = cum - t.last_traffic
             t.last_traffic = cum
+        max_delta = max(deltas.values(), default=0)
+        weighting = (cfg.traffic_weight and cfg.min_traffic > 0
+                     and max_delta > 0)
+        for sc, entry in waste.items():
+            t = self._tracks[sc]
+            # dispatch share RELATIVE to the window's hottest class: the
+            # hot path is judged on its raw waste (factor 1.0), colder
+            # classes are discounted by how much less they run. An
+            # absolute share would discount everyone once traffic
+            # spreads over a few classes and no budget would ever trip.
+            t.weighted_waste = (t.ewma_waste * deltas[sc] / max_delta
+                                if weighting else t.ewma_waste)
             if t.cooldown > 0:
                 t.cooldown -= 1
                 t.breaches = 0
-            elif (t.ewma_waste > cfg.waste_budget
+            elif (t.weighted_waste > cfg.waste_budget
                   and int(entry["members"]) >= cfg.min_members
                   and (cfg.min_traffic == 0
                        or deltas[sc] >= cfg.min_traffic)):
                 t.breaches += 1
             else:
                 t.breaches = 0
+                t.defers = 0
         for sc in [sc for sc in self._tracks if sc not in waste]:
             del self._tracks[sc]
         return deltas
@@ -230,7 +280,7 @@ class LifecycleManager:
         candidates = sorted(
             (sc for sc, t in self._tracks.items()
              if t.breaches >= cfg.breach_windows),
-            key=lambda sc: (-self._tracks[sc].ewma_waste,
+            key=lambda sc: (-self._tracks[sc].weighted_waste,
                             self._summary(sc)))
         window = {"window": self.windows, "retired": [], "reclassed": 0,
                   "recompiles": 0, "drained_batches": 0, "skipped": {},
@@ -241,6 +291,7 @@ class LifecycleManager:
             window["skipped"][reason] = window["skipped"].get(reason, 0) + 1
             self.skipped[reason] = self.skipped.get(reason, 0) + 1
 
+        lull = getattr(self.frontend, "retirement_lull", None)
         for sc in candidates:
             if len(window["retired"]) >= cfg.max_retires_per_window:
                 skip("retire_budget")
@@ -261,6 +312,22 @@ class LifecycleManager:
             if (window["recompiles"] + plan.n_new_classes
                     > cfg.max_recompiles_per_window):
                 skip("recompile_budget")
+                continue
+            track = self._tracks[sc]
+            if (lull is not None and cfg.max_defer_windows > 0
+                    and track.defers < cfg.max_defer_windows
+                    and not lull(sc)):
+                # deadline-aware timing, checked LAST so only a
+                # retirement that would otherwise run right now burns
+                # defer budget (a no_tighter or over-budget candidate
+                # never drains, so deferring it would waste windows): a
+                # pending member of this class is inside its deadline-
+                # close horizon — let it dispatch naturally and retire
+                # at the next lull. Breaches keep accumulating, so the
+                # deferral can't silently decay into never-retiring;
+                # max_defer_windows hard-bounds it.
+                track.defers += 1
+                skip("deferred")
                 continue
             window["retired"].append(self._summary(sc))
             window["reclassed"] += len(plan.names)

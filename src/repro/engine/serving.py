@@ -14,6 +14,13 @@ Request path (mirrors the paper's offline/online split):
 ``serve_batch`` (which forms groups from one call's requests) and the
 standing `repro.serving.RequestQueue` (which forms groups from traffic
 accumulated across calls and closes them on deadline pressure).
+``serve_group_async`` is its non-blocking core: it performs all
+host-side staging (pad, stack, executor lookup) and *enqueues* the
+device work — JAX dispatch is asynchronous, so the returned arrays are
+unresolved device values — plus a completion meta dict (``cold`` flag,
+``complete``/``ready`` hooks) that the pipelined frontend's completion
+drainer uses to overlap the next batch's staging with this batch's
+device compute.
 
 All host-side padding/slicing happens outside jit, so the traced
 computation depends only on the shape class and feature widths.
@@ -22,6 +29,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -88,6 +96,11 @@ class Engine:
             raise ValueError(f"max_stacks must be >= 1, got {max_stacks}")
         self._stacks: collections.OrderedDict = collections.OrderedDict()
         self._max_stacks = max_stacks
+        # Guards the stack cache: pipelined staging workers may run
+        # serve_group_async concurrently with each other and with user
+        # infer() calls. Per-member padding stays outside the lock (no
+        # shared state); only the OrderedDict bookkeeping is inside.
+        self._stack_lock = threading.Lock()
         self.stack_hits = 0
         self.stack_misses = 0
         self.stack_evictions = 0
@@ -133,8 +146,9 @@ class Engine:
         # a re-registered name invalidates every cached group stack that
         # contains it — otherwise serve_batch would keep serving the old
         # partition/weights
-        self._stacks = collections.OrderedDict(
-            (k, v) for k, v in self._stacks.items() if name not in k)
+        with self._stack_lock:
+            self._stacks = collections.OrderedDict(
+                (k, v) for k, v in self._stacks.items() if name not in k)
         return handle
 
     def handle(self, name: str) -> GraphHandle:
@@ -215,10 +229,42 @@ class Engine:
         shapes) — ``serve_batch`` and the serving frontend's scheduler
         both guarantee this by construction. The group is stacked
         leaf-wise and run through one vmapped executor; outputs return
-        in request order.
+        in request order (as JAX's usual unresolved async values — the
+        caller blocks when it reads them).
+        """
+        return self.serve_group_async(requests)[0]
+
+    def prepare_x(self, name: str, x) -> jnp.ndarray:
+        """Stage one request's features: permute + pad to the graph's
+        class input rows and place on device. Pure per-request work with
+        no shared state, so pipelined staging workers may run it
+        concurrently; the result feeds ``serve_group_async``'s
+        ``prepared`` argument to move this cost off the ordered enqueue
+        step."""
+        return self._pad_x(self._graphs[name], x)
+
+    def serve_group_async(self, requests, prepared=None) -> tuple:
+        """Non-blocking ``serve_group``: stage + enqueue, don't wait.
+
+        Returns ``(outs, meta)``: ``outs`` are the per-request outputs
+        as *unresolved* device values (JAX async dispatch — the XLA
+        execution may still be running), and ``meta`` is the completion
+        contract for a pipelined caller:
+
+          ``cold``      this dispatch built (traced + compiled) at least
+                        one executor — its wall time must not feed warm
+                        latency EWMAs;
+          ``ready()``   True once every output's device buffer exists
+                        (non-blocking poll);
+          ``complete()``  block until the outputs are ready.
+
+        ``prepared`` optionally carries pre-staged padded features
+        (`prepare_x`, aligned with ``requests``) so a staging pool can
+        parallelize the padding while the enqueue itself stays ordered.
         """
         if not requests:
-            return []
+            return [], {"cold": False, "ready": lambda: True,
+                        "complete": lambda: None}
         members = []
         key0 = None
         for i, (name, x) in enumerate(requests):
@@ -231,14 +277,19 @@ class Engine:
                     f"serve_group members must share one (class, f_in, "
                     f"weight-shapes) key; {requests[0][0]!r} and {name!r} "
                     f"differ")
-            members.append((i, h, x))
+            xp = prepared[i] if prepared is not None else None
+            members.append((i, h, x, xp))
         sc, f_in, w_shapes = key0
+        misses0 = self.executors.stats.misses
+
+        def pad(h, x, xp):
+            return xp if xp is not None else self._pad_x(h, x)
 
         if len(members) == 1:
-            i, h, x = members[0]
+            i, h, x, xp = members[0]
             fn = self.executors.gcn(sc, f_in, w_shapes)
-            return [self._unpad_y(h, fn(h.part, self._pad_x(h, x),
-                                        h.weights))]
+            outs = [self._unpad_y(h, fn(h.part, pad(h, x, xp), h.weights))]
+            return outs, self._completion_meta(outs, misses0)
         # Canonicalize group order by name so (g0,g1) and (g1,g0)
         # share one cached stack, then pad to the next power-of-two
         # batch (repeating the last member; its extra outputs are
@@ -248,30 +299,87 @@ class Engine:
         bs = 1 << (len(members) - 1).bit_length()
         padded = members + [members[-1]] * (bs - len(members))
         fn = self.executors.gcn_batched(sc, f_in, w_shapes, bs)
-        stack_key = tuple(h.name for _, h, _ in padded)
-        stacks = self._stacks.get(stack_key)
-        if stacks is None:
-            self.stack_misses += 1
-            part_stack = jtu.tree_map(
-                lambda *leaves: jnp.stack(leaves),
-                *[h.part for _, h, _ in padded])
-            w_stack = jtu.tree_map(
-                lambda *ws: jnp.stack(ws),
-                *[h.weights for _, h, _ in padded])
-            while len(self._stacks) >= self._max_stacks:
-                self._stacks.popitem(last=False)       # LRU out
-                self.stack_evictions += 1
-            stacks = self._stacks[stack_key] = (part_stack, w_stack)
-        else:
-            self._stacks.move_to_end(stack_key)        # mark MRU
-            self.stack_hits += 1
+        stack_key = tuple(h.name for _, h, _, _ in padded)
+        with self._stack_lock:
+            stacks = self._stacks.get(stack_key)
+            if stacks is None:
+                self.stack_misses += 1
+                part_stack = jtu.tree_map(
+                    lambda *leaves: jnp.stack(leaves),
+                    *[h.part for _, h, _, _ in padded])
+                w_stack = jtu.tree_map(
+                    lambda *ws: jnp.stack(ws),
+                    *[h.weights for _, h, _, _ in padded])
+                while len(self._stacks) >= self._max_stacks:
+                    self._stacks.popitem(last=False)       # LRU out
+                    self.stack_evictions += 1
+                stacks = self._stacks[stack_key] = (part_stack, w_stack)
+            else:
+                self._stacks.move_to_end(stack_key)        # mark MRU
+                self.stack_hits += 1
         part_stack, w_stack = stacks
-        x_stack = jnp.stack([self._pad_x(h, x) for _, h, x in padded])
+        x_stack = jnp.stack([pad(h, x, xp) for _, h, x, xp in padded])
         ys = fn(part_stack, x_stack, w_stack)
         results: list = [None] * len(members)
-        for j, (i, h, _) in enumerate(members):
+        for j, (i, h, _, _) in enumerate(members):
             results[i] = self._unpad_y(h, ys[j])
-        return results
+        return results, self._completion_meta(results, misses0)
+
+    def _completion_meta(self, outs, misses0: int) -> dict:
+        """The async-dispatch completion contract for one enqueued group.
+
+        ``cold`` is a miss-counter delta: under concurrent staging a
+        sibling's miss can be misattributed, which only *over*-reports
+        cold — a skipped warm sample, never a poisoned EWMA.
+        """
+        def ready() -> bool:
+            return all(getattr(y, "is_ready", lambda: True)() for y in outs)
+
+        def complete() -> None:
+            for y in outs:
+                blocker = getattr(y, "block_until_ready", None)
+                if blocker is not None:
+                    blocker()
+
+        return {"cold": self.executors.stats.misses > misses0,
+                "ready": ready, "complete": complete}
+
+    # --------------------------------------------------------- latency -----
+    def latency_prior(self, key: tuple, batch: int) -> Optional[float]:
+        """Roofline-derived warm-latency prior for one group dispatch.
+
+        Seeds the serving frontend's `LatencyModel` for keys with no
+        observations yet: the class's padded MAC capacity (the slots the
+        kernels *execute*, including masked lanes) and its array bytes
+        give a FLOPs/bytes roofline bound at the measured-peak constants
+        in `repro.analysis.roofline`, floored at a fixed per-launch
+        overhead so an arithmetic-light class never forecasts an
+        implausibly instant dispatch (which would make the scheduler
+        linger past its deadline). Returns None for keys whose class
+        lacks capacity metadata (e.g. the simulation's stub classes) —
+        the model then falls back to its flat default.
+        """
+        from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
+        sc = key[0]
+        if not hasattr(sc, "ell_mac_capacity"):
+            return None
+        f_in = key[1]
+        w_shapes = key[2] if len(key) > 2 else ()
+        macs = (sc.ell_mac_capacity
+                + sc.n_dense_tiles * sc.tile * sc.tile + sc.coo_nnz)
+        n_rows = sc.n_row_tiles * sc.tile
+        widths = [f_in] + [w[1] for w in w_shapes]
+        # per layer: one hybrid SpMM at that width + the dense weight GEMM
+        flops = 2.0 * macs * sum(widths)
+        flops += sum(2.0 * n_rows * a * b for a, b in w_shapes)
+        byts = 4.0 * (macs + n_rows * sum(widths))
+        t = max(flops / PEAK_FLOPS, byts / HBM_BW) * max(int(batch), 1)
+        return max(t, self.LAUNCH_FLOOR_S)
+
+    # Floor for the roofline prior: per-dispatch launch/host overhead no
+    # capacity model predicts. Deliberately conservative — a too-small
+    # first estimate closes batches too late and misses deadlines.
+    LAUNCH_FLOOR_S = 2e-3
 
     # ----------------------------------------------------------- stats -----
     def attach_frontend(self, frontend) -> None:
@@ -399,9 +507,10 @@ class Engine:
         # cached member stacks hold the OLD padded arrays of moved
         # graphs — any stack containing one is stale
         moved_set = set(moved)
-        self._stacks = collections.OrderedDict(
-            (k, v) for k, v in self._stacks.items()
-            if not moved_set.intersection(k))
+        with self._stack_lock:
+            self._stacks = collections.OrderedDict(
+                (k, v) for k, v in self._stacks.items()
+                if not moved_set.intersection(k))
         return {"members": len(moved),
                 "executors_invalidated": invalidated,
                 "new_classes": len(plan.new_classes)}

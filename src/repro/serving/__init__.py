@@ -7,7 +7,11 @@ deadline slack vs the EWMA `LatencyModel` estimate, or drain — then
 dispatches through the engine's cached vmapped executors. Admission
 control sheds load with a reason; `ServerStats` telemetry surfaces
 through ``Engine.stats()["serving"]``. `simulate` replays deterministic
-synthetic traces with zero real compiles. The queue also hosts the
+synthetic traces with zero real compiles. ``pipelined=True`` routes
+closed batches through the `DispatchPipeline` (ISSUE 5): host staging
+overlaps device compute via JAX async dispatch behind a bounded
+in-flight window, per-key order preserved and outputs bitwise-equal to
+serial dispatch. The queue also hosts the
 shape-class lifecycle's drain barrier (`RequestQueue.drain_class`):
 batches in flight on a retiring class dispatch through the old
 executors before invalidation, and new submissions route to the
@@ -16,16 +20,20 @@ successor class (ISSUE 4).
 from .frontend import (DEFAULT_DEADLINE_MS, AdmissionError, AdmissionPolicy,
                        RequestFuture, RequestQueue)
 from .latency import LatencyModel
+from .pipeline import DispatchPipeline, InflightBatch
 from .scheduler import BatchPlan, PendingRequest, Scheduler, pow2_ceil
 from .stats import ServerStats, SimClock
-from .simulate import (Arrival, StubEngine, StubShapeClass, bursty_trace,
-                       poisson_trace, replay_trace, run_lifecycle_smoke,
-                       run_smoke)
+from .simulate import (Arrival, StubEngine, StubShapeClass,
+                       attach_resolve_probe, bursty_trace, poisson_trace,
+                       replay_trace, run_lifecycle_smoke,
+                       run_pipeline_smoke, run_smoke)
 
 __all__ = [
     "DEFAULT_DEADLINE_MS", "AdmissionError", "AdmissionPolicy",
-    "RequestFuture", "RequestQueue", "LatencyModel", "BatchPlan",
-    "PendingRequest", "Scheduler", "pow2_ceil", "ServerStats", "SimClock",
-    "Arrival", "StubEngine", "StubShapeClass", "bursty_trace",
-    "poisson_trace", "replay_trace", "run_lifecycle_smoke", "run_smoke",
+    "RequestFuture", "RequestQueue", "LatencyModel", "DispatchPipeline",
+    "InflightBatch", "BatchPlan", "PendingRequest", "Scheduler",
+    "pow2_ceil", "ServerStats", "SimClock", "Arrival", "StubEngine",
+    "StubShapeClass", "attach_resolve_probe", "bursty_trace",
+    "poisson_trace", "replay_trace", "run_lifecycle_smoke",
+    "run_pipeline_smoke", "run_smoke",
 ]

@@ -20,6 +20,19 @@ triggered an executor compile (detected via the engine's cache-miss
 counter) are reported cold and excluded, so one trace+compile can't
 poison the deadline rule. All counters land in `ServerStats`, surfaced
 through ``Engine.stats()["serving"]``.
+
+Two dispatch disciplines:
+
+  serial     (default) — each closed batch runs end-to-end (stage,
+             enqueue, block) before the next; simple, and the baseline
+             the pipeline is benchmarked against.
+  pipelined  (``pipelined=True``) — closed batches flow through a
+             `DispatchPipeline`: host staging overlaps device compute
+             behind a bounded in-flight window, the EWMA learns
+             staging/device segments separately, and admission wait
+             accounts for the in-flight work the scheduler can't see.
+             Outputs stay bitwise-equal to serial dispatch (same
+             grouping, same executors, per-key order preserved).
 """
 from __future__ import annotations
 
@@ -29,6 +42,7 @@ import time
 from typing import Optional
 
 from .latency import LatencyModel
+from .pipeline import DispatchPipeline
 from .scheduler import Scheduler, pow2_ceil
 from .stats import ServerStats
 
@@ -91,14 +105,17 @@ class RequestQueue:
                  latency_model: Optional[LatencyModel] = None,
                  safety_factor: float = 2.0,
                  max_linger_ms: Optional[float] = None,
-                 clock=time.monotonic, attach: bool = True):
+                 clock=time.monotonic, attach: bool = True,
+                 pipelined: bool = False, max_inflight: int = 4,
+                 stage_workers: int = 1):
         self.engine = engine
         self.clock = clock
         self.default_deadline_ms = default_deadline_ms
         self.admission = admission if admission is not None \
             else AdmissionPolicy()
         self.latency = latency_model if latency_model is not None \
-            else LatencyModel()
+            else LatencyModel(
+                prior=getattr(engine, "latency_prior", None))
         self.scheduler = Scheduler(
             self.latency, target_batch=target_batch,
             safety_factor=safety_factor,
@@ -114,6 +131,13 @@ class RequestQueue:
         # dispatch); drain_class takes _lock first so the queue is
         # frozen while a retiring class drains and swaps.
         self._dispatch_gate = threading.Lock()
+        self.pipeline: Optional[DispatchPipeline] = None
+        if pipelined:
+            self.pipeline = DispatchPipeline(
+                engine, latency=self.latency, stats=self.stats,
+                clock=self.clock, max_inflight=max_inflight,
+                stage_workers=stage_workers)
+            self.stats.pipelined = True
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
         if attach:
@@ -184,6 +208,11 @@ class RequestQueue:
                     "depth", f"queue depth {depth} >= {pol.max_depth}")
             if pol.max_wait_ms is not None:
                 wait_s = self.scheduler.estimated_wait_s(key, now)
+                if self.pipeline is not None:
+                    # the scheduler sees only pending queues; work the
+                    # pipeline already owns (queued plans + the bounded
+                    # in-flight window) is wait all the same
+                    wait_s += self.pipeline.backlog_s()
                 if wait_s * 1e3 > pol.max_wait_ms:
                     self.stats.on_reject("wait")
                     raise AdmissionError(
@@ -268,22 +297,55 @@ class RequestQueue:
                                    missed=now > r.deadline_s)
 
     def pump(self) -> int:
-        """Close and dispatch every batch due now; returns batches run."""
+        """Close and dispatch every batch due now; returns batches run.
+
+        Pipelined mode hands the closed plans to the `DispatchPipeline`
+        (staging + non-blocking enqueue) and reaps any completions whose
+        device results are already available — so a pump near capacity
+        spends its time staging, not blocked on the device.
+        """
         with self._lock:
             plans = self.scheduler.poll(self.clock())
+            # pipelined plans are ENROLLED inside the lock: a plan
+            # popped out of the scheduler is the pipeline's
+            # responsibility before the lock drops, so drain_class
+            # (which quiesces the pipeline under this lock) can never
+            # interleave its engine mutation with a popped-but-
+            # untracked plan. The staging itself — which can block on
+            # a full window — runs after the lock is released, so
+            # submitters are never stalled behind device completions.
+            if self.pipeline is not None:
+                enrolled = [(self.pipeline.enroll(p), p) for p in plans]
+        if self.pipeline is not None:
+            for seq, plan in enrolled:
+                self.pipeline.run_enrolled(seq, plan)
+            self.pipeline.poll_completions()
+            return len(plans)
         for plan in plans:
             self._dispatch(plan)
         return len(plans)
 
     def drain(self) -> int:
         """Rule (c): the caller declares the queue drained — close and
-        dispatch everything still pending."""
+        dispatch everything still pending, then (pipelined mode) wait
+        out the in-flight window so every future is resolved."""
         n = self.pump()
         with self._lock:
             plans = self.scheduler.flush()
+            if self.pipeline is not None:
+                enrolled = [(self.pipeline.enroll(p), p) for p in plans]
+        if self.pipeline is not None:
+            for seq, plan in enrolled:
+                self.pipeline.run_enrolled(seq, plan)
+            self.pipeline.flush()
+            return n + len(plans)
         for plan in plans:
             self._dispatch(plan)
         return n + len(plans)
+
+    def inflight(self) -> int:
+        """Batches the dispatch pipeline still owes (0 when serial)."""
+        return 0 if self.pipeline is None else self.pipeline.depth()
 
     def drain_class(self, sclass, action=None) -> int:
         """Lifecycle barrier: flush every pending batch built on
@@ -309,10 +371,34 @@ class RequestQueue:
         Submissions block for the duration (a retirement is rare and
         its flush is small — at most one non-full batch per affected
         key). Returns the number of batches flushed.
+
+        Pipelined mode: the flushed plans are submitted to the pipeline
+        *behind* whatever is already queued/in flight (FIFO staging
+        preserves per-key order), then ``pipeline.flush()`` quiesces the
+        whole window — nothing queued, staging, enqueued, or completing
+        — before ``action`` mutates the engine. That quiesce is the
+        pipelined equivalent of the serial dispatch gate: no future can
+        strand on the retired class's executors, and no batch can
+        dispatch twice (plans leave the scheduler exactly once and the
+        pipeline pops each exactly once).
         """
         with self._lock:
             plans = self.scheduler.close_matching(
                 lambda key: key[0] == sclass)
+            if self.pipeline is not None:
+                # quiesce FIRST: work the pipeline already owns —
+                # including plans a pump thread enrolled but has not
+                # staged yet — must enqueue before the barrier's own
+                # flush plans, or a same-key batch could jump the
+                # queue. New work can't arrive meanwhile: submits and
+                # pump polls both need the lock held here.
+                self.pipeline.flush()
+                for plan in plans:
+                    self.pipeline.submit(plan)
+                self.pipeline.flush()   # the well-defined quiesce point
+                if action is not None:
+                    action()
+                return len(plans)
             with self._dispatch_gate:   # waits out an in-flight dispatch
                 for plan in plans:
                     self._dispatch_plan(plan)
@@ -320,16 +406,45 @@ class RequestQueue:
                     action()
         return len(plans)
 
+    def retirement_lull(self, sclass) -> bool:
+        """True when no pending request keyed on ``sclass`` is close to
+        its deadline (slack below ``safety_factor ×`` the batch's
+        estimated dispatch latency). The lifecycle uses this to time its
+        `drain_class` barrier: retiring during a lull lets urgent
+        requests ride their natural deadline close through the old
+        executors instead of being flushed into partial batches while
+        submits are blocked."""
+        with self._lock:
+            return not self.scheduler.has_urgent(
+                lambda key: key[0] == sclass, self.clock())
+
     def depth(self) -> int:
         with self._lock:
             return self.scheduler.depth()
 
+    def next_due_s(self, now: float) -> Optional[float]:
+        """Earliest instant a pump has work: the scheduler's next close,
+        or (pipelined simulation) the in-flight window's next modeled
+        completion — whichever comes first."""
+        with self._lock:
+            due = self.scheduler.next_due_s(now)
+        if self.pipeline is not None:
+            ready = self.pipeline.next_ready_s()
+            if ready is not None:
+                ready = max(ready, now)
+                due = ready if due is None else min(due, ready)
+        return due
+
     # -------------------------------------------------- threaded serving --
     def start(self) -> "RequestQueue":
-        """Run the pump in a daemon worker until ``stop()``."""
+        """Run the pump in a daemon worker until ``stop()``. Pipelined
+        mode also starts the staging pool + completion drainer, so
+        futures resolve the moment device results are ready."""
         if self._thread is not None:
             raise RuntimeError("worker already running")
         self._stopping = False
+        if self.pipeline is not None:
+            self.pipeline.start()
         self._thread = threading.Thread(
             target=self._worker, name="repro-serving-pump", daemon=True)
         self._thread.start()
@@ -362,5 +477,7 @@ class RequestQueue:
                 self._stopping = True
                 self._wake.notify_all()
             thread.join()
+        if self.pipeline is not None:
+            self.pipeline.stop()   # flushes, then falls back to inline
         if drain:
             self.drain()

@@ -113,13 +113,20 @@ class Scheduler:
     # that sleeps to exactly the due instant would spin forever.
     EPS_S = 1e-9
 
-    def _deadline_due(self, key: tuple, q, now: float) -> bool:
+    def _slack_due(self, key: tuple, q, now: float) -> bool:
+        """The deadline-close horizon test: is the queue's tightest
+        member's slack at or below ``safety_factor ×`` the estimated
+        dispatch latency? Shared by the close rule and ``has_urgent``
+        so the two notions of "urgent" can never drift apart."""
         est = self.latency.estimate(key, pow2_ceil(len(q)))
         # FIFO order is arrival order, not deadline order — a later
         # arrival may carry the tightest deadline, so the close rule
         # keys off the MINIMUM deadline in the queue
         dl = min(r.deadline_s for r in q)
-        if dl - now <= self.safety_factor * est + self.EPS_S:
+        return dl - now <= self.safety_factor * est + self.EPS_S
+
+    def _deadline_due(self, key: tuple, q, now: float) -> bool:
+        if self._slack_due(key, q, now):
             return True
         return (self.max_linger_s is not None
                 and now - q[0].submit_s + self.EPS_S >= self.max_linger_s)
@@ -157,6 +164,16 @@ class Scheduler:
             if self.depth(key):
                 plans.append(self._close(key, self.depth(key), reason))
         return plans
+
+    def has_urgent(self, pred, now: float) -> bool:
+        """True when any pending queue whose key satisfies ``pred`` is
+        already inside its deadline-close horizon (`_slack_due` — the
+        same test rule (b) closes on). The lifecycle's retirement
+        timing reads this (via ``RequestQueue.retirement_lull``) to
+        defer its drain barrier to a lull instead of flushing requests
+        that were about to close naturally."""
+        return any(self._slack_due(key, q, now)
+                   for key, q in self._pending.items() if q and pred(key))
 
     # -------------------------------------------------------- forecast ----
     def next_due_s(self, now: float) -> Optional[float]:

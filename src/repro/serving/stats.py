@@ -80,6 +80,21 @@ class ServerStats:
         Rolling window (most recent ``LATENCY_WINDOW`` samples) of
         per-request submit→resolve latencies feeding the percentiles.
 
+    Pipelined-dispatch telemetry (all zero under serial dispatch):
+
+    ``pipelined``
+        Whether this frontend dispatches through a `DispatchPipeline`.
+    ``inflight_depth`` / ``inflight_peak``
+        Current and peak device-side in-flight window occupancy
+        (batches enqueued, results not yet resolved).
+    ``staging_s`` / ``device_s``
+        Rolling windows of per-batch host-staging and enqueue→ready
+        wall times — the two pipeline segments.
+    ``device_span_total_s`` / ``device_wait_total_s``
+        Cumulative device-segment span vs the host time actually spent
+        *blocked* waiting on it; their gap is compute the pipeline hid
+        behind staging (see ``overlap_ratio``).
+
     >>> s = ServerStats()
     >>> s.on_arrival(0.0); s.on_batch(3, padded=4, reason="drain")
     >>> s.on_complete(0.25, missed=False)
@@ -99,6 +114,14 @@ class ServerStats:
     first_arrival_s: float = 0.0
     last_arrival_s: float = 0.0
     latency_s: list = dataclasses.field(default_factory=list)
+    # pipelined-dispatch segment telemetry
+    pipelined: bool = False
+    inflight_depth: int = 0
+    inflight_peak: int = 0
+    staging_s: list = dataclasses.field(default_factory=list)
+    device_s: list = dataclasses.field(default_factory=list)
+    device_span_total_s: float = 0.0
+    device_wait_total_s: float = 0.0
 
     # ------------------------------------------------------------ hooks ----
     def on_arrival(self, now: float) -> None:
@@ -124,6 +147,25 @@ class ServerStats:
         if len(self.latency_s) > LATENCY_WINDOW:
             del self.latency_s[: len(self.latency_s) - LATENCY_WINDOW]
 
+    def on_inflight(self, depth: int) -> None:
+        """Gauge update from the dispatch pipeline's window."""
+        self.inflight_depth = depth
+        if depth > self.inflight_peak:
+            self.inflight_peak = depth
+
+    def on_pipeline(self, staging_s: float, device_s: float,
+                    wait_s: float) -> None:
+        """One pipelined batch's segment record: host staging time,
+        enqueue→ready device span, and the host time actually spent
+        blocked on that span (the unhidden remainder)."""
+        self.staging_s.append(staging_s)
+        self.device_s.append(device_s)
+        for w in (self.staging_s, self.device_s):
+            if len(w) > LATENCY_WINDOW:
+                del w[: len(w) - LATENCY_WINDOW]
+        self.device_span_total_s += device_s
+        self.device_wait_total_s += min(wait_s, device_s)
+
     # --------------------------------------------------------- rollups ----
     @property
     def rejected_total(self) -> int:
@@ -139,14 +181,36 @@ class ServerStats:
         """Live members per pow2-padded vmap slot (1.0 = no pad waste)."""
         return self.completed / self.padded_slots if self.padded_slots else 0.0
 
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of device compute hidden behind host staging: 1 −
+        blocked-wait / device-span. 0 under serial dispatch (the host
+        waits out every device segment); approaching 1 means the
+        completion path almost always finds results already ready."""
+        if self.device_span_total_s <= 0:
+            return 0.0
+        return 1.0 - self.device_wait_total_s / self.device_span_total_s
+
     def arrival_rate_hz(self) -> float:
         span = self.last_arrival_s - self.first_arrival_s
         return (self.arrivals - 1) / span if span > 0 else 0.0
 
+    @staticmethod
+    def _percentile_ms(window: list, q: float) -> float:
+        if not window:
+            return 0.0
+        return float(np.percentile(np.asarray(window), q) * 1e3)
+
     def latency_percentile_ms(self, q: float) -> float:
+        return self._percentile_ms(self.latency_s, q)
+
+    def mean_latency_ms(self) -> float:
+        """Mean submit→resolve latency over the rolling window — the
+        queue-delay headline the pipeline benchmark compares on (service
+        time is a near-constant floor; growth here is queue delay)."""
         if not self.latency_s:
             return 0.0
-        return float(np.percentile(np.asarray(self.latency_s), q) * 1e3)
+        return float(np.mean(np.asarray(self.latency_s)) * 1e3)
 
     def snapshot(self) -> dict:
         return {
@@ -162,8 +226,17 @@ class ServerStats:
             "arrival_rate_hz": self.arrival_rate_hz(),
             "p50_ms": self.latency_percentile_ms(50),
             "p99_ms": self.latency_percentile_ms(99),
+            "mean_latency_ms": self.mean_latency_ms(),
             "deadline_misses": self.deadline_misses,
             "dispatch_errors": self.dispatch_errors,
+            "pipelined": self.pipelined,
+            "inflight_depth": self.inflight_depth,
+            "inflight_peak": self.inflight_peak,
+            "staging_p50_ms": self._percentile_ms(self.staging_s, 50),
+            "staging_p99_ms": self._percentile_ms(self.staging_s, 99),
+            "device_p50_ms": self._percentile_ms(self.device_s, 50),
+            "device_p99_ms": self._percentile_ms(self.device_s, 99),
+            "overlap_ratio": self.overlap_ratio,
         }
 
     def summary(self) -> str:

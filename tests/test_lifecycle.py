@@ -311,6 +311,114 @@ class TestLifecyclePolicy:
         assert snap["recompiles"] <= 2
 
 
+class TestTrafficWeightedWaste:
+    """ISSUE 5 satellite: the budget comparison weights each class's
+    waste EWMA by its dispatch share, on hand-computed shares."""
+
+    def _two_class_world(self, **cfg_kw):
+        clock, engine, queue, mgr, x, serve = _stub_world(**cfg_kw)
+        for i in range(3):
+            engine.register(f"b{i}", size=100)   # founds cap=200: waste 0.5
+        engine.register("tiny", size=10)         # founds cap=20:  waste 0.5
+        assert len(engine.classes) == 2
+        sc_a, sc_b = engine.classes
+        # hand-built dispatch mix: 3 batches on A, 1 on B -> shares 3/4, 1/4
+        for _ in range(3):
+            serve([f"b{i}" for i in range(3)])
+        serve(["tiny"])
+        return engine, mgr, (sc_a, sc_b)
+
+    def test_hand_computed_shares_scale_the_budget_comparison(self):
+        engine, mgr, (sc_a, sc_b) = self._two_class_world(
+            waste_budget=0.6, breach_windows=8)   # no retire, just track
+        w = mgr.step()
+        # raw EWMA waste is 0.5 for BOTH classes (nnz is half capacity);
+        # relative dispatch shares: A ran 3 batches (the hottest ->
+        # factor 3/3 = 1), B ran 1 (factor 1/3). Weighted:
+        # A = 0.5 * 1 = 0.5, B = 0.5 * 1/3 = 0.1667
+        assert mgr._tracks[sc_a].ewma_waste == pytest.approx(0.5)
+        assert mgr._tracks[sc_b].ewma_waste == pytest.approx(0.5)
+        assert mgr._tracks[sc_a].weighted_waste == pytest.approx(0.5)
+        assert mgr._tracks[sc_b].weighted_waste == pytest.approx(0.5 / 3)
+        # both sit under the 0.6 budget -> no breach
+        assert w["retired"] == [] and w["breaching"] == 0
+
+    def test_hot_class_breaches_cold_class_spared(self):
+        engine, mgr, (sc_a, sc_b) = self._two_class_world(
+            waste_budget=0.4, breach_windows=8)   # no retire, just track
+        mgr.step()
+        # 0.5 > 0.4 -> the hot class breaches; the cold one's identical
+        # raw waste is discounted to 0.1667 < 0.4 and spared
+        assert mgr._tracks[sc_a].breaches == 1
+        assert mgr._tracks[sc_b].breaches == 0
+
+    def test_weighting_off_restores_raw_comparison(self):
+        engine, mgr, (sc_a, sc_b) = self._two_class_world(
+            waste_budget=0.4, breach_windows=8, traffic_weight=False)
+        mgr.step()
+        assert mgr._tracks[sc_a].weighted_waste == pytest.approx(0.5)
+        assert mgr._tracks[sc_a].breaches == 1
+        assert mgr._tracks[sc_b].breaches == 1
+
+
+class TestDeferredRetirement:
+    """ISSUE 5 satellite: the drain barrier waits for a queue lull
+    (no pending member inside its deadline-close horizon), with a
+    max-defer fallback so traffic can't starve drift response."""
+
+    def _breaching_world(self, **cfg_kw):
+        cfg_kw.setdefault("waste_budget", 0.4)
+        cfg_kw.setdefault("breach_windows", 1)
+        clock, engine, queue, mgr, x, serve = _stub_world(**cfg_kw)
+        for i in range(3):
+            engine.register(f"b{i}", size=100)   # waste 0.5 > 0.4
+        return clock, engine, queue, mgr, x, serve
+
+    def test_defers_while_urgent_then_retires_at_lull(self):
+        clock, engine, queue, mgr, x, serve = self._breaching_world()
+        serve([f"b{i}" for i in range(3)])
+        # a pending member with slack below safety*estimate: NOT a lull
+        tight = queue.submit("b0", x, deadline_ms=0.01)
+        w1 = mgr.step()
+        assert w1["retired"] == []
+        assert w1["skipped"].get("deferred") == 1
+        assert not tight.done(), "deferral must not flush the request"
+        queue.drain()        # the urgent request rides its natural close
+        assert tight.done()
+        serve([f"b{i}" for i in range(3)])   # keep the traffic gate open
+        w2 = mgr.step()      # queue idle now -> lull -> retire proceeds
+        assert len(w2["retired"]) == 1
+        assert mgr.skipped.get("deferred") == 1
+
+    def test_max_defer_windows_forces_retirement(self):
+        clock, engine, queue, mgr, x, serve = self._breaching_world(
+            max_defer_windows=2)
+        tights = []
+        for w in range(2):
+            serve([f"b{i}" for i in range(3)])
+            tights.append(queue.submit("b0", x, deadline_ms=0.01))
+            report = mgr.step()
+            assert report["retired"] == []
+            assert report["skipped"].get("deferred") == 1
+            queue.drain()
+        serve([f"b{i}" for i in range(3)])
+        tights.append(queue.submit("b0", x, deadline_ms=0.01))
+        report = mgr.step()   # defer budget exhausted: retire anyway
+        assert len(report["retired"]) == 1
+        assert all(t.done() for t in tights), \
+            "forced retirement must flush, not strand, urgent requests"
+        assert queue.stats.close_reasons.get("retire", 0) >= 1
+
+    def test_defer_disabled_retires_immediately(self):
+        clock, engine, queue, mgr, x, serve = self._breaching_world(
+            max_defer_windows=0)
+        serve([f"b{i}" for i in range(3)])
+        queue.submit("b0", x, deadline_ms=0.01)
+        report = mgr.step()
+        assert len(report["retired"]) == 1
+        assert report["skipped"] == {}
+
+
 # ---------------------------------------------------------------------------
 # real-engine retirement: the full drain -> swap -> recompile path
 # ---------------------------------------------------------------------------
