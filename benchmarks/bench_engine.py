@@ -269,10 +269,22 @@ if __name__ == "__main__":
     ap.add_argument("--features", type=int, default=64)
     ap.add_argument("--drift", action="store_true",
                     help="run the shape-class lifecycle drift scenario")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_*.json perf-trajectory file "
+                         "(schema checked by lint_repro --bench-check)")
     args = ap.parse_args()
     if args.drift:
-        run_drift(reps=2 if args.reps is None else args.reps,
-                  f=args.features)
+        results = run_drift(reps=2 if args.reps is None else args.reps,
+                            f=args.features)
     else:
-        run(args.graphs, 20 if args.reps is None else args.reps,
-            args.features)
+        results = run(args.graphs, 20 if args.reps is None else args.reps,
+                      args.features)
+    if args.json:
+        import sys
+        from repro.analysis.static.bench_check import write_bench_json
+        write_bench_json(
+            args.json, "bench_engine",
+            "bench_engine " + " ".join(a for a in sys.argv[1:]
+                                       if not a.startswith("--json")
+                                       and a != args.json),
+            time.strftime("%Y-%m-%d"), results)

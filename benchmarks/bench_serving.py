@@ -275,13 +275,26 @@ if __name__ == "__main__":
     ap.add_argument("--rate", type=float, default=150.0)
     ap.add_argument("--target-batch", type=int, default=8)
     ap.add_argument("--max-inflight", type=int, default=4)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_*.json perf-trajectory file "
+                         "(schema checked by lint_repro --bench-check)")
     args = ap.parse_args()
     if args.smoke and args.pipeline:
-        run_pipeline_smoke()
+        results = {"pipeline_smoke": run_pipeline_smoke()}
     elif args.smoke:
-        run_smoke()
-        run_lifecycle_smoke()
+        results = {"smoke": run_smoke(),
+                   "lifecycle": run_lifecycle_smoke()}
     else:
-        run(args.graphs, args.requests, args.rate,
-            target_batch=args.target_batch, pipeline=args.pipeline,
-            max_inflight=args.max_inflight)
+        results = run(args.graphs, args.requests, args.rate,
+                      target_batch=args.target_batch,
+                      pipeline=args.pipeline,
+                      max_inflight=args.max_inflight)
+    if args.json:
+        import sys
+        from repro.analysis.static.bench_check import write_bench_json
+        write_bench_json(
+            args.json, "bench_serving",
+            "bench_serving " + " ".join(a for a in sys.argv[1:]
+                                        if not a.startswith("--json")
+                                        and a != args.json),
+            time.strftime("%Y-%m-%d"), results)

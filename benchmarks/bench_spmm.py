@@ -19,6 +19,7 @@ interpret-mode kernels, one rep — fails loudly on kernel regressions.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
@@ -160,7 +161,18 @@ if __name__ == "__main__":
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny pallas-interpret run for CI kernel smoke")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a BENCH_*.json perf-trajectory file "
+                         "(schema checked by lint_repro --bench-check)")
     args = ap.parse_args()
     dispatches = DISPATCHES if args.dispatch == "all" else (args.dispatch,)
-    run(dispatches=dispatches, backend=args.backend, f=args.features,
-        reps=args.reps, smoke=args.smoke)
+    results = run(dispatches=dispatches, backend=args.backend,
+                  f=args.features, reps=args.reps, smoke=args.smoke)
+    if args.json:
+        from repro.analysis.static.bench_check import write_bench_json
+        write_bench_json(
+            args.json, "bench_spmm",
+            "bench_spmm " + " ".join(a for a in sys.argv[1:]
+                                     if not a.startswith("--json")
+                                     and a != args.json),
+            time.strftime("%Y-%m-%d"), results)

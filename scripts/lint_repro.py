@@ -1,0 +1,161 @@
+#!/usr/bin/env python
+"""repro-lint: static invariant checker for kernels, jaxprs, and
+serving-thread discipline.
+
+Three passes (see docs/STATIC_ANALYSIS.md for the full rule list):
+
+  jaxpr        traces the fixture GCN executor on the pallas backend and
+               checks launch discipline (exactly one ragged pallas_call
+               per SpMM, zero fixed-K launches), absence of host-sync
+               primitives in the traced region, dtype/shape flow from
+               prepare_x padding through to logits, and the dead-lane
+               proof that padded ELL slots cannot reach live output rows.
+  kernel       recomputes VMEM footprints and index-map bounds from the
+               kernel contracts in ``kernels/ell_spmm.py`` and
+               ``kernels/tile_matmul.py``, and re-derives the shape-class
+               fit oracle against the runtime's ``class_fits``.
+  concurrency  AST lock-discipline audit over ``src/repro/serving`` and
+               ``src/repro/engine``: worker-thread writes reachable from
+               the public API without the owning lock, plus lock-order
+               inversions against the declared hierarchy.
+
+Benign races carry inline waivers — ``# lint: racy-ok(<reason>)`` on the
+write or read line — which downgrade the finding to "waived" and are
+listed under ``-v``.
+
+Usage:
+  PYTHONPATH=src python scripts/lint_repro.py                # all passes
+  python scripts/lint_repro.py --passes kernel,concurrency
+  python scripts/lint_repro.py --changed-only                # CI fast path
+  python scripts/lint_repro.py --bench-check                 # + BENCH_*.json
+  python scripts/lint_repro.py -v                            # show waivers
+
+Exit status is 1 iff any unwaived error finding survives.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+ALL_PASSES = ("jaxpr", "kernel", "concurrency")
+
+# --changed-only: which touched paths make which passes relevant. The
+# jaxpr and kernel passes re-trace executors, so anything in the traced
+# call graph (kernels, core, engine) triggers them; the concurrency pass
+# scans engine + serving sources; the analysis package and this driver
+# re-run everything (the checker itself changed).
+CHANGED_MAP = (
+    ("src/repro/kernels/*", {"jaxpr", "kernel"}),
+    ("src/repro/core/*", {"jaxpr", "kernel"}),
+    ("src/repro/engine/*", {"jaxpr", "kernel", "concurrency"}),
+    ("src/repro/serving/*", {"concurrency"}),
+    ("src/repro/analysis/*", set(ALL_PASSES)),
+    ("scripts/lint_repro.py", set(ALL_PASSES)),
+    ("BENCH_*.json", {"bench"}),
+)
+
+
+def _git_changed(root: Path) -> list:
+    """Paths changed vs the merge base with the main branch, plus any
+    uncommitted / untracked work — i.e. "what this PR touches"."""
+    def lines(*args):
+        try:
+            proc = subprocess.run(["git", *args], cwd=root, text=True,
+                                  capture_output=True, timeout=30)
+        except (OSError, subprocess.TimeoutExpired):
+            return None
+        if proc.returncode != 0:
+            return None
+        return [ln.strip() for ln in proc.stdout.splitlines() if ln.strip()]
+
+    changed = set()
+    # uncommitted + untracked
+    status = lines("status", "--porcelain")
+    for ln in status or []:
+        changed.add(ln.split()[-1])
+    # committed on this branch, if a base ref is resolvable
+    for base in ("origin/main", "main"):
+        mb = lines("merge-base", "HEAD", base)
+        if mb:
+            diff = lines("diff", "--name-only", f"{mb[0]}..HEAD")
+            if diff is not None:
+                changed.update(diff)
+            break
+    return sorted(changed)
+
+
+def select_passes(changed: list) -> set:
+    selected: set = set()
+    for path in changed:
+        for pattern, passes in CHANGED_MAP:
+            if fnmatch.fnmatch(path, pattern):
+                selected |= passes
+    return selected
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="lint_repro",
+        description="static invariant checker (jaxpr / kernel / "
+                    "concurrency passes + BENCH_*.json schema)")
+    ap.add_argument("--passes", default=",".join(ALL_PASSES),
+                    help="comma-separated subset of "
+                         f"{{{','.join(ALL_PASSES)}}}")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="run only the passes whose inputs changed vs "
+                         "the main branch (git); exits 0 immediately "
+                         "when nothing relevant changed")
+    ap.add_argument("--bench-check", action="store_true",
+                    help="also validate BENCH_*.json trajectory files "
+                         "at the repo root")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print waived findings and warnings")
+    args = ap.parse_args(argv)
+
+    requested = [p.strip() for p in args.passes.split(",") if p.strip()]
+    unknown = [p for p in requested if p not in ALL_PASSES]
+    if unknown:
+        ap.error(f"unknown pass(es): {', '.join(unknown)}")
+
+    bench = args.bench_check
+    if args.changed_only:
+        changed = _git_changed(ROOT)
+        relevant = select_passes(changed)
+        requested = [p for p in requested if p in relevant]
+        bench = bench and ("bench" in relevant or bool(requested))
+        if not requested and not bench:
+            print("repro-lint: no relevant changes, skipping")
+            return 0
+        print(f"repro-lint: changed-only -> "
+              f"{', '.join(requested) or 'bench only'}")
+
+    # imports deferred so --changed-only can skip the jax import cost
+    from repro.analysis.static.report import Report
+    report = Report()
+    for pass_name in requested:
+        if pass_name == "jaxpr":
+            from repro.analysis.static.jaxpr_pass import run_jaxpr_pass
+            report.extend(run_jaxpr_pass())
+        elif pass_name == "kernel":
+            from repro.analysis.static.kernel_pass import run_kernel_pass
+            report.extend(run_kernel_pass())
+        elif pass_name == "concurrency":
+            from repro.analysis.static.concurrency_pass import (
+                run_concurrency_pass)
+            report.extend(run_concurrency_pass())
+    if bench:
+        from repro.analysis.static.bench_check import check_bench_files
+        report.extend(check_bench_files(ROOT))
+
+    print(report.render(verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,11 @@
 # collection error or test failure. Works offline (no hypothesis needed).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+# repro-lint first: static invariants (launch discipline, kernel VMEM
+# contracts, serving lock discipline) + BENCH_*.json schema — seconds,
+# no kernels run, so structural regressions fail before the test matrix.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/lint_repro.py --bench-check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # Kernel smoke: the ragged single-launch ELL path through the Pallas
 # interpret-mode kernels on a small graph — fails loudly on kernel

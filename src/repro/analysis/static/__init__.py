@@ -1,0 +1,19 @@
+"""repro-lint: ahead-of-time invariant checkers for the reproduction.
+
+Three passes, each importable on its own and all driven by
+``scripts/lint_repro.py``:
+
+- ``jaxpr_pass``       — traces the engine's dispatch paths and proves
+                         structural jaxpr invariants (single ragged
+                         launch, no host syncs, dtype/shape flow,
+                         sentinel dead-lane safety).
+- ``kernel_pass``      — audits the kernel launch contracts exported by
+                         ``repro.kernels`` (VMEM budget, index-map
+                         bounds, scalar-prefetch arity) and acts as the
+                         shape-class legality oracle.
+- ``concurrency_pass`` — AST lock-discipline lint over the serving and
+                         engine packages (field races, lock order).
+
+See docs/STATIC_ANALYSIS.md for the invariants and the waiver syntax.
+"""
+from repro.analysis.static.report import Finding, Report  # noqa: F401

@@ -102,18 +102,30 @@ class ExecutorCache:
             return fn
 
     def __len__(self) -> int:
-        return len(self._fns)
+        with self._lock:
+            return len(self._fns)
 
     @property
     def size(self) -> int:
         """Number of live compiled executors (public; callers must not
         reach into ``_fns``)."""
-        return len(self._fns)
+        with self._lock:
+            return len(self._fns)
+
+    def stats_snapshot(self) -> dict:
+        """Coherent copy of the global hit/miss/evict counters. Public
+        readers use this instead of ``.stats`` fields: staging workers
+        mutate the counters under ``_lock``, so an unguarded multi-field
+        read could pair a pre-update ``hits`` with a post-update
+        ``misses``."""
+        with self._lock:
+            return self.stats.as_dict()
 
     def class_stats(self) -> dict:
         """Per-shape-class telemetry: {summary str: hit/miss/evict dict}."""
-        return {sc.summary(): st.as_dict()
-                for sc, st in self._class_stats.items()}
+        with self._lock:
+            return {sc.summary(): st.as_dict()
+                    for sc, st in self._class_stats.items()}
 
     def traffic_by_class(self) -> dict:
         """Cumulative executor lookups (hits + misses) per ShapeClass.
@@ -122,7 +134,8 @@ class ExecutorCache:
         lookups in a window runs no kernels, so retiring it buys nothing
         and would only spend recompile budget.
         """
-        return {sc: st.total for sc, st in self._class_stats.items()}
+        with self._lock:
+            return {sc: st.total for sc, st in self._class_stats.items()}
 
     def invalidate_class(self, sc: ShapeClass) -> int:
         """Drop every cached executor keyed on ``sc`` (class retired).
@@ -194,10 +207,12 @@ class ExecutorCache:
             key, lambda: jax.jit(jax.vmap(self._gcn_build(sc))))
 
     def summary(self) -> str:
-        kinds: dict = {}
-        for key in self._fns:
-            kinds[key[0]] = kinds.get(key[0], 0) + 1
-        return (f"ExecutorCache backend={self.backend} "
-                f"executors={self.size}/{self.max_entries} ({kinds}) "
-                f"hits={self.stats.hits} misses={self.stats.misses} "
-                f"evictions={self.stats.evictions}")
+        with self._lock:
+            kinds: dict = {}
+            for key in self._fns:
+                kinds[key[0]] = kinds.get(key[0], 0) + 1
+            return (f"ExecutorCache backend={self.backend} "
+                    f"executors={len(self._fns)}/{self.max_entries} "
+                    f"({kinds}) "
+                    f"hits={self.stats.hits} misses={self.stats.misses} "
+                    f"evictions={self.stats.evictions}")

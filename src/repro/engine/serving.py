@@ -280,7 +280,10 @@ class Engine:
             xp = prepared[i] if prepared is not None else None
             members.append((i, h, x, xp))
         sc, f_in, w_shapes = key0
-        misses0 = self.executors.stats.misses
+        # Deliberate unguarded miss-counter read: a stale value only
+        # over-reports cold, which skips a warm sample and never poisons
+        # the latency EWMA — see _completion_meta.
+        misses0 = self.executors.stats.misses  # lint: racy-ok(cold-detect delta; over-reports only)
 
         def pad(h, x, xp):
             return xp if xp is not None else self._pad_x(h, x)
@@ -341,7 +344,7 @@ class Engine:
                 if blocker is not None:
                     blocker()
 
-        return {"cold": self.executors.stats.misses > misses0,
+        return {"cold": self.executors.stats.misses > misses0,  # lint: racy-ok(cold-detect delta; over-reports only)
                 "ready": ready, "complete": complete}
 
     # --------------------------------------------------------- latency -----
@@ -517,22 +520,28 @@ class Engine:
 
     def stats(self) -> dict:
         classes = {h.sclass for h in self._graphs.values()}
+        cache = self.executors.stats_snapshot()
+        # the stack-cache counters are mutated by staging workers under
+        # _stack_lock; snapshot them under the same lock so the rollup
+        # is coherent
+        with self._stack_lock:
+            stack = {"stacks": len(self._stacks),
+                     "stack_hits": self.stack_hits,
+                     "stack_misses": self.stack_misses,
+                     "stack_evictions": self.stack_evictions}
         out = {
             "graphs": len(self._graphs),
             "shape_classes": len(classes),
             "executors": self.executors.size,
             "executor_max_entries": self.executors.max_entries,
-            "cache_hits": self.executors.stats.hits,
-            "cache_misses": self.executors.stats.misses,
-            "cache_evictions": self.executors.stats.evictions,
+            "cache_hits": cache["hits"],
+            "cache_misses": cache["misses"],
+            "cache_evictions": cache["evictions"],
             "per_class": self.executors.class_stats(),
-            "stacks": len(self._stacks),
             "stack_max": self._max_stacks,
-            "stack_hits": self.stack_hits,
-            "stack_misses": self.stack_misses,
-            "stack_evictions": self.stack_evictions,
             "class_waste": self.class_waste(),
             "registry": self.registry.stats(),
+            **stack,
         }
         if self._frontend is not None:
             out["serving"] = self._frontend.stats.snapshot()

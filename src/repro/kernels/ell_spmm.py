@@ -35,6 +35,63 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BF = 128
 
 
+def _pad_f(f: int, bf: int) -> tuple:
+    """(bf_, fp): the clamped feature block and padded feature width."""
+    bf_ = min(bf, f)
+    return bf_, -(-f // bf_) * bf_
+
+
+def ell_contract(u: int, r: int, k: int, nct: int, t: int, f: int,
+                 *, bf: int = DEFAULT_BF) -> dict:
+    """The exact launch contract ``ell_spmm`` uses for these shapes.
+
+    Single source of truth for grid, BlockSpecs, and padded operand
+    shapes — the kernel wrapper below launches from this dict and the
+    static kernel-contract checker (``repro.analysis.static``) audits
+    it, so the two can never drift. All operands are 4-byte elements
+    (int32 indices, float32 values).
+    """
+    bf_, fp = _pad_f(f, bf)
+    return {
+        "name": "ell_spmm",
+        "grid": (u, fp // bf_),
+        "num_scalar_prefetch": 1,
+        "in_specs": [
+            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
+            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
+            pl.BlockSpec((1, t, bf_), lambda i, j, tc: (tc[i], 0, j)),
+        ],
+        "out_specs": [pl.BlockSpec((1, r, bf_), lambda i, j, tc: (i, 0, j))],
+        "scratch_shapes": [],
+        "in_shapes": [(u, r, k), (u, r, k), (nct, t, fp)],
+        "out_shapes": [(u, r, fp)],
+        "elem_bytes": 4,
+    }
+
+
+def ragged_ell_contract(u: int, r: int, kmax: int, nct: int, t: int, f: int,
+                        *, bf: int = DEFAULT_BF) -> dict:
+    """The exact launch contract ``ragged_ell_spmm`` uses (see
+    ``ell_contract``); scalar-prefetch operands are (tile_col, unit_k)."""
+    bf_, fp = _pad_f(f, bf)
+    return {
+        "name": "ragged_ell_spmm",
+        "grid": (u, fp // bf_),
+        "num_scalar_prefetch": 2,
+        "in_specs": [
+            pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
+            pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
+            pl.BlockSpec((1, t, bf_), lambda i, j, tc, ks: (tc[i], 0, j)),
+        ],
+        "out_specs": [pl.BlockSpec((1, r, bf_),
+                                   lambda i, j, tc, ks: (i, 0, j))],
+        "scratch_shapes": [],
+        "in_shapes": [(u, r, kmax), (u, r, kmax), (nct, t, fp)],
+        "out_shapes": [(u, r, fp)],
+        "elem_bytes": 4,
+    }
+
+
 def _ell_kernel(tile_col_ref, cols_ref, vals_ref, b_ref, o_ref, *, k: int):
     del tile_col_ref  # consumed by the index maps
     b = b_ref[0]                                     # [T, bf]
@@ -58,24 +115,20 @@ def ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray, tile_col: jnp.ndarray,
     """
     u, r, k = cols.shape
     nct, t, f = b_tiles.shape
-    bf_ = min(bf, f)
-    fp = -(-f // bf_) * bf_
+    bf_, fp = _pad_f(f, bf)
     b_p = jnp.pad(b_tiles, ((0, 0), (0, 0), (0, fp - f))) if fp != f else b_tiles
 
+    c = ell_contract(u, r, k, nct, t, f, bf=bf)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(u, fp // bf_),
-        in_specs=[
-            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
-            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
-            pl.BlockSpec((1, t, bf_), lambda i, j, tc: (tc[i], 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, r, bf_), lambda i, j, tc: (i, 0, j)),
+        num_scalar_prefetch=c["num_scalar_prefetch"],
+        grid=c["grid"],
+        in_specs=c["in_specs"],
+        out_specs=c["out_specs"][0],
     )
     out = pl.pallas_call(
         functools.partial(_ell_kernel, k=k),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((u, r, fp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(c["out_shapes"][0], jnp.float32),
         interpret=interpret,
     )(tile_col, cols, vals, b_p)
     return out[:, :, :f]
@@ -114,24 +167,20 @@ def ragged_ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray,
     nct, t, f = b_tiles.shape
     if u == 0 or kmax == 0:
         return jnp.zeros((u, r, f), jnp.float32)
-    bf_ = min(bf, f)
-    fp = -(-f // bf_) * bf_
+    bf_, fp = _pad_f(f, bf)
     b_p = jnp.pad(b_tiles, ((0, 0), (0, 0), (0, fp - f))) if fp != f else b_tiles
 
+    c = ragged_ell_contract(u, r, kmax, nct, t, f, bf=bf)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(u, fp // bf_),
-        in_specs=[
-            pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
-            pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
-            pl.BlockSpec((1, t, bf_), lambda i, j, tc, ks: (tc[i], 0, j)),
-        ],
-        out_specs=pl.BlockSpec((1, r, bf_), lambda i, j, tc, ks: (i, 0, j)),
+        num_scalar_prefetch=c["num_scalar_prefetch"],
+        grid=c["grid"],
+        in_specs=c["in_specs"],
+        out_specs=c["out_specs"][0],
     )
     out = pl.pallas_call(
         functools.partial(_ragged_ell_kernel, kmax=kmax),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((u, r, fp), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct(c["out_shapes"][0], jnp.float32),
         interpret=interpret,
     )(tile_col, unit_k, cols, vals, b_p)
     return out[:, :, :f]

@@ -257,7 +257,7 @@ class RequestQueue:
                 groups.setdefault(self.engine.group_key(r.name, r.x),
                                   []).append(r)
         except Exception as err:   # noqa: BLE001 — futures carry it
-            self.stats.dispatch_errors += 1
+            self.stats.dispatch_errors += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
             for r in plan.members:
                 if r.future is not None and not r.future.cancelled():
                     r.future.set_exception(err)
@@ -267,7 +267,7 @@ class RequestQueue:
 
     def _dispatch_group(self, key, members, reason) -> None:
         """One same-key engine dispatch; caller holds the dispatch gate."""
-        misses0 = self.engine.executors.stats.misses
+        misses0 = self.engine.executors.stats.misses  # lint: racy-ok(cold-detect delta; over-reports only)
         t0 = self.clock()
         try:
             outs = self.engine.serve_group(
@@ -279,7 +279,7 @@ class RequestQueue:
                 if ready is not None:
                     ready()
         except Exception as err:   # noqa: BLE001 — futures carry it
-            self.stats.dispatch_errors += 1
+            self.stats.dispatch_errors += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
             for r in members:
                 if r.future is not None and not r.future.cancelled():
                     r.future.set_exception(err)
@@ -287,7 +287,7 @@ class RequestQueue:
         dt = self.clock() - t0
         now = self.clock()
         padded = pow2_ceil(len(members))
-        cold = self.engine.executors.stats.misses > misses0
+        cold = self.engine.executors.stats.misses > misses0  # lint: racy-ok(cold-detect delta; over-reports only)
         self.latency.observe(key, padded, dt, cold=cold)
         self.stats.on_batch(len(members), padded, reason)
         for r, y in zip(members, outs):

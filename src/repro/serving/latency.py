@@ -106,7 +106,8 @@ class LatencyModel:
         pipelined observations stay comparable.
         """
         if cold:
-            self.cold_skipped += 1
+            with self._lock:
+                self.cold_skipped += 1
             return
         k = (key, int(batch))
         with self._lock:
@@ -147,7 +148,8 @@ class LatencyModel:
         if self.prior is not None:
             p = self.prior(key, batch)
             if p is not None:
-                self.prior_hits += 1
+                with self._lock:
+                    self.prior_hits += 1
                 return float(p)
         return self.default_s
 
@@ -178,7 +180,8 @@ class LatencyModel:
         return (key, int(batch)) in self._ewma
 
     def snapshot(self) -> dict:
-        return {"entries": len(self._ewma), "observed": self.observed,
-                "cold_skipped": self.cold_skipped,
-                "split_entries": len(self._device),
-                "prior_hits": self.prior_hits}
+        with self._lock:
+            return {"entries": len(self._ewma), "observed": self.observed,
+                    "cold_skipped": self.cold_skipped,
+                    "split_entries": len(self._device),
+                    "prior_hits": self.prior_hits}

