@@ -10,10 +10,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python scripts/lint_repro.py --bench-check
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 # Kernel smoke: the ragged single-launch ELL path through the Pallas
-# interpret-mode kernels on a small graph — fails loudly on kernel
-# regressions the pure-jnp test oracles could mask.
+# interpret-mode kernels on a small graph, WITH the contract-checked
+# autotuner sweep — fails loudly on kernel regressions the pure-jnp
+# test oracles could mask, and asserts the perf floor (>=1.3x over the
+# pre-band baseline), single-launch, waste reduction, and that tuned
+# outputs stay bitwise-equal to the defaults.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/bench_spmm.py --dispatch ragged --smoke
+    python benchmarks/bench_spmm.py --dispatch ragged --smoke --autotune
 # Scheduler smoke: deterministic serving-frontend simulation (synthetic
 # arrival trace, SimClock, stub engine — zero real compiles) exercising
 # every batch-closing rule, deadline accounting, admission control, and

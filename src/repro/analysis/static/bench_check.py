@@ -27,6 +27,15 @@ from repro.analysis.static.report import Finding
 
 SCHEMA_VERSION = 1
 
+# Per-bench required metric names (suffix-matched against the flat
+# dotted keys): a trajectory file for that bench missing one of these
+# regressed its reporting contract, not just its numbers. bench_spmm
+# must carry the kernel-health trio the regression gates read.
+REQUIRED_METRICS = {
+    "bench_spmm": ("launches_per_spmm", "ell_pad_waste_x",
+                   "achieved_roofline_frac"),
+}
+
 
 def flatten_metrics(obj, prefix: str = "") -> dict:
     """Collapse a nested results dict to flat dotted keys, numeric
@@ -93,6 +102,12 @@ def check_bench_file(path) -> List[Finding]:
             if isinstance(val, bool) or not isinstance(val, numbers.Real):
                 findings.append(
                     err(f"metric {key!r} must be a number, got {val!r}"))
+        for want in REQUIRED_METRICS.get(doc.get("bench"), ()):
+            if not any(isinstance(k, str) and k.split(".")[-1] == want
+                       for k in metrics):
+                findings.append(err(
+                    f"bench {doc.get('bench')!r} must report a "
+                    f"{want!r} metric (reporting contract regressed)"))
     return findings
 
 

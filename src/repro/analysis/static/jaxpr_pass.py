@@ -168,6 +168,34 @@ class DeadLaneInterp:
                 self.stores.append((vals[1], eqn))
             return None
         sub = [s for s in _sub_jaxprs(eqn)]
+        if sub and prim == "cond":
+            # lax.switch / lax.cond — the ragged kernel's K-band selector.
+            # invars[0] is the branch index, the rest feed every branch.
+            # An output is provably zero iff EVERY branch's output at
+            # that position is zero under the dead-unit state (each band
+            # chain is the same masked FMA at a different trip count).
+            per_branch = []
+            for inner in sub:
+                for op, iv in zip(eqn.invars[1:], inner.invars):
+                    if (not isinstance(op, jex_core.Literal)
+                            and op in self.scalar_refs):
+                        self.scalar_refs.add(iv)
+                sub_env = dict(zip(inner.invars, vals[1:]))
+                self._eval(inner, sub_env)
+                per_branch.append(
+                    [self._read(sub_env, v) for v in inner.outvars])
+            which = vals[0]
+            if (isinstance(which, tuple) and which[0] == "int"
+                    and 0 <= which[1] < len(per_branch)):
+                outs = per_branch[which[1]]
+            else:
+                outs = [ZERO if all(_is_zero(v) for v in pos)
+                        else (pos[0] if len(set(map(repr, pos))) == 1
+                              else None)
+                        for pos in zip(*per_branch)]
+            if len(outs) == 1:
+                return outs[0]
+            return outs[0] if len(set(map(repr, outs))) == 1 else None
         if sub and prim in ("pjit", "closed_call", "custom_jvp_call",
                             "custom_vjp_call", "remat", "checkpoint"):
             inner = sub[0]

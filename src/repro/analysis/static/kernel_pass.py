@@ -42,9 +42,11 @@ from repro.kernels.tile_matmul import matmul_contract
 
 # Per-core VMEM by backend. TPU cores carry ~16 MiB of VMEM (see the
 # Pallas guide); the budget is what a *launch contract* may assume —
-# Mosaic needs the whole double-buffered working set resident.
+# Mosaic needs the whole multi-buffered working set resident.
 VMEM_BUDGET_BYTES = {"tpu": 16 * 2 ** 20}
-# Each in/out block is double-buffered by the pipeline; scratch is not.
+# Default in/out block buffering when a contract carries no
+# ``buffer_depth`` (the pipeline double-buffers); scratch is not
+# multiplied.
 PIPELINE_BUFFERS = 2
 
 
@@ -53,11 +55,17 @@ def _nbytes(shape: Sequence[int], elem_bytes: int) -> int:
 
 
 def estimate_vmem_bytes(contract: dict) -> int:
-    """Static VMEM working-set estimate for one launch contract."""
+    """Static VMEM working-set estimate for one launch contract.
+
+    Honors the contract's tuned ``buffer_depth`` (HBM→VMEM pipeline
+    depth — quad-buffering doubles the block working set relative to
+    the default double-buffering).
+    """
     elem = contract["elem_bytes"]
+    depth = int(contract.get("buffer_depth", PIPELINE_BUFFERS))
     total = 0
     for spec in contract["in_specs"] + contract["out_specs"]:
-        total += _nbytes(spec.block_shape, elem) * PIPELINE_BUFFERS
+        total += _nbytes(spec.block_shape, elem) * depth
     for ref in contract["scratch_shapes"]:
         total += _nbytes(ref.shape, np.dtype(ref.dtype).itemsize)
     return total
@@ -159,16 +167,36 @@ def check_class_fit(need: ClassNeed, sc: ShapeClass,
                 f"class slab Kmax={sc.ell_kmax} > {slack}x the member's "
                 f"widest unit K={need.ell_kmax}: every unit's masked "
                 f"tail becomes dead trips")
-        # padded-MAC amortization: the kernel executes every capacity
-        # unit at full Kmax width, so unit capacity beyond
-        # slack*need + granule is work the member can never amortize
-        max_units = slack * need.ell_units + policy.unit_granule
-        if sc.ell_units > max_units:
+        # padded-MAC amortization: the banded kernel executes each
+        # capacity slot at its band's K width, so banded MACs beyond
+        # slack*Kmax*need_units + granule*Kmax is work the member can
+        # never amortize
+        class_macs = sum(k * n for k, n in sc.bands)
+        budget = (slack * sc.ell_kmax * need.ell_units
+                  + policy.unit_granule * sc.ell_kmax)
+        if class_macs > budget:
             err("mac-amortization",
-                f"class runs {sc.ell_units} units for a member needing "
-                f"{need.ell_units}: padded-MAC budget allows at most "
-                f"{max_units:.0f} (slack={slack}, "
+                f"class runs {class_macs} banded MAC slots/row for a "
+                f"member needing {need.ell_units} units: padded-MAC "
+                f"budget allows at most {budget:.0f} (slack={slack}, "
                 f"granule={policy.unit_granule})")
+        # band slot dominance: unit i of the member must fit the K of
+        # class slot i (pad_to_class keeps unit order)
+        profile = (need.ell_band_profile
+                   or ((need.ell_kmax, need.ell_units),))
+        slots = np.repeat([k for k, _ in sc.bands],
+                          [n for _, n in sc.bands]).astype(np.int64)
+        needs = np.repeat([k for k, _ in profile],
+                          [n for _, n in profile]).astype(np.int64)
+        if needs.size > slots.size:
+            err("band-slot",
+                f"member has {needs.size} units but the class bands "
+                f"expose {slots.size} slots")
+        elif needs.size and not (needs <= slots[: needs.size]).all():
+            bad = int(np.flatnonzero(needs > slots[: needs.size])[0])
+            err("band-slot",
+                f"member unit {bad} (K={int(needs[bad])}) exceeds class "
+                f"band slot K={int(slots[bad])}")
     oracle_ok = not findings
     runtime_ok = class_fits(need, sc, policy)
     # The oracle only covers the ELL waste bounds; runtime class_fits
@@ -184,17 +212,23 @@ def check_class_fit(need: ClassNeed, sc: ShapeClass,
 # ------------------------------------------------------ repo-level run -----
 
 def contracts_for_class(sc: ShapeClass, f_widths: Sequence[int],
-                        bf: int = DEFAULT_BF) -> List[tuple]:
+                        bf: int = DEFAULT_BF, **tune) -> List[tuple]:
     """(contract, scalar_args) pairs the engine would launch for ``sc``
     at each feature width, with worst-case scalar stand-ins: every unit
-    addressing the LAST B tile at the FULL slab width."""
+    addressing the LAST B tile at its band slot's FULL K width.
+    Extra ``tune`` kwargs (``buffer_depth``, ``gu``, ``max_bands``)
+    build the contract a tuned launch would use — the autotuner audits
+    candidates through exactly this path."""
     out = []
     for f in f_widths:
         if sc.ell_units and sc.ell_kmax:
             c = ragged_ell_contract(sc.ell_units, sc.r_block, sc.ell_kmax,
-                                    sc.n_col_tiles, sc.tile, f, bf=bf)
+                                    sc.n_col_tiles, sc.tile, f, bf=bf,
+                                    segments=sc.bands, **tune)
             tile_col = np.full((sc.ell_units,), sc.n_col_tiles - 1, np.int32)
-            unit_k = np.full((sc.ell_units,), sc.ell_kmax, np.int32)
+            unit_k = np.repeat(
+                [k for k, _ in sc.bands],
+                [n for _, n in sc.bands]).astype(np.int32)
             out.append((c, (tile_col, unit_k)))
     return out
 

@@ -73,8 +73,9 @@ class RaggedEll(NamedTuple):
 
     The per-unit real width lives in ``unit_k``; entries at or past a
     unit's K are zero (``vals == 0``, ``cols == 0`` — value-neutral under
-    the gather+FMA). Units are ordered by ascending K so the legacy
-    fixed-K buckets are recoverable as static slices
+    the gather+FMA). Units are ordered by DESCENDING K — the ragged
+    kernel's K-band grid shortens trip counts toward the sparse tail —
+    and the legacy fixed-K buckets are recoverable as static slices
     (``PartitionMeta.ell_segments`` records the (K, n_units) runs).
     Padded *rows* carry the sentinel row id ``n_row_tiles * T`` exactly
     like the bucket form. One SpMM issues ONE kernel launch over this
@@ -170,9 +171,10 @@ class PartitionMeta:
     nnz_coo: int
     density_thresholds: tuple  # (d_dense, d_scatter)
     # Static run-length description of the ragged unit axis:
-    # ((K, n_units), ...) in ascending-K unit order. Lets the legacy
-    # "fused"/"loop" dispatches recover fixed-K buckets as static
-    # slices; class metas collapse it to a single (Kmax, U) run.
+    # ((K, n_units), ...) in DESCENDING-K unit order. Feeds the ragged
+    # kernel's K-band grid, and lets the legacy "fused"/"loop"
+    # dispatches recover fixed-K buckets as static slices; class metas
+    # carry the class's merged band plan (<= DEFAULT_MAX_BANDS runs).
     ell_segments: tuple = ()
 
     @property

@@ -116,13 +116,19 @@ def coo_matmul(part: TriPartition, b: jnp.ndarray,
 
 
 def hybrid_spmm(part: TriPartition, b: jnp.ndarray, *, meta: PartitionMeta,
-                backend: str = "xla",
-                ell_dispatch: str = "ragged") -> jnp.ndarray:
-    """Y = A @ B via the three engines. Returns [n_rows, F]."""
+                backend: str = "xla", ell_dispatch: str = "ragged",
+                ell_tune: dict = None) -> jnp.ndarray:
+    """Y = A @ B via the three engines. Returns [n_rows, F].
+
+    ``ell_tune`` optionally carries an autotuned ragged-kernel
+    configuration (pallas backend only — the XLA mirror has no launch
+    tunables); tuned outputs are bitwise-equal to defaults.
+    """
     if backend == "pallas":
         from repro.kernels import ops as kops
         yd = kops.dense_tiles_matmul(part, b, meta)
-        ye = kops.ell_matmul(part, b, meta, dispatch=ell_dispatch)
+        ye = kops.ell_matmul(part, b, meta, dispatch=ell_dispatch,
+                             ell_tune=ell_tune)
     elif backend == "xla":
         yd = dense_tiles_matmul(part, b, meta)
         ye = ell_matmul(part, b, meta, dispatch=ell_dispatch)
@@ -145,7 +151,8 @@ def hybrid_spmm_ref(a_dense: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
               meta: PartitionMeta, backend: str = "xla",
               block_cols: int = 0, activation=None,
-              ell_dispatch: str = "ragged") -> jnp.ndarray:
+              ell_dispatch: str = "ragged",
+              ell_tune: dict = None) -> jnp.ndarray:
     """One GCN layer  sigma(A @ (X @ W))  in combination-first order.
 
     ``block_cols > 0`` enables the paper's fine-grained pipelining: W's
@@ -166,18 +173,19 @@ def gcn_layer(part: TriPartition, x: jnp.ndarray, w: jnp.ndarray, *,
                                       axis=1)
             bi = x @ wi                                   # combination (dense)
             outs.append(hybrid_spmm(part, bi, meta=meta, backend=backend,
-                                    ell_dispatch=ell_dispatch))
+                                    ell_dispatch=ell_dispatch,
+                                    ell_tune=ell_tune))
         y = jnp.concatenate(outs, axis=1)[:, :h]
     else:
         y = hybrid_spmm(part, x @ w, meta=meta, backend=backend,
-                        ell_dispatch=ell_dispatch)
+                        ell_dispatch=ell_dispatch, ell_tune=ell_tune)
     return activation(y) if activation is not None else y
 
 
 def gcn_forward(part: TriPartition, x: jnp.ndarray, weights, *,
                 meta: PartitionMeta, backend: str = "xla",
-                block_cols: int = 0,
-                ell_dispatch: str = "ragged") -> jnp.ndarray:
+                block_cols: int = 0, ell_dispatch: str = "ragged",
+                ell_tune: dict = None) -> jnp.ndarray:
     """The paper's 2-layer vanilla GCN:  softmax-free inference logits
     X2 = A·relu(A·X·W1)·W2   (activation on hidden layer only)."""
     h = x
@@ -185,5 +193,5 @@ def gcn_forward(part: TriPartition, x: jnp.ndarray, weights, *,
         act = jax.nn.relu if i < len(weights) - 1 else None
         h = gcn_layer(part, h, w, meta=meta, backend=backend,
                       block_cols=block_cols, activation=act,
-                      ell_dispatch=ell_dispatch)
+                      ell_dispatch=ell_dispatch, ell_tune=ell_tune)
     return h

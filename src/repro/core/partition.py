@@ -21,8 +21,10 @@ codegen):
      Kmax with the per-unit K carried alongside (``RaggedEll``) — the
      TPU analogue of "generate sparse tensor PE code for this group"
      where K is a per-tile runtime parameter, not a per-kernel one.
-     Units are ordered by ascending K so the legacy fixed-K buckets
-     stay derivable as static slices (``meta.ell_segments``).
+     Units are ordered by DESCENDING K so the ragged kernel's K-band
+     grid can shorten trip counts for the sparse tail; the (K, n_units)
+     runs stay derivable as static slices (``meta.ell_segments``) for
+     the legacy fixed-K buckets.
 
 The construction is exact: dense + ELL + COO reconstructs A bit-for-bit
 (`formats.partition_to_dense` is the oracle used in tests).
@@ -247,10 +249,16 @@ def analyze_and_partition(a: CSRMatrix, cfg: PartitionConfig = PartitionConfig()
                         tile_row=np.zeros(0, np.int32),
                         tile_col=np.zeros(0, np.int32))
 
-    # One concatenated ragged array, ascending-K unit order; each unit's
-    # cols/vals occupy [:K] of the Kmax-wide slab (the rest stays zero).
+    # One concatenated ragged array, DESCENDING-K unit order (the ragged
+    # kernel's K-band grid runs wide chains first and shortens toward
+    # the sparse tail); each unit's cols/vals occupy [:K] of the
+    # Kmax-wide slab (the rest stays zero). Units within a K run keep
+    # emission order, and all units holding a given output row share
+    # that row's group K, so the scatter-add order per output row — and
+    # therefore the result bits — are identical to any other unit order.
     ks = sorted(units.keys())
     kmax = ks[-1] if ks else 0
+    emit_ks = sorted(units.keys(), reverse=True)
     n_units_total = sum(len(units[K]) for K in ks)
     r_cols = np.zeros((n_units_total, cfg.r_block, kmax), np.int32)
     r_vals = np.zeros((n_units_total, cfg.r_block, kmax), np.float32)
@@ -259,7 +267,7 @@ def analyze_and_partition(a: CSRMatrix, cfg: PartitionConfig = PartitionConfig()
     r_k = np.zeros(n_units_total, np.int32)
     segments = []
     at = 0
-    for K in ks:
+    for K in emit_ks:
         segments.append((int(K), len(units[K])))
         for urows, tcol, ucols, uvals in units[K]:
             r_cols[at, :, :K] = ucols

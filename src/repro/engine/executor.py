@@ -66,6 +66,10 @@ class ExecutorCache:
         self._fns: collections.OrderedDict = collections.OrderedDict()
         self.stats = CacheStats()
         self._class_stats: dict = {}   # ShapeClass -> CacheStats
+        # Autotuned ragged-kernel configs, ShapeClass -> sorted item
+        # tuple. Part of every executor key, so applying a new winner
+        # can never alias a stale compiled executor.
+        self._tuned: dict = {}
         # Guards _fns/_class_stats bookkeeping: the pipelined dispatch
         # path looks executors up from staging workers concurrently with
         # user-thread infer()/spmm() calls. build() (trace + compile)
@@ -155,38 +159,75 @@ class ExecutorCache:
                 self._per_class(sc).invalidations += len(dead)
             return len(dead)
 
+    # -------------------------------------------------------- autotune -----
+    def set_tuned(self, sc: ShapeClass, cfg: dict) -> int:
+        """Apply an autotuned ragged-kernel config to every executor of
+        class ``sc`` (`repro.kernels.autotune` winners land here).
+
+        The config rides in every executor key, so stale compiled
+        executors for the class are invalidated and the next lookup
+        rebuilds with ``ell_tune`` threaded down the dispatch path.
+        Tuned and default outputs are bitwise-equal by kernel
+        construction. Returns the number of executors invalidated; a
+        no-op (same config already applied, or empty config on an
+        untuned class) invalidates nothing.
+        """
+        with self._lock:
+            t = tuple(sorted(cfg.items()))
+            if self._tuned.get(sc, ()) == t:
+                return 0
+            if t:
+                self._tuned[sc] = t
+            else:
+                self._tuned.pop(sc, None)
+            return self.invalidate_class(sc)
+
+    def tuned_for(self, sc: ShapeClass) -> dict:
+        """The applied tuned config for ``sc`` ({} = defaults)."""
+        with self._lock:
+            return dict(self._tuned.get(sc, ()))
+
+    def _tune_of(self, sc):
+        return self._tuned.get(sc, ())
+
     # ------------------------------------------------------------ spmm -----
     def spmm(self, sc: ShapeClass, f: int):
         """Executor for Y = A @ B over a padded partition of class sc.
 
         Signature: fn(part, b[n_cols_padded, f]) -> y[n_rows_padded, f].
         """
-        key = ("spmm", sc, f, self.backend, self.ell_dispatch)
+        with self._lock:
+            tune = self._tune_of(sc)
+            key = ("spmm", sc, f, self.backend, self.ell_dispatch, tune)
 
-        def build():
-            meta = sc.to_meta()
-            backend, dispatch = self.backend, self.ell_dispatch
+            def build():
+                meta = sc.to_meta()
+                backend, dispatch = self.backend, self.ell_dispatch
+                ell_tune = dict(tune) or None
 
-            @jax.jit
-            def fn(part, b):
-                return hybrid_spmm(part, b, meta=meta, backend=backend,
-                                   ell_dispatch=dispatch)
-            return fn
-        return self._get(key, build)
+                @jax.jit
+                def fn(part, b):
+                    return hybrid_spmm(part, b, meta=meta, backend=backend,
+                                       ell_dispatch=dispatch,
+                                       ell_tune=ell_tune)
+                return fn
+            return self._get(key, build)
 
     # ------------------------------------------------------------- gcn -----
     def _gcn_key(self, sc, f_in, w_shapes):
         return ("gcn", sc, f_in, w_shapes, self.backend, self.block_cols,
-                self.ell_dispatch)
+                self.ell_dispatch, self._tune_of(sc))
 
     def _gcn_build(self, sc):
         meta = sc.to_meta()
         backend = self.backend
         block_cols, dispatch = self.block_cols, self.ell_dispatch
+        ell_tune = dict(self._tune_of(sc)) or None
 
         def fwd(part, x, weights):
             return gcn_forward(part, x, weights, meta=meta, backend=backend,
-                               block_cols=block_cols, ell_dispatch=dispatch)
+                               block_cols=block_cols, ell_dispatch=dispatch,
+                               ell_tune=ell_tune)
         return fwd
 
     def gcn(self, sc: ShapeClass, f_in: int, w_shapes: tuple):
@@ -195,16 +236,18 @@ class ExecutorCache:
         Signature: fn(part, x[n_cols_padded, f_in], weights) ->
         logits[n_rows_padded, w_shapes[-1][-1]].
         """
-        key = self._gcn_key(sc, f_in, w_shapes)
-        return self._get(key, lambda: jax.jit(self._gcn_build(sc)))
+        with self._lock:
+            key = self._gcn_key(sc, f_in, w_shapes)
+            return self._get(key, lambda: jax.jit(self._gcn_build(sc)))
 
     def gcn_batched(self, sc: ShapeClass, f_in: int, w_shapes: tuple,
                     batch: int):
         """vmapped GCN executor over a stacked class group of ``batch``
         graphs: every pytree arg gains a leading batch axis."""
-        key = self._gcn_key(sc, f_in, w_shapes) + ("batch", batch)
-        return self._get(
-            key, lambda: jax.jit(jax.vmap(self._gcn_build(sc))))
+        with self._lock:
+            key = self._gcn_key(sc, f_in, w_shapes) + ("batch", batch)
+            return self._get(
+                key, lambda: jax.jit(jax.vmap(self._gcn_build(sc))))
 
     def summary(self) -> str:
         with self._lock:

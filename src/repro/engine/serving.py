@@ -77,7 +77,7 @@ class Engine:
                  partition_cfg: PartitionConfig = PartitionConfig(tile=64),
                  backend: str = "xla", block_cols: int = 0,
                  ell_dispatch: str = "ragged", executor_max_entries: int = 128,
-                 max_stacks: int = 32):
+                 max_stacks: int = 32, autotune_cache: Optional[str] = None):
         self.policy = policy
         self.partition_cfg = partition_cfg
         self.registry = ClassRegistry(policy)
@@ -106,6 +106,10 @@ class Engine:
         self.stack_evictions = 0
         self._frontend = None   # attached repro.serving.RequestQueue
         self._lifecycle = None  # attached LifecycleManager
+        # Ragged-kernel autotuner (lazy — first autotune() call builds
+        # it). ``autotune_cache`` names the on-disk winner cache.
+        self._autotune_cache = autotune_cache
+        self._tuner = None
 
     # --------------------------------------------------------- offline -----
     def register(self, name: str, csr: CSRMatrix, *,
@@ -180,6 +184,29 @@ class Engine:
         h = self._graphs[name]
         fn = self.executors.spmm(h.sclass, int(b.shape[1]))
         return self._unpad_y(h, fn(h.part, self._pad_x(h, b)))
+
+    # -------------------------------------------------------- autotune -----
+    def autotune(self, name: str, f: int, *, timer=None) -> dict:
+        """Tune the ragged ELL kernel for ``name``'s shape class at
+        feature width ``f`` and apply the winner to the class.
+
+        Runs the offline sweep in `repro.kernels.autotune` (contract-
+        checked candidates only — the oracle rejects illegal ones before
+        timing; a cached winner skips the sweep) and installs the config
+        via ``ExecutorCache.set_tuned``, invalidating the class's stale
+        executors so the next dispatch launches tuned. Tuned outputs are
+        bitwise-equal to defaults. Returns the applied config ({} =
+        defaults were already optimal or the class has no ELL units).
+        ``timer`` injects a deterministic measurement for tests.
+        """
+        from repro.kernels.autotune import Autotuner
+        h = self._graphs[name]
+        if self._tuner is None or timer is not None:
+            self._tuner = Autotuner(cache_path=self._autotune_cache,
+                                    timer=timer)
+        cfg = self._tuner.tune(h.sclass, int(f))
+        self.executors.set_tuned(h.sclass, cfg)
+        return cfg
 
     def infer(self, name: str, x) -> jnp.ndarray:
         """GCN forward logits for one request."""
@@ -543,6 +570,8 @@ class Engine:
             "registry": self.registry.stats(),
             **stack,
         }
+        if self._tuner is not None:
+            out["autotune"] = self._tuner.stats()
         if self._frontend is not None:
             out["serving"] = self._frontend.stats.snapshot()
         if self._lifecycle is not None:

@@ -8,9 +8,13 @@ canonical static shapes — a **shape class** — so structurally-similar
 graphs share one compiled executor:
 
   * dense tile count          -> geometric (power-of-two) bucket
-  * ELL ragged array          -> (Kmax, total units): Kmax snapped up the
-                                 K ladder, unit count geometric-bucketed,
-                                 reuse bounded by a padded-MAC budget
+  * ELL ragged array          -> (Kmax, total units) + a descending-K
+                                 band plan (``ell_bands``): Kmax snapped
+                                 up the K ladder, unit count
+                                 geometric-bucketed, band slot counts
+                                 grown on the profile's cumulative
+                                 counts, reuse bounded by a padded-MAC
+                                 budget + per-slot width dominance
   * COO nnz                   -> geometric bucket
   * row/col tile counts       -> geometric bucket (bounds B padding)
 
@@ -39,6 +43,7 @@ import numpy as np
 
 from repro.core.formats import (CooResidual, DenseTiles, PartitionMeta,
                                 RaggedEll, TriPartition)
+from repro.kernels.ell_spmm import DEFAULT_MAX_BANDS, merge_bands
 
 # Canonical slab widths for the ragged ELL array. Power-of-two rungs
 # bound Kmax-padding waste at 2x on the widest unit; unlike the retired
@@ -102,8 +107,11 @@ class ShapeClass:
 
     Two graphs with equal ShapeClass (and equal feature widths) run
     through the *same* jit'd executor with zero retracing. The ELL slice
-    is fully described by ``(ell_kmax, ell_units)`` — the ragged kernel
-    takes per-unit K as data, so no K set is part of the shape.
+    is described by ``(ell_kmax, ell_units)`` plus an optional K-band
+    plan ``ell_bands`` — descending (K, n_units) slot runs the ragged
+    kernel's band grid executes (``()`` means one Kmax-wide band, the
+    pre-band behavior). The ragged kernel still takes per-unit K as
+    data; bands only bound the trip count per slot.
     """
 
     tile: int
@@ -114,6 +122,16 @@ class ShapeClass:
     ell_units: int            # ragged unit capacity
     coo_nnz: int
     r_block: int = 8          # unit row height — every member must match
+    # Descending (K, n_units) band slots; sum of counts == ell_units.
+    # () collapses to one (ell_kmax, ell_units) band via ``bands``.
+    ell_bands: tuple = ()
+
+    @property
+    def bands(self) -> tuple:
+        """The effective band plan (explicit, or one Kmax-wide band)."""
+        if self.ell_bands:
+            return self.ell_bands
+        return ((self.ell_kmax, self.ell_units),) if self.ell_units else ()
 
     def to_meta(self) -> PartitionMeta:
         """The static PartitionMeta every member's executor traces with.
@@ -121,9 +139,9 @@ class ShapeClass:
         nnz statistics are per-graph facts, not shape facts, so they are
         zeroed here — the executor never reads them, and keeping them
         would split classes that should share a trace. The segment map
-        collapses to one (Kmax, U) run: a padded member's units are all
-        Kmax-wide slabs as far as static shapes go (``unit_k`` carries
-        the live widths).
+        is the class's band plan: a padded member's units occupy
+        exactly these descending-K slot runs (``unit_k`` carries the
+        live widths; a unit's K never exceeds its slot's K).
         """
         return PartitionMeta(
             n_rows=self.n_row_tiles * self.tile,
@@ -135,19 +153,21 @@ class ShapeClass:
             n_dense_tiles=self.n_dense_tiles,
             nnz_dense=0, nnz_ell=0, nnz_ell_padded=0, nnz_coo=0,
             density_thresholds=(0.0, 0.0),
-            ell_segments=((self.ell_kmax, self.ell_units),)
-            if self.ell_units else (),
+            ell_segments=self.bands,
         )
 
     @property
     def ell_mac_capacity(self) -> int:
-        """Padded MAC slots on the ELL slice (per output feature)."""
-        return self.ell_kmax * self.ell_units * self.r_block
+        """Padded MAC slots the banded ragged kernel actually executes
+        (per output feature): each slot runs its band's K trips, not the
+        full Kmax."""
+        return sum(k * n for k, n in self.bands) * self.r_block
 
     def summary(self) -> str:
+        bands = (f" bands={list(self.ell_bands)}" if self.ell_bands else "")
         return (f"ShapeClass T={self.tile} tiles={self.n_row_tiles}x"
                 f"{self.n_col_tiles} dense={self.n_dense_tiles} "
-                f"ell=(Kmax={self.ell_kmax}, units={self.ell_units}) "
+                f"ell=(Kmax={self.ell_kmax}, units={self.ell_units}){bands} "
                 f"coo={self.coo_nnz}")
 
 
@@ -192,11 +212,49 @@ class ClassNeed:
     ell_units: int            # real unit count
     coo_nnz: int
     r_block: int = 8
+    # Run-length (K, n_units) description of the partition's unit axis
+    # in its actual (descending-K) order — the founder's band profile
+    # and the per-slot fit evidence for joining a banded class.
+    ell_band_profile: tuple = ()
 
 
 def _round_mult(x: int, granule: int) -> int:
     g = max(int(granule), 1)
     return -(-int(x) // g) * g
+
+
+def _run_lengths(unit_k: np.ndarray) -> tuple:
+    """(K, count) runs of the unit axis in array order."""
+    if unit_k.size == 0:
+        return ()
+    ks = unit_k.astype(np.int64)
+    cuts = np.flatnonzero(np.diff(ks)) + 1
+    starts = np.concatenate([[0], cuts])
+    ends = np.concatenate([cuts, [ks.size]])
+    return tuple((int(ks[s]), int(e - s)) for s, e in zip(starts, ends))
+
+
+def _band_slots(bands) -> np.ndarray:
+    """Expand (K, count) bands into a per-slot K vector."""
+    if not bands:
+        return np.zeros(0, np.int64)
+    return np.repeat([k for k, _ in bands],
+                     [n for _, n in bands]).astype(np.int64)
+
+
+def _bands_admit(bands, profile) -> bool:
+    """Per-slot dominance: unit i (width profile[i]) fits slot i.
+
+    ``pad_to_class`` keeps unit order and appends padding at the end,
+    so a partition is band-legal iff every unit's K is <= the K of the
+    class slot at its position (trailing unused slots take the
+    all-padding units, whose K is 0).
+    """
+    slots = _band_slots(bands)
+    needs = _band_slots(profile)
+    if needs.size > slots.size:
+        return False
+    return bool((needs <= slots[: needs.size]).all())
 
 
 def class_requirements(part: TriPartition, meta: PartitionMeta,
@@ -212,6 +270,7 @@ def class_requirements(part: TriPartition, meta: PartitionMeta,
         ell_units=int(unit_k.size),
         coo_nnz=int(part.coo.vals.shape[0]),
         r_block=_part_r_block(part),
+        ell_band_profile=_run_lengths(unit_k),
     )
 
 
@@ -250,12 +309,59 @@ def class_fits(need: ClassNeed, sc: ShapeClass,
     if need.ell_units:
         if sc.ell_kmax > slack * need.ell_kmax:
             return False
-        class_macs = sc.ell_kmax * sc.ell_units
+        class_macs = sum(k * n for k, n in sc.bands)
         budget = (slack * sc.ell_kmax * need.ell_units
                   + policy.unit_granule * sc.ell_kmax)
-        return class_macs <= budget
+        if class_macs > budget:
+            return False
+        # banded classes additionally need per-slot width dominance:
+        # unit i must fit the K of the class slot at position i
+        profile = (need.ell_band_profile
+                   or ((need.ell_kmax, need.ell_units),))
+        return _bands_admit(sc.bands, profile)
     # a graph with no ELL work only joins classes with negligible slabs
     return sc.ell_units <= policy.unit_granule
+
+
+def _grow_bands(need: ClassNeed, kmax: int, units: int,
+                policy: ShapePolicy) -> tuple:
+    """The founded class's K-band slot plan around ``need``'s profile.
+
+    Band Ks are the profile's run Ks snapped up the ladder (top band
+    widened to the class Kmax — the slab width); band counts grow on
+    the profile's CUMULATIVE counts, so a later family member may shift
+    units toward wider bands (density jitter) and still slot-fit.
+    Non-descending profiles (legacy order) collapse to one band.
+    Returns () when one band suffices — the implicit (kmax, units).
+    """
+    profile = [(int(k), int(n)) for k, n in
+               (need.ell_band_profile or ((need.ell_kmax, need.ell_units),))
+               if n > 0]
+    ks = [k for k, _ in profile]
+    if any(ks[i] < ks[i + 1] for i in range(len(ks) - 1)):
+        return ()
+    snapped = [(min(round_up_ladder(k, policy.k_ladder), kmax), n)
+               for k, n in profile]
+    runs = merge_bands(snapped, DEFAULT_MAX_BANDS)
+    if len(runs) <= 1:
+        return ()
+    g = max(policy.growth, 1.0)
+    bands: list = []
+    cum_need = 0
+    cum_class = 0
+    for j, (k, n) in enumerate(runs):
+        cum_need += n
+        if j == len(runs) - 1:
+            target = units                 # last band absorbs the rest
+        else:
+            target = min(units, max(
+                _round_mult(int(cum_need * g), policy.unit_granule),
+                cum_need))
+        target = max(target, cum_class)
+        bands.append((kmax if j == 0 else k, target - cum_class))
+        cum_class = target
+    bands = merge_bands(bands, DEFAULT_MAX_BANDS)
+    return bands if len(bands) > 1 else ()
 
 
 def grow_class(need: ClassNeed,
@@ -266,23 +372,27 @@ def grow_class(need: ClassNeed,
     nct = round_up_pow2(need.n_col_tiles, policy.row_tile_granule)
     if need.square:
         nrt = nct = max(nrt, nct)
+    # Kmax gets growth headroom too (capped at the tile edge — a
+    # tile-local row can never exceed T nnz) so family members whose
+    # widest unit jitters past the founder's still share the class.
+    ell_kmax = (round_up_ladder(min(int(need.ell_kmax * g), need.tile),
+                                policy.k_ladder)
+                if need.ell_units else 0)
+    ell_units = (_round_mult(int(need.ell_units * g), policy.unit_granule)
+                 if need.ell_units else 0)
     return ShapeClass(
         tile=need.tile,
         n_row_tiles=nrt,
         n_col_tiles=nct,
         n_dense_tiles=_round_mult(int(need.n_dense_tiles * g),
                                   policy.dense_tile_granule),
-        # Kmax gets growth headroom too (capped at the tile edge — a
-        # tile-local row can never exceed T nnz) so family members whose
-        # widest unit jitters past the founder's still share the class.
-        ell_kmax=round_up_ladder(min(int(need.ell_kmax * g), need.tile),
-                                 policy.k_ladder)
-        if need.ell_units else 0,
-        ell_units=_round_mult(int(need.ell_units * g), policy.unit_granule)
-        if need.ell_units else 0,
+        ell_kmax=ell_kmax,
+        ell_units=ell_units,
         coo_nnz=_round_mult(int(need.coo_nnz * policy.coo_growth),
                             policy.coo_granule),
         r_block=need.r_block,
+        ell_bands=_grow_bands(need, ell_kmax, ell_units, policy)
+        if need.ell_units else (),
     )
 
 
@@ -443,6 +553,16 @@ def pad_to_class(part: TriPartition, meta: PartitionMeta,
     if u and rb != sc.r_block:
         raise ValueError(f"unit row height {rb} != class r_block "
                          f"{sc.r_block}")
+    if u and sc.ell_bands:
+        # banded class: unit i must fit the K of slot i (the kernel
+        # runs slot i's band chain, which must cover unit_k[i])
+        slots = _band_slots(sc.bands)
+        uk = np.asarray(part.ell.unit_k, np.int64)
+        if not (uk <= slots[:u]).all():
+            bad = int(np.flatnonzero(uk > slots[:u])[0])
+            raise ValueError(
+                f"unit {bad} (K={int(uk[bad])}) exceeds class band slot "
+                f"K={int(slots[bad])}")
     rb = sc.r_block
     pad_u = sc.ell_units - u
     cols = np.zeros((sc.ell_units, rb, sc.ell_kmax), np.int32)

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the H-GCN hot spots (validated interpret=True)."""
-from . import ops, ref
+from . import autotune, ops, ref
 from .bsr_spmm import bsr_spmm
-from .ell_spmm import ell_spmm
+from .ell_spmm import ell_spmm, ragged_ell_spmm
 from .tile_matmul import tile_matmul
 
-__all__ = ["ops", "ref", "bsr_spmm", "ell_spmm", "tile_matmul"]
+__all__ = ["autotune", "ops", "ref", "bsr_spmm", "ell_spmm",
+           "ragged_ell_spmm", "tile_matmul"]

@@ -1,0 +1,235 @@
+"""Offline contract-checked autotuner for the ragged ELL kernel.
+
+Sweeps the kernel's launch tunables per (backend, shape class, feature
+width) — feature block ``bf``, unit batching ``gu``, HBM→VMEM pipeline
+``buffer_depth``, and the K-band split ``max_bands`` — and caches the
+fastest *legal* configuration on disk, keyed by the class signature, so
+a server process pays the sweep once per class ever.
+
+Legality comes first: every candidate's launch contract is audited by
+the static kernel-contract oracle (``repro.analysis.static.kernel_pass
+.check_contract``) BEFORE any timing — a candidate the oracle rejects
+(e.g. ``gu > 1`` whose whole-B residency or an oversized
+``buffer_depth`` blows the 16 MiB VMEM budget) is never run. Timing is
+injectable for deterministic tests; the default timer runs the real
+``ragged_ell_spmm`` on synthetic class-shaped data (interpret mode off
+TPU, compiled on TPU).
+
+Every legal configuration is bitwise-equal to the default (the kernel
+never splits a unit's accumulation chain), so the tuner optimizes time
+only — correctness is the contract oracle's job plus the kernel's own
+construction, not the sweep's.
+
+Consulted at compile time: ``Engine.autotune`` feeds the winner to
+``ExecutorCache.set_tuned``, which keys executors on the tuned config
+and passes it down the dispatch path as ``ell_tune``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+# The sweep space. Order matters: the FIRST candidate is the kernel's
+# default configuration, so a tie on measured time keeps the default
+# (ties broken by candidate order, deterministically).
+SWEEP_BF = (128, 64, 32)
+SWEEP_GU = (1, 4, 8)
+SWEEP_BUFFER_DEPTH = (2, 4)
+SWEEP_MAX_BANDS = (4, 1)
+TUNE_KEYS = ("bf", "gu", "buffer_depth", "max_bands")
+
+
+def candidates(f: int) -> list:
+    """The deduplicated candidate list for feature width ``f``.
+
+    ``bf`` clamps to ``min(bf, f)`` inside the contract, so bf values at
+    or above ``f`` collapse to one effective candidate — duplicates are
+    dropped on the *effective* config, keeping the sweep honest about
+    what it actually times.
+    """
+    seen = set()
+    out = []
+    for bf in SWEEP_BF:
+        for gu in SWEEP_GU:
+            for depth in SWEEP_BUFFER_DEPTH:
+                for mb in SWEEP_MAX_BANDS:
+                    eff = (min(bf, f), gu, depth, mb)
+                    if eff in seen:
+                        continue
+                    seen.add(eff)
+                    out.append({"bf": bf, "gu": gu, "buffer_depth": depth,
+                                "max_bands": mb})
+    return out
+
+
+class AutotuneCache:
+    """On-disk JSON cache of sweep winners.
+
+    One flat dict {key: {"config": {...}, "ms": float}}; ``path=None``
+    keeps it in-memory only. Writes are atomic (tmp + rename) so a
+    killed sweep never leaves a truncated cache. Invalidation is by
+    key construction: the key embeds the backend and the full class
+    signature (including the band plan), so any class or kernel-layout
+    change misses instead of serving a stale winner.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._mem: dict = {}
+        if path and os.path.exists(path):
+            try:
+                with open(path) as fh:
+                    self._mem = json.load(fh)
+            except (OSError, ValueError):
+                self._mem = {}   # unreadable cache == empty cache
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def get(self, key: str) -> Optional[dict]:
+        return self._mem.get(key)
+
+    def put(self, key: str, entry: dict) -> None:
+        self._mem[key] = entry
+        if self.path:
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(self._mem, fh, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+
+
+class Autotuner:
+    """Sweep → oracle-check → time → cache, per (class, feature width).
+
+    ``timer`` (injectable) maps a candidate config dict to seconds; the
+    default builds synthetic data at the class shapes and times the real
+    kernel. Counters: ``hits``/``misses`` (cache), ``swept`` (candidates
+    considered), ``rejected`` (oracle-illegal, never timed), ``timed``.
+    """
+
+    def __init__(self, cache_path: Optional[str] = None, *,
+                 timer: Optional[Callable[[dict], float]] = None,
+                 reps: int = 2, backend: Optional[str] = None):
+        self.cache = AutotuneCache(cache_path)
+        self._timer = timer
+        self.reps = max(1, int(reps))
+        if backend is None:
+            import jax
+            backend = jax.default_backend()
+        self.backend = backend
+        self.hits = 0
+        self.misses = 0
+        self.swept = 0
+        self.rejected = 0
+        self.timed = 0
+
+    # ------------------------------------------------------------ keys -----
+    def cache_key(self, sc, f: int) -> str:
+        """Backend + full class signature (bands included) + width."""
+        return f"{self.backend}|{sc.summary()}|f={int(f)}"
+
+    # ----------------------------------------------------------- oracle -----
+    def _audit(self, sc, f: int, cfg: dict) -> list:
+        """Contract findings for one candidate (empty == legal).
+
+        Builds the exact contract the tuned launch would use and runs it
+        through the static checker with worst-case scalar stand-ins —
+        the same path ``repro.analysis.static`` lints the defaults with.
+        """
+        from repro.analysis.static.kernel_pass import check_contract
+        from repro.kernels.ell_spmm import ragged_ell_contract
+        c = ragged_ell_contract(
+            sc.ell_units, sc.r_block, sc.ell_kmax, sc.n_col_tiles, sc.tile,
+            f, bf=cfg["bf"], segments=sc.bands, max_bands=cfg["max_bands"],
+            buffer_depth=cfg["buffer_depth"], gu=cfg["gu"])
+        up = c["in_shapes"][0][0]
+        tile_col = np.full((up,), sc.n_col_tiles - 1, np.int32)
+        unit_k = np.zeros((up,), np.int32)
+        unit_k[: sc.ell_units] = np.repeat(
+            [k for k, _ in sc.bands], [n for _, n in sc.bands])
+        return check_contract(c, scalar_args=(tile_col, unit_k),
+                              backend="tpu")
+
+    # ----------------------------------------------------------- timing -----
+    def _synthetic(self, sc, f: int) -> tuple:
+        """Deterministic class-shaped operands for the default timer."""
+        rng = np.random.default_rng(0)
+        u, r, kmax = sc.ell_units, sc.r_block, sc.ell_kmax
+        nct, t = sc.n_col_tiles, sc.tile
+        unit_k = np.repeat([k for k, _ in sc.bands],
+                           [n for _, n in sc.bands]).astype(np.int32)
+        cols = rng.integers(0, t, (u, r, kmax), dtype=np.int32)
+        vals = rng.standard_normal((u, r, kmax)).astype(np.float32)
+        vals *= (np.arange(kmax)[None, None, :]
+                 < unit_k[:, None, None])        # zero the masked lanes
+        tile_col = rng.integers(0, nct, (u,), dtype=np.int32)
+        b = rng.standard_normal((nct, t, f)).astype(np.float32)
+        return cols, vals, tile_col, unit_k, b
+
+    def _measure(self, sc, cfg: dict, data: tuple) -> float:
+        """Wall seconds for one tuned launch (warm; min over reps)."""
+        import jax
+        from repro.kernels.ell_spmm import ragged_ell_spmm
+        cols, vals, tile_col, unit_k, b = data
+        interpret = jax.default_backend() != "tpu"
+
+        def run():
+            return ragged_ell_spmm(
+                cols, vals, tile_col, unit_k, b, bf=cfg["bf"],
+                segments=sc.bands, max_bands=cfg["max_bands"],
+                buffer_depth=cfg["buffer_depth"], gu=cfg["gu"],
+                interpret=interpret).block_until_ready()
+
+        run()                                   # compile / warm
+        best = float("inf")
+        for _ in range(self.reps):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    # ------------------------------------------------------------ sweep -----
+    def tune(self, sc, f: int) -> dict:
+        """Winning config for (class, width) — cached, else swept.
+
+        Returns the tuned config dict ({} when the class has no ELL
+        units or every candidate is illegal — callers then launch the
+        defaults). A cache hit skips the sweep entirely.
+        """
+        if not sc.ell_units or not sc.ell_kmax:
+            return {}
+        key = self.cache_key(sc, f)
+        cached = self.cache.get(key)
+        if cached is not None:
+            self.hits += 1
+            return dict(cached["config"])
+        self.misses += 1
+        data = None
+        best = None                            # (seconds, config)
+        for cfg in candidates(f):
+            self.swept += 1
+            if self._audit(sc, f, cfg):
+                self.rejected += 1             # illegal: NEVER timed
+                continue
+            if self._timer is not None:
+                secs = float(self._timer(cfg))
+            else:
+                if data is None:
+                    data = self._synthetic(sc, f)
+                secs = self._measure(sc, cfg, data)
+            self.timed += 1
+            if best is None or secs < best[0]:  # strict: first min wins
+                best = (secs, cfg)
+        winner = {} if best is None else dict(best[1])
+        self.cache.put(key, {"config": winner,
+                             "ms": None if best is None else best[0] * 1e3})
+        return dict(winner)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "swept": self.swept, "rejected": self.rejected,
+                "timed": self.timed, "cache_entries": len(self.cache)}

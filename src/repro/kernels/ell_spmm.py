@@ -3,25 +3,43 @@
 H-GCN's sparse tensor array maps ELL groups of *differing* K onto one
 systolic array by making K a per-tile parameter, not a per-kernel one.
 The TPU translation (``ragged_ell_spmm``): ONE kernel launch over the
-concatenated unit array, with a static ``Kmax``-trip gather+FMA loop and
-a per-unit mask ``kk < unit_k[u]`` — ``unit_k`` rides the scalar-prefetch
-path next to ``tile_col``, so both the B-tile choice and the live trip
-count are known before each grid step's body runs. Entries at or past a
-unit's K are zero (the partition's padding-sentinel convention), so the
-mask costs nothing in correctness and saves the masked FMAs from ever
-mattering; the static Kmax bound keeps Mosaic's pipelining contract.
+concatenated unit array with a per-unit mask ``kk < unit_k[u]`` —
+``unit_k`` rides the scalar-prefetch path next to ``tile_col``, so both
+the B-tile choice and the live trip count are known before each grid
+step's body runs.
+
+v2 grid structure (density-aware):
+
+  * **K bands** — units arrive sorted by K descending (the partition
+    emits them that way; ``segments`` carries the (K, n_units) runs).
+    The runs are merged to at most ``max_bands`` bands and the kernel
+    selects, per grid step, the FMA chain of that step's band via
+    ``lax.switch`` — short units stop paying the full-Kmax trip count.
+    Each unit's whole accumulation chain still runs inside one body
+    execution (band chains only drop trips the value mask already
+    zeroed), so live lanes stay bitwise-identical to the fixed-K path.
+  * **Unit batching** (``gu > 1``) — process ``gu`` units per grid step
+    against the whole padded B resident in VMEM (block index maps drop
+    the per-unit ``tile_col`` lookup; rows are gathered at global index
+    ``tile_col*T + col``). Cuts grid steps — and their fixed overhead —
+    by ``gu``× at the cost of ``nct*T*bf`` VMEM for B, so it is only
+    legal for small graphs: the default resolves via ``auto_gu`` (the
+    largest VMEM-legal batch), the autotuner proposes overrides, and
+    the kernel contract oracle (``repro.analysis.static.kernel_pass``)
+    rejects any candidate whose working set blows the VMEM budget.
+  * **Multi-buffering** (``buffer_depth``) — the contract carries the
+    HBM→VMEM pipeline depth and ``dimension_semantics`` so DMA for grid
+    step i+1 overlaps step i's FMA chain; the feature axis is declared
+    ``parallel`` (steps independent), the unit axis ``arbitrary``.
 
 The legacy fixed-K kernel (``ell_spmm``) is retained for the
 "fused"/"loop" A/B dispatches: one launch per distinct K with a fully
 static trip count (the pre-ragged layout).
 
-B-tile selection per unit uses the scalar-prefetch block-sparse pattern
-(`PrefetchScalarGridSpec`): ``tile_col[u]`` is known before the body runs,
-so the pipeline can prefetch the right (T, bf) block of B from HBM.
-
-Grid: (n_units, F / bf). Output is per-unit [U, R, bf] partial products;
-the caller scatter-adds them over the unit row ids (the flexible engine's
-job — on ACAP the PL collects STPE results the same way).
+Grid: (n_units / gu, F / bf). Output is per-unit [U, R, bf] partial
+products; the caller scatter-adds them over the unit row ids (the
+flexible engine's job — on ACAP the PL collects STPE results the same
+way).
 """
 from __future__ import annotations
 
@@ -33,6 +51,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BF = 128
+# Band-merge cap: more bands = tighter trip counts but a deeper
+# lax.switch; 4 captures most of the padded-trip savings on real graphs.
+DEFAULT_MAX_BANDS = 4
+# HBM->VMEM pipeline depth (double-buffered by default, quad is the
+# autotuner's other legal choice).
+DEFAULT_BUFFER_DEPTH = 2
+# VMEM budget the contracts are audited against (one core's VMEM).
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
 
 
 def _pad_f(f: int, bf: int) -> tuple:
@@ -41,8 +67,79 @@ def _pad_f(f: int, bf: int) -> tuple:
     return bf_, -(-f // bf_) * bf_
 
 
+def merge_bands(runs, max_bands: int) -> tuple:
+    """Merge descending-K (K, n_units) runs down to ``max_bands`` bands.
+
+    Adjacent runs merge into the wider K; the pair chosen at each step
+    is the one adding the least padded-MAC waste
+    ``(K_left - K_right) * n_right``. Deterministic (first minimum
+    wins), returns a tuple of (K, n_units) with K strictly descending.
+    """
+    merged: list = []
+    for k, n in runs:
+        if n <= 0:
+            continue
+        if merged and merged[-1][0] == int(k):
+            merged[-1][1] += int(n)
+        else:
+            merged.append([int(k), int(n)])
+    while len(merged) > max_bands:
+        best = min(range(len(merged) - 1),
+                   key=lambda i: (merged[i][0] - merged[i + 1][0])
+                   * merged[i + 1][1])
+        merged[best][1] += merged[best + 1][1]
+        del merged[best + 1]
+    return tuple((k, n) for k, n in merged)
+
+
+def _bands_of(segments, u: int, kmax: int, max_bands: int) -> tuple:
+    """Normalize ``segments`` into the kernel's K-descending band plan.
+
+    Empty segments (or any non-descending legacy order) collapse to one
+    Kmax-wide band — exactly the v1 kernel. Band Ks are clamped to the
+    slab width; a band covering units whose slab columns past K are all
+    zero is trip-equivalent to the full-width chain.
+    """
+    if u == 0:
+        return ()
+    segs = tuple((int(k), int(n)) for k, n in segments if int(n) > 0)
+    if not segs or sum(n for _, n in segs) != u:
+        return ((kmax, u),)
+    ks = [k for k, _ in segs]
+    if any(ks[i] < ks[i + 1] for i in range(len(ks) - 1)):
+        return ((kmax, u),)     # legacy ascending order: no banding
+    segs = tuple((min(k, kmax), n) for k, n in segs)
+    return merge_bands(segs, max_bands)
+
+
+def _band_tables(bands) -> tuple:
+    """(band_ks, band_counts, band_offs): static switch tables.
+
+    ``band_offs`` holds the starting unit index of every band past the
+    first; the kernel's band selector is ``sum(i >= off)``.
+    """
+    band_ks = tuple(k for k, _ in bands)
+    band_counts = tuple(n for _, n in bands)
+    offs, at = [], 0
+    for _, n in bands[:-1]:
+        at += n
+        offs.append(at)
+    return band_ks, band_counts, tuple(offs)
+
+
+def _spec_block_bytes(specs, elem_bytes: int) -> int:
+    total = 0
+    for spec in specs:
+        n = elem_bytes
+        for d in spec.block_shape:
+            n *= int(d)
+        total += n
+    return total
+
+
 def ell_contract(u: int, r: int, k: int, nct: int, t: int, f: int,
-                 *, bf: int = DEFAULT_BF) -> dict:
+                 *, bf: int = DEFAULT_BF,
+                 buffer_depth: int = DEFAULT_BUFFER_DEPTH) -> dict:
     """The exact launch contract ``ell_spmm`` uses for these shapes.
 
     Single source of truth for grid, BlockSpecs, and padded operand
@@ -52,44 +149,160 @@ def ell_contract(u: int, r: int, k: int, nct: int, t: int, f: int,
     (int32 indices, float32 values).
     """
     bf_, fp = _pad_f(f, bf)
+    in_specs = [
+        pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
+        pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
+        pl.BlockSpec((1, t, bf_), lambda i, j, tc: (tc[i], 0, j)),
+    ]
+    out_specs = [pl.BlockSpec((1, r, bf_), lambda i, j, tc: (i, 0, j))]
+    block_bytes = _spec_block_bytes(in_specs + out_specs, 4)
     return {
         "name": "ell_spmm",
         "grid": (u, fp // bf_),
         "num_scalar_prefetch": 1,
-        "in_specs": [
-            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
-            pl.BlockSpec((1, r, k), lambda i, j, tc: (i, 0, 0)),
-            pl.BlockSpec((1, t, bf_), lambda i, j, tc: (tc[i], 0, j)),
-        ],
-        "out_specs": [pl.BlockSpec((1, r, bf_), lambda i, j, tc: (i, 0, j))],
+        "in_specs": in_specs,
+        "out_specs": out_specs,
         "scratch_shapes": [],
         "in_shapes": [(u, r, k), (u, r, k), (nct, t, fp)],
         "out_shapes": [(u, r, fp)],
         "elem_bytes": 4,
+        "buffer_depth": buffer_depth,
+        "dimension_semantics": ("arbitrary", "parallel"),
+        "vmem_limit_bytes": max(VMEM_BUDGET_BYTES,
+                                block_bytes * buffer_depth),
     }
 
 
 def ragged_ell_contract(u: int, r: int, kmax: int, nct: int, t: int, f: int,
-                        *, bf: int = DEFAULT_BF) -> dict:
+                        *, bf: int = DEFAULT_BF, segments: tuple = (),
+                        max_bands: int = DEFAULT_MAX_BANDS,
+                        buffer_depth: int = DEFAULT_BUFFER_DEPTH,
+                        gu: int = 1) -> dict:
     """The exact launch contract ``ragged_ell_spmm`` uses (see
-    ``ell_contract``); scalar-prefetch operands are (tile_col, unit_k)."""
+    ``ell_contract``); scalar-prefetch operands are (tile_col, unit_k).
+
+    Tunables (all audited by the kernel pass, all defaulting to the v1
+    behavior): ``segments`` — the (K, n_units) descending runs of the
+    unit axis, merged to ``max_bands`` K bands; ``buffer_depth`` — the
+    HBM→VMEM pipeline depth; ``gu`` — units per grid step (``gu > 1``
+    switches the B operand to whole-array VMEM residency).
+    """
+    if gu < 1:
+        raise ValueError(f"gu must be >= 1, got {gu}")
+    if buffer_depth < 1:
+        raise ValueError(f"buffer_depth must be >= 1, got {buffer_depth}")
     bf_, fp = _pad_f(f, bf)
-    return {
-        "name": "ragged_ell_spmm",
-        "grid": (u, fp // bf_),
-        "num_scalar_prefetch": 2,
-        "in_specs": [
+    bands = _bands_of(segments, u, kmax, max_bands)
+    band_ks, band_counts, band_offs = _band_tables(bands)
+    if gu == 1:
+        up = u
+        grid = (u, fp // bf_)
+        in_specs = [
             pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
             pl.BlockSpec((1, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
             pl.BlockSpec((1, t, bf_), lambda i, j, tc, ks: (tc[i], 0, j)),
-        ],
-        "out_specs": [pl.BlockSpec((1, r, bf_),
-                                   lambda i, j, tc, ks: (i, 0, j))],
+        ]
+        out_specs = [pl.BlockSpec((1, r, bf_),
+                                  lambda i, j, tc, ks: (i, 0, j))]
+    else:
+        # gu units per step against the WHOLE padded B in VMEM: the
+        # B block ignores the unit axis (index maps can't read gu
+        # different tile_cols), so rows are gathered at global index
+        # tile_col*T + col inside the body.
+        up = -(-u // gu) * gu
+        grid = (up // gu, fp // bf_)
+        in_specs = [
+            pl.BlockSpec((gu, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
+            pl.BlockSpec((gu, r, kmax), lambda i, j, tc, ks: (i, 0, 0)),
+            pl.BlockSpec((nct, t, bf_), lambda i, j, tc, ks: (0, 0, j)),
+        ]
+        out_specs = [pl.BlockSpec((gu, r, bf_),
+                                  lambda i, j, tc, ks: (i, 0, j))]
+    block_bytes = _spec_block_bytes(in_specs + out_specs, 4)
+    return {
+        "name": "ragged_ell_spmm",
+        "grid": grid,
+        "num_scalar_prefetch": 2,
+        "in_specs": in_specs,
+        "out_specs": out_specs,
         "scratch_shapes": [],
-        "in_shapes": [(u, r, kmax), (u, r, kmax), (nct, t, fp)],
-        "out_shapes": [(u, r, fp)],
+        "in_shapes": [(up, r, kmax), (up, r, kmax), (nct, t, fp)],
+        "out_shapes": [(up, r, fp)],
         "elem_bytes": 4,
+        "segments": tuple((int(k), int(n)) for k, n in segments),
+        "band_ks": band_ks,
+        "band_counts": band_counts,
+        "band_offs": band_offs,
+        "buffer_depth": buffer_depth,
+        "gu": gu,
+        "dimension_semantics": ("arbitrary", "parallel"),
+        "vmem_limit_bytes": max(VMEM_BUDGET_BYTES,
+                                block_bytes * buffer_depth),
     }
+
+
+def contract_cost(c: dict) -> dict:
+    """Analytic per-launch cost of a contract: HBM bytes + FMA FLOPs.
+
+    ``hbm_bytes`` counts every block the grid moves (in + out, once per
+    step — multi-buffering overlaps the transfers, it does not remove
+    them); ``flops`` counts the band chains actually executed (2 ops
+    per MAC over r×bf lanes per trip). Benchmarks divide these by the
+    roofline constants to report the DMA-vs-compute split and the
+    achieved-roofline fraction; this module deliberately knows bytes
+    and FLOPs only.
+    """
+    n_steps = 1
+    for g in c["grid"]:
+        n_steps *= int(g)
+    step_bytes = _spec_block_bytes(
+        list(c["in_specs"]) + list(c["out_specs"]), c["elem_bytes"])
+    hbm_bytes = step_bytes * n_steps
+    out_block = c["out_specs"][0].block_shape        # (gu, r, bf_)
+    gu = int(c.get("gu", 1))
+    rows = int(out_block[-2])
+    bf_ = int(out_block[-1])
+    band_ks = c.get("band_ks", ())
+    band_counts = c.get("band_counts", ())
+    if band_ks:
+        # grid steps along the unit axis per band (gu units per step;
+        # a step straddling a band boundary runs the wider chain)
+        trips = 0
+        at = 0
+        for k, n in zip(band_ks, band_counts):
+            lo, hi = at, at + n
+            steps = -(-hi // gu) - lo // gu
+            trips += k * steps
+            at = hi
+    else:
+        trips = 0
+    f_blocks = int(c["grid"][-1])
+    flops = 2.0 * trips * f_blocks * gu * rows * bf_
+    return {"hbm_bytes": float(hbm_bytes), "flops": flops}
+
+
+def auto_gu(u: int, r: int, kmax: int, nct: int, t: int, f: int,
+            *, bf: int = DEFAULT_BF,
+            buffer_depth: int = DEFAULT_BUFFER_DEPTH) -> int:
+    """Largest legal unit batch for these shapes.
+
+    ``gu > 1`` makes the whole padded B VMEM-resident, so it is only
+    legal while the multi-buffered working set stays inside the VMEM
+    budget — the same bound the static contract oracle enforces
+    (``repro.analysis.static.kernel_pass.estimate_vmem_bytes``). Big
+    graphs therefore resolve to 1 and keep the per-unit B-tile path;
+    the autotuner may still override with an explicitly checked value.
+    """
+    for g in (8, 4, 2):
+        if u < g:
+            continue
+        c = ragged_ell_contract(u, r, kmax, nct, t, f, bf=bf,
+                                buffer_depth=buffer_depth, gu=g)
+        block = _spec_block_bytes(c["in_specs"] + c["out_specs"],
+                                  c["elem_bytes"])
+        if block * buffer_depth <= VMEM_BUDGET_BYTES:
+            return g
+    return 1
 
 
 def _ell_kernel(tile_col_ref, cols_ref, vals_ref, b_ref, o_ref, *, k: int):
@@ -104,9 +317,11 @@ def _ell_kernel(tile_col_ref, cols_ref, vals_ref, b_ref, o_ref, *, k: int):
     o_ref[0] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bf", "buffer_depth",
+                                             "interpret"))
 def ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray, tile_col: jnp.ndarray,
              b_tiles: jnp.ndarray, *, bf: int = DEFAULT_BF,
+             buffer_depth: int = DEFAULT_BUFFER_DEPTH,
              interpret: bool = False) -> jnp.ndarray:
     """Per-unit ELL products.
 
@@ -118,7 +333,7 @@ def ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray, tile_col: jnp.ndarray,
     bf_, fp = _pad_f(f, bf)
     b_p = jnp.pad(b_tiles, ((0, 0), (0, 0), (0, fp - f))) if fp != f else b_tiles
 
-    c = ell_contract(u, r, k, nct, t, f, bf=bf)
+    c = ell_contract(u, r, k, nct, t, f, bf=bf, buffer_depth=buffer_depth)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=c["num_scalar_prefetch"],
         grid=c["grid"],
@@ -130,47 +345,131 @@ def ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray, tile_col: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(c["out_shapes"][0], jnp.float32),
         interpret=interpret,
+        **_compiler_kw(c, interpret),
     )(tile_col, cols, vals, b_p)
     return out[:, :, :f]
 
 
+def _compiler_kw(c: dict, interpret: bool) -> dict:
+    """Mosaic pipelining knobs from the contract (compiled path only —
+    interpret mode takes no compiler params)."""
+    if interpret:
+        return {}
+    return {"compiler_params": pltpu.TPUCompilerParams(
+        dimension_semantics=c["dimension_semantics"],
+        vmem_limit_bytes=c["vmem_limit_bytes"])}
+
+
 def _ragged_ell_kernel(tile_col_ref, unit_k_ref, cols_ref, vals_ref, b_ref,
-                       o_ref, *, kmax: int):
-    del tile_col_ref  # consumed by the index maps
-    ku = unit_k_ref[pl.program_id(0)]                # this unit's live K
-    b = b_ref[0]                                     # [T, bf]
-    cols = cols_ref[0]                               # [R, Kmax]
-    vals = vals_ref[0].astype(jnp.float32)           # [R, Kmax]
-    acc = jnp.zeros((cols.shape[0], b.shape[1]), jnp.float32)
-    for kk in range(kmax):                           # static trip count
-        g = jnp.take(b, cols[:, kk], axis=0)         # [R, bf] row gather
-        # Mask the VALUES, not the product: the FMA below then has the
-        # exact expression shape of the fixed-K kernel, so live lanes
-        # stay bit-identical to the legacy per-K launches.
-        v = jnp.where(kk < ku, vals[:, kk], 0.0)
-        acc = acc + v[:, None] * g.astype(jnp.float32)
-    o_ref[0] = acc
+                       o_ref, *, band_ks: tuple, band_offs: tuple,
+                       gu: int, t: int):
+    """Band-switched masked FMA over gu units per grid step.
+
+    Every unit's full accumulation chain runs inside this one body
+    execution (its band K bounds its unit_k), so live lanes are
+    bitwise-identical to the fixed-K kernel: the mask sits on the
+    VALUES and band chains only drop trips the mask already zeroed.
+    """
+    i = pl.program_id(0)
+    if gu == 1:
+        del tile_col_ref  # consumed by the index maps
+        ku = unit_k_ref[i]                           # this unit's live K
+        b = b_ref[0]                                 # [T, bf]
+        cols = cols_ref[0]                           # [R, Kmax]
+        vals = vals_ref[0].astype(jnp.float32)       # [R, Kmax]
+
+        def chain(k):
+            def run():
+                acc = jnp.zeros((cols.shape[0], b.shape[1]), jnp.float32)
+                for kk in range(k):                  # static trip count
+                    g = jnp.take(b, cols[:, kk], axis=0)
+                    # Mask the VALUES, not the product: the FMA then has
+                    # the exact expression shape of the fixed-K kernel.
+                    v = jnp.where(kk < ku, vals[:, kk], 0.0)
+                    acc = acc + v[:, None] * g.astype(jnp.float32)
+                return acc
+            return run
+
+        if len(band_ks) == 1:
+            o_ref[0] = chain(band_ks[0])()
+        else:
+            band = sum(jnp.int32(i >= off) for off in band_offs)
+            o_ref[0] = jax.lax.switch(band, [chain(k) for k in band_ks])
+        return
+
+    # gu > 1: whole padded B is resident; gather at global row index
+    # tile_col*T + col. The step's chain is its FIRST unit's band (units
+    # are K-descending, so that bounds every unit_k in the step).
+    ku = unit_k_ref[pl.ds(i * gu, gu)]               # [gu]
+    tc = tile_col_ref[pl.ds(i * gu, gu)]             # [gu]
+    bf_ = b_ref.shape[2]
+    bflat = b_ref[...].reshape(-1, bf_)              # [nct*T, bf]
+    cols = cols_ref[...]                             # [gu, R, Kmax]
+    vals = vals_ref[...].astype(jnp.float32)         # [gu, R, Kmax]
+    base = tc * t                                    # [gu]
+
+    def chain(k):
+        def run():
+            acc = jnp.zeros((cols.shape[0], cols.shape[1], bf_),
+                            jnp.float32)
+            for kk in range(k):                      # static trip count
+                g = jnp.take(bflat, base[:, None] + cols[:, :, kk],
+                             axis=0)                 # [gu, R, bf]
+                v = jnp.where(kk < ku[:, None], vals[:, :, kk], 0.0)
+                acc = acc + v[:, :, None] * g.astype(jnp.float32)
+            return acc
+        return run
+
+    if len(band_ks) == 1:
+        o_ref[...] = chain(band_ks[0])()
+    else:
+        band = sum(jnp.int32(i * gu >= off) for off in band_offs)
+        o_ref[...] = jax.lax.switch(band, [chain(k) for k in band_ks])
 
 
-@functools.partial(jax.jit, static_argnames=("bf", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bf", "segments", "max_bands",
+                                             "buffer_depth", "gu",
+                                             "interpret"))
 def ragged_ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray,
                     tile_col: jnp.ndarray, unit_k: jnp.ndarray,
                     b_tiles: jnp.ndarray, *, bf: int = DEFAULT_BF,
-                    interpret: bool = False) -> jnp.ndarray:
+                    segments: tuple = (),
+                    max_bands: int = DEFAULT_MAX_BANDS,
+                    buffer_depth: int = DEFAULT_BUFFER_DEPTH,
+                    gu: int = None, interpret: bool = False) -> jnp.ndarray:
     """Per-unit ELL products over the concatenated ragged unit array.
 
     cols [U, R, Kmax] int32 (tile-local), vals [U, R, Kmax],
     tile_col [U] int32, unit_k [U] int32, b_tiles [nct, T, F]
     ->  [U, R, F] float32.  ONE launch covers every K width.
+
+    ``segments`` (the meta's descending (K, n_units) runs) enables the
+    K-band grid; ``gu``/``buffer_depth`` are the autotuner's knobs (see
+    module docstring). ``gu=None`` (the default) resolves via
+    ``auto_gu`` — the largest VMEM-legal unit batch for these shapes.
+    Every configuration is bitwise-equal to every other because
+    per-unit chains never split across body executions.
     """
     u, r, kmax = cols.shape
     nct, t, f = b_tiles.shape
     if u == 0 or kmax == 0:
         return jnp.zeros((u, r, f), jnp.float32)
+    if gu is None:
+        gu = auto_gu(u, r, kmax, nct, t, f, bf=bf,
+                     buffer_depth=buffer_depth)
     bf_, fp = _pad_f(f, bf)
     b_p = jnp.pad(b_tiles, ((0, 0), (0, 0), (0, fp - f))) if fp != f else b_tiles
 
-    c = ragged_ell_contract(u, r, kmax, nct, t, f, bf=bf)
+    c = ragged_ell_contract(u, r, kmax, nct, t, f, bf=bf, segments=segments,
+                            max_bands=max_bands, buffer_depth=buffer_depth,
+                            gu=gu)
+    up = c["in_shapes"][0][0]
+    if up != u:
+        # dead tail units (unit_k == 0 -> all-masked -> zero output)
+        cols = jnp.pad(cols, ((0, up - u), (0, 0), (0, 0)))
+        vals = jnp.pad(vals, ((0, up - u), (0, 0), (0, 0)))
+        tile_col = jnp.pad(tile_col, (0, up - u))
+        unit_k = jnp.pad(unit_k, (0, up - u))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=c["num_scalar_prefetch"],
         grid=c["grid"],
@@ -178,9 +477,11 @@ def ragged_ell_spmm(cols: jnp.ndarray, vals: jnp.ndarray,
         out_specs=c["out_specs"][0],
     )
     out = pl.pallas_call(
-        functools.partial(_ragged_ell_kernel, kmax=kmax),
+        functools.partial(_ragged_ell_kernel, band_ks=c["band_ks"],
+                          band_offs=c["band_offs"], gu=gu, t=t),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(c["out_shapes"][0], jnp.float32),
         interpret=interpret,
+        **_compiler_kw(c, interpret),
     )(tile_col, unit_k, cols, vals, b_p)
-    return out[:, :, :f]
+    return out[:u, :, :f]

@@ -38,15 +38,20 @@ def dense_tiles_matmul(part: TriPartition, b: jnp.ndarray,
 
 
 def ell_matmul(part: TriPartition, b: jnp.ndarray, meta: PartitionMeta,
-               *, dispatch: str = "ragged") -> jnp.ndarray:
+               *, dispatch: str = "ragged",
+               ell_tune: dict = None) -> jnp.ndarray:
     """Sparse-engine partial product via the Pallas ELL kernels, [nrt*T, F].
 
     ``dispatch="ragged"`` (default) issues exactly ONE ``ragged_ell_spmm``
     launch over the concatenated unit array — K varies per unit via the
-    scalar-prefetched ``unit_k``. ``"fused"`` / ``"loop"`` are the legacy
-    per-K-launch paths kept for A/B parity: buckets are derived from the
-    ragged array (``meta.ell_segments``), one ``ell_spmm`` launch each;
-    "fused" scatters all buckets at once, "loop" scatters per bucket.
+    scalar-prefetched ``unit_k``, and ``meta.ell_segments`` feeds the
+    kernel's K-band grid. ``ell_tune`` optionally overrides the kernel
+    tunables (``bf``, ``max_bands``, ``buffer_depth``, ``gu``) with an
+    autotuned configuration (`repro.kernels.autotune`); every legal
+    configuration is bitwise-equal to the default. ``"fused"`` /
+    ``"loop"`` are the legacy per-K-launch paths kept for A/B parity:
+    buckets are derived from the ragged array, one ``ell_spmm`` launch
+    each; "fused" scatters all buckets at once, "loop" per bucket.
     """
     if dispatch not in ("ragged", "fused", "loop"):
         raise ValueError(f"unknown ell dispatch {dispatch!r}")
@@ -57,10 +62,17 @@ def ell_matmul(part: TriPartition, b: jnp.ndarray, meta: PartitionMeta,
         return jnp.zeros((meta.n_padded_rows, f), jnp.float32)
     bt = pad_b_to_tiles(b, meta).reshape(meta.n_col_tiles, T, f)
     if dispatch == "ragged":
+        tune = ell_tune or {}
         r = part.ell.cols.shape[1]
-        prod = _ell.ragged_ell_spmm(part.ell.cols, part.ell.vals,
-                                    part.ell.tile_col, part.ell.unit_k, bt,
-                                    interpret=not _on_tpu())
+        prod = _ell.ragged_ell_spmm(
+            part.ell.cols, part.ell.vals,
+            part.ell.tile_col, part.ell.unit_k, bt,
+            bf=tune.get("bf", _ell.DEFAULT_BF),
+            segments=tuple(meta.ell_segments),
+            max_bands=tune.get("max_bands", _ell.DEFAULT_MAX_BANDS),
+            buffer_depth=tune.get("buffer_depth", _ell.DEFAULT_BUFFER_DEPTH),
+            gu=tune.get("gu"),           # None -> auto_gu picks
+            interpret=not _on_tpu())
         return scatter_ell_partials(part.ell.rows.reshape(-1),
                                     prod.reshape(u * r, f), meta)
     partials, rows = [], []

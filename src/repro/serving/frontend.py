@@ -107,7 +107,7 @@ class RequestQueue:
                  max_linger_ms: Optional[float] = None,
                  clock=time.monotonic, attach: bool = True,
                  pipelined: bool = False, max_inflight: int = 4,
-                 stage_workers: int = 1):
+                 stage_workers: int = 1, adaptive_inflight: bool = False):
         self.engine = engine
         self.clock = clock
         self.default_deadline_ms = default_deadline_ms
@@ -136,7 +136,8 @@ class RequestQueue:
             self.pipeline = DispatchPipeline(
                 engine, latency=self.latency, stats=self.stats,
                 clock=self.clock, max_inflight=max_inflight,
-                stage_workers=stage_workers)
+                stage_workers=stage_workers,
+                adaptive_inflight=adaptive_inflight)
             self.stats.pipelined = True
         self._thread: Optional[threading.Thread] = None
         self._stopping = False

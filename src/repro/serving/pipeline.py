@@ -87,8 +87,12 @@ class InflightBatch:
 class DispatchPipeline:
     """Bounded-window pipelined dispatcher over ``serve_group_async``."""
 
+    #: EWMA smoothing for the observed overlap ratio (adaptive window).
+    OVERLAP_ALPHA = 0.2
+
     def __init__(self, engine, latency, stats, clock, *,
-                 max_inflight: int = 4, stage_workers: int = 1):
+                 max_inflight: int = 4, stage_workers: int = 1,
+                 adaptive_inflight: bool = False):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if stage_workers < 1:
@@ -98,7 +102,18 @@ class DispatchPipeline:
         self.latency = latency
         self.stats = stats
         self.clock = clock
+        # ``max_inflight`` is the LIVE window bound (what staging checks);
+        # ``inflight_cap`` the configured ceiling. With adaptive_inflight
+        # the live bound tracks the observed staging/device overlap: a
+        # window that completes with no host wait (overlap ~1) earns its
+        # full cap, one where completion always blocks (overlap ~0 — the
+        # device is the bottleneck) shrinks toward 1 so queued batches
+        # wait in the queue (visible to the scheduler's deadline math)
+        # instead of invisibly inside the device window.
         self.max_inflight = max_inflight
+        self.inflight_cap = max_inflight
+        self.adaptive_inflight = adaptive_inflight
+        self.overlap_ewma: Optional[float] = None
         self.stage_workers = stage_workers
         self._has_prepare = callable(getattr(engine, "prepare_x", None))
         # one lock, several conditions: _work (drainer wakeups), _room
@@ -199,7 +214,7 @@ class DispatchPipeline:
                 # (a host-side wait — exactly the backpressure that
                 # keeps device memory and queue-delay exposure bounded)
                 # BEFORE the next enqueue, never after
-                while self.depth_inflight() >= self.max_inflight:
+                while self.depth_inflight() >= self.max_inflight:  # lint: racy-ok(single-int window bound; any published value is in [1, cap])
                     self._drain_one(block=True)
                 self._enqueue_group(key, members, plan.reason,
                                     prepared.get(key))
@@ -291,6 +306,8 @@ class DispatchPipeline:
             return
         wait_s = now - t0
         device_s = now - batch.t_enqueued
+        if self.adaptive_inflight and device_s > 0:
+            self._observe_overlap(wait_s, device_s)
         self.latency.observe(batch.key, batch.padded, cold=batch.cold,
                              staging_s=batch.staging_s, device_s=device_s)
         self.stats.on_batch(len(batch.members), batch.padded, batch.reason)
@@ -300,6 +317,30 @@ class DispatchPipeline:
                 r.future.set_result(y)
             self.stats.on_complete(now - r.submit_s,
                                    missed=now > r.deadline_s)
+
+    def _observe_overlap(self, wait_s: float, device_s: float) -> None:
+        """Fold one batch's staging/device overlap into the live window.
+
+        ``wait_s / device_s`` is the fraction of the batch's device
+        segment the completion path spent *blocked on the host* — work
+        the window failed to hide. overlap = 1 - that, clamped to
+        [0, 1], EWMA-smoothed, then mapped onto [1, inflight_cap]:
+
+            effective = 1 + round(ewma * (cap - 1))
+
+        The window bound is read unlocked by staging (a deliberately
+        racy single-int read: any value it sees is a bound this method
+        published, so the window is always in [1, cap])."""
+        overlap = min(1.0, max(0.0, 1.0 - wait_s / device_s))
+        with self._lock:
+            ewma = self.overlap_ewma
+            ewma = overlap if ewma is None else \
+                (1 - self.OVERLAP_ALPHA) * ewma + self.OVERLAP_ALPHA * overlap
+            self.overlap_ewma = ewma
+            cap = self.inflight_cap
+            self.max_inflight = max(
+                1, min(cap, 1 + int(round(ewma * (cap - 1)))))
+            self._room.notify_all()
 
     def poll_completions(self) -> int:
         """Inline-mode reaper: finish every in-flight batch whose device
@@ -467,6 +508,9 @@ class DispatchPipeline:
     def snapshot(self) -> dict:
         with self._lock:
             return {"max_inflight": self.max_inflight,
+                    "inflight_cap": self.inflight_cap,
+                    "adaptive_inflight": self.adaptive_inflight,
+                    "overlap_ewma": self.overlap_ewma,
                     "stage_workers": self.stage_workers,
                     "threaded": bool(self._threads),
                     "queued_plans": len(self._queued),

@@ -1,0 +1,142 @@
+"""The contract-checked autotuner (ISSUE 7).
+
+Covers the three guarantees the tuner makes: determinism (same sweep ->
+same winner, cached winners survive process restarts), economy (a cache
+hit never re-sweeps, no-ELL classes short-circuit), and safety (a
+candidate the static contract oracle rejects is NEVER timed).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.engine.shape_class import ShapeClass
+from repro.kernels.autotune import (Autotuner, TUNE_KEYS, candidates)
+
+from conftest import make_heterogeneous_matrix
+
+# A class small enough that every candidate is VMEM-legal.
+SMALL = ShapeClass(tile=64, n_row_tiles=2, n_col_tiles=2, n_dense_tiles=0,
+                   ell_kmax=16, ell_units=24, coo_nnz=0, r_block=8,
+                   ell_bands=((16, 8), (8, 16)))
+# 600 col tiles: whole-B residency (600*64*128*4B ~ 19.6 MiB) blows the
+# 16 MiB VMEM budget, so every gu>1 candidate must be oracle-rejected.
+BIG = ShapeClass(tile=64, n_row_tiles=40, n_col_tiles=600, n_dense_tiles=0,
+                 ell_kmax=32, ell_units=512, coo_nnz=0, r_block=8)
+NO_ELL = ShapeClass(tile=64, n_row_tiles=2, n_col_tiles=2, n_dense_tiles=4,
+                    ell_kmax=0, ell_units=0, coo_nnz=0, r_block=8)
+
+
+def _timer(log=None):
+    """Deterministic injectable timer: unique seconds per config."""
+    def timer(cfg):
+        if log is not None:
+            log.append(dict(cfg))
+        return (cfg["bf"] * 1e-6 + cfg["gu"] * 1e-5
+                + cfg["buffer_depth"] * 1e-7 + cfg["max_bands"] * 1e-8)
+    return timer
+
+
+def _boom(cfg):
+    raise AssertionError("timer must not be called")
+
+
+class TestDeterminism:
+    def test_same_sweep_same_winner(self):
+        w1 = Autotuner(timer=_timer(), backend="cpu").tune(SMALL, 32)
+        w2 = Autotuner(timer=_timer(), backend="cpu").tune(SMALL, 32)
+        assert w1 == w2
+        assert set(w1) == set(TUNE_KEYS)
+
+    def test_cache_hit_skips_resweep(self, tmp_path):
+        path = str(tmp_path / "tune.json")
+        t1 = Autotuner(path, timer=_timer(), backend="cpu")
+        w1 = t1.tune(SMALL, 32)
+        assert (t1.misses, t1.hits) == (1, 0) and t1.timed > 0
+        # same process, same tuner: in-memory hit
+        assert t1.tune(SMALL, 32) == w1
+        assert (t1.misses, t1.hits) == (1, 1)
+        # fresh tuner, same disk cache: the timer must never fire
+        t2 = Autotuner(path, timer=_boom, backend="cpu")
+        assert t2.tune(SMALL, 32) == w1
+        assert (t2.misses, t2.hits, t2.timed) == (0, 1, 0)
+        assert len(t2.cache) == 1
+
+    def test_key_embeds_backend_class_and_width(self):
+        t_cpu = Autotuner(timer=_timer(), backend="cpu")
+        t_tpu = Autotuner(timer=_timer(), backend="tpu")
+        k = t_cpu.cache_key(SMALL, 32)
+        assert k != t_tpu.cache_key(SMALL, 32)
+        assert k != t_cpu.cache_key(SMALL, 64)
+        rebanded = dataclasses.replace(SMALL, ell_bands=())
+        assert k != t_cpu.cache_key(rebanded, 32), \
+            "a band-plan change must miss, not serve a stale winner"
+
+    def test_unreadable_cache_treated_as_empty(self, tmp_path):
+        path = tmp_path / "tune.json"
+        path.write_text("{not json")
+        t = Autotuner(str(path), timer=_timer(), backend="cpu")
+        assert t.tune(SMALL, 32) == \
+            Autotuner(timer=_timer(), backend="cpu").tune(SMALL, 32)
+
+
+class TestOracleGate:
+    def test_rejected_candidates_never_timed(self):
+        log = []
+        t = Autotuner(timer=_timer(log), backend="cpu")
+        t.tune(BIG, 128)
+        assert t.rejected > 0, "BIG class must reject some candidates"
+        assert t.timed == len(log)
+        legal = [c for c in candidates(128) if not t._audit(BIG, 128, c)]
+        assert log == legal, \
+            "timed set must be exactly the oracle-legal set, in order"
+        # whole-B residency (gu>1) at 600 col tiles only squeezes under
+        # the budget at the narrowest block and shallowest pipeline
+        assert all(c["gu"] == 1
+                   or (c["bf"] == 32 and c["buffer_depth"] == 2)
+                   for c in log)
+        assert any(c["gu"] > 1 for c in candidates(128)
+                   if c not in log), "some gu>1 candidate must be rejected"
+
+    def test_small_class_times_everything(self):
+        log = []
+        t = Autotuner(timer=_timer(log), backend="cpu")
+        t.tune(SMALL, 32)
+        assert t.rejected == 0
+        assert t.swept == t.timed == len(log) == len(candidates(32))
+
+    def test_no_ell_class_short_circuits(self):
+        t = Autotuner(timer=_boom, backend="cpu")
+        assert t.tune(NO_ELL, 32) == {}
+        assert (t.swept, t.timed, len(t.cache)) == (0, 0, 0)
+
+    def test_bf_above_f_deduped(self):
+        # bf clamps to min(bf, f): at f=32 all three bf values collapse
+        cands = candidates(32)
+        assert len(cands) == len(candidates(128)) - 2 * 3 * 2 * 2
+
+
+class TestEngineIntegration:
+    def test_engine_autotune_bitwise_and_stats(self, tmp_path):
+        from repro.core import csr_from_dense
+        from repro.engine import Engine
+        eng = Engine(autotune_cache=str(tmp_path / "tune.json"))
+        rng = np.random.default_rng(0)
+        a = make_heterogeneous_matrix(300, seed=0)
+        ws = [(rng.standard_normal((16, 8)) * 0.1).astype(np.float32),
+              (rng.standard_normal((8, 4)) * 0.1).astype(np.float32)]
+        eng.register("g0", csr_from_dense(a), weights=ws)
+        x = rng.standard_normal((300, 16)).astype(np.float32)
+        y0 = np.asarray(eng.infer("g0", x))
+        cfg = eng.autotune("g0", 16, timer=_timer())
+        assert set(cfg) == set(TUNE_KEYS)
+        sc = eng.handle("g0").sclass
+        assert eng.executors.tuned_for(sc) == cfg
+        y1 = np.asarray(eng.infer("g0", x))
+        np.testing.assert_array_equal(y0, y1)
+        s = eng.stats()["autotune"]
+        assert s["misses"] == 1 and s["cache_entries"] == 1
+        assert s["timed"] + s["rejected"] == s["swept"]
+        # second call for the same (class, width): pure cache hit
+        eng.autotune("g0", 16)
+        assert eng.stats()["autotune"]["hits"] == 1

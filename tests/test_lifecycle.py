@@ -60,8 +60,10 @@ class TestClassWasteHandComputed:
 
     def test_formulas_match_documented_contract(self):
         """The telemetry contract (docs/TELEMETRY.md): per class,
-        ell_capacity = Kmax*units*r_block*members, dense_capacity =
-        n_dense_tiles*T^2*members, coo_capacity = coo_nnz*members, and
+        ell_capacity = sum(K*n over bands)*r_block*members (the banded
+        kernel executes each capacity slot at its band's K width; an
+        unbanded class has the single band (Kmax, units)), dense_capacity
+        = n_dense_tiles*T^2*members, coo_capacity = coo_nnz*members, and
         the fracs follow from members' true meta nnz."""
         eng = Engine()
         metas = {}
@@ -73,7 +75,10 @@ class TestClassWasteHandComputed:
             members = [(s, m) for s, m in metas.values() if s == sc]
             m = len(members)
             assert entry["members"] == m
-            assert entry["ell_capacity"] == \
+            band_macs = sum(k * n for k, n in sc.bands)
+            assert sum(n for _, n in sc.bands) == sc.ell_units
+            assert entry["ell_capacity"] == band_macs * sc.r_block * m
+            assert entry["ell_capacity"] <= \
                 sc.ell_kmax * sc.ell_units * sc.r_block * m
             assert entry["dense_capacity"] == \
                 sc.n_dense_tiles * sc.tile * sc.tile * m

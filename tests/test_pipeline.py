@@ -304,3 +304,68 @@ class TestThreadedPipelineRealEngine:
         assert snap["dispatch_errors"] == 0
         assert snap["pipelined"] is True
         assert queue.inflight() == 0
+
+
+class TestAdaptiveInflight:
+    def test_window_tracks_observed_overlap(self):
+        queue, engine, clock = _pipe_queue(max_inflight=4,
+                                           adaptive_inflight=True)
+        pipe = queue.pipeline
+        assert pipe.inflight_cap == 4 and pipe.max_inflight == 4
+        # completion always blocked on the host: overlap 0 -> window
+        # collapses to 1 (pipelining buys nothing, stop paying latency)
+        for _ in range(20):
+            pipe._observe_overlap(1.0, 1.0)
+        assert pipe.max_inflight == 1
+        assert pipe.overlap_ewma == pytest.approx(0.0)
+        # compute fully hides staging again: window earns the cap back,
+        # smoothly (EWMA), never overshooting [1, cap]
+        seen = []
+        for _ in range(20):
+            pipe._observe_overlap(0.0, 1.0)
+            seen.append(pipe.max_inflight)
+        assert seen == sorted(seen)
+        assert all(1 <= m <= 4 for m in seen)
+        assert pipe.max_inflight == 4
+
+    def test_overlap_clamped_to_unit_interval(self):
+        queue, engine, clock = _pipe_queue(max_inflight=3,
+                                           adaptive_inflight=True)
+        pipe = queue.pipeline
+        pipe._observe_overlap(5.0, 1.0)    # wait > device: clamp at 0
+        assert pipe.overlap_ewma == 0.0 and pipe.max_inflight == 1
+        pipe.overlap_ewma = None
+        pipe._observe_overlap(-1.0, 1.0)   # clock skew: clamp at 1
+        assert pipe.overlap_ewma == 1.0 and pipe.max_inflight == 3
+
+    def test_disabled_by_default_window_stays_fixed(self):
+        queue, engine, clock = _pipe_queue(max_inflight=4)
+        _warm(engine, bss=(2,))
+        for i in range(6):
+            queue.submit("g0", _x(float(i)))
+        queue.pump()
+        queue.drain()
+        pipe = queue.pipeline
+        assert pipe.adaptive_inflight is False
+        assert pipe.overlap_ewma is None
+        assert pipe.max_inflight == pipe.inflight_cap == 4
+
+    def test_end_to_end_adapts_and_completes(self):
+        # a slow device with instant staging: real traffic must feed the
+        # EWMA and keep the live window inside [1, cap], with every
+        # future still resolving
+        queue, engine, clock = _pipe_queue(max_inflight=4,
+                                           adaptive_inflight=True,
+                                           engine_kw={"base_s": 1.0})
+        _warm(engine, bss=(2,))
+        futs = [queue.submit("g0", _x(float(i))) for i in range(12)]
+        queue.pump()
+        queue.drain()
+        pipe = queue.pipeline
+        assert all(f.done() for f in futs)
+        assert pipe.overlap_ewma is not None
+        assert 1 <= pipe.max_inflight <= pipe.inflight_cap
+        snap = pipe.snapshot()
+        assert snap["adaptive_inflight"] is True
+        assert snap["inflight_cap"] == 4
+        assert snap["overlap_ewma"] == pytest.approx(pipe.overlap_ewma)

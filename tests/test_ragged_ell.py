@@ -271,3 +271,65 @@ class TestEngineRagged:
         # evicted width recompiles: miss, not hit
         eng.spmm("g", rng.standard_normal((200, 4)).astype(np.float32))
         assert eng.stats()["cache_misses"] == 4
+
+
+# ------------------------------------ density-sorted v2 + tuning (ISSUE 7) --
+class TestDensitySortedV2:
+    def test_partition_emits_descending_k_units(self):
+        # the v2 layout contract: units sorted by K descending at
+        # partition time, segments a descending run-length encoding
+        for name in ("single_k", "mixed_k", "ell_overflow"):
+            _, part, meta = _edge(name)
+            unit_k = np.asarray(part.ell.unit_k)
+            if unit_k.size == 0:
+                continue
+            assert (np.diff(unit_k) <= 0).all(), \
+                f"{name}: unit_k not K-descending: {unit_k}"
+            ks = [k for k, _ in meta.ell_segments]
+            assert ks == sorted(ks, reverse=True) and len(set(ks)) == len(ks)
+            assert sum(n for _, n in meta.ell_segments) == unit_k.size
+
+    def test_unit_permutation_bitwise(self):
+        # each unit's FMA chain lives entirely inside one kernel-body
+        # execution, so the sorted (banded) layout must reproduce the
+        # unsorted launch bitwise, unit for unit
+        _, part, meta = _edge("mixed_k")
+        u = part.ell.cols.shape[0]
+        f = 24
+        bt = jnp.asarray(
+            RNG.standard_normal((meta.n_col_tiles, meta.tile, f)),
+            jnp.float32)
+        got_sorted = ragged_ell_spmm(
+            part.ell.cols, part.ell.vals, part.ell.tile_col,
+            part.ell.unit_k, bt, segments=tuple(meta.ell_segments),
+            interpret=True)
+        perm = np.random.default_rng(3).permutation(u)
+        got_shuffled = ragged_ell_spmm(
+            part.ell.cols[perm], part.ell.vals[perm],
+            part.ell.tile_col[perm], part.ell.unit_k[perm], bt,
+            interpret=True)
+        np.testing.assert_array_equal(np.asarray(got_sorted)[perm],
+                                      np.asarray(got_shuffled))
+
+    @pytest.mark.parametrize("cfg", [
+        {"bf": 32, "gu": 1, "buffer_depth": 4, "max_bands": 1},
+        {"bf": 128, "gu": 4, "buffer_depth": 2, "max_bands": 4},
+        {"bf": 64, "gu": 2, "buffer_depth": 2, "max_bands": 2},
+    ])
+    def test_tuned_config_bitwise_equal_default(self, cfg):
+        # every legal tuned launch reorganizes the grid, never a unit's
+        # accumulation chain -> bitwise equality with the default
+        a, part, meta = _edge("mixed_k")
+        b = jnp.asarray(RNG.standard_normal((a.shape[1], 24)), jnp.float32)
+        default = kops.ell_matmul(part, b, meta)
+        tuned = kops.ell_matmul(part, b, meta, ell_tune=cfg)
+        np.testing.assert_array_equal(np.asarray(default), np.asarray(tuned))
+
+    def test_auto_gu_respects_vmem_budget(self):
+        from repro.kernels.ell_spmm import auto_gu
+        # tiny whole-B residency -> batch aggressively
+        assert auto_gu(32, 8, 16, 4, 64, 32) == 8
+        # 2000*64*128*4B B operand blows 16 MiB -> per-unit streaming
+        assert auto_gu(64, 8, 16, 2000, 64, 128) == 1
+        # fewer units than any batch size -> 1
+        assert auto_gu(1, 8, 16, 4, 64, 32) == 1

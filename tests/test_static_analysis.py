@@ -134,6 +134,22 @@ class TestKernelPass:
         findings = check_contract(c, scalar_args=(tile_col, unit_k))
         assert "index-map-bounds" in _rules(findings)
 
+    def test_oversized_buffer_depth_blows_vmem(self):
+        # the ragged contract is legal at the default pipeline depth but
+        # a runaway buffer_depth multiplies the resident working set
+        # past the 16 MiB budget — exactly the candidate class the
+        # autotuner must reject before ever timing it
+        u, r, kmax, nct, t, f = 6, 8, 5, 3, 64, 32
+        scalars = (np.full((u,), nct - 1, np.int32),
+                   np.full((u,), kmax, np.int32))
+        good = ragged_ell_contract(u, r, kmax, nct, t, f, bf=32)
+        assert _errors(check_contract(good, scalar_args=scalars,
+                                      backend="tpu")) == []
+        bad = ragged_ell_contract(u, r, kmax, nct, t, f, bf=32,
+                                  buffer_depth=4096)
+        assert "vmem-budget" in _rules(check_contract(
+            bad, scalar_args=scalars, backend="tpu"))
+
     def test_fixture_class_contracts_clean(self):
         engine = fixture_engine()
         h = engine.handle("lint-fixture")
@@ -267,6 +283,31 @@ class TestBenchCheck:
         path = tmp_path / "BENCH_bad.json"
         path.write_text(doc)
         assert _errors(check_bench_file(path))
+
+    def test_required_metrics_enforced(self, tmp_path):
+        # a bench_spmm trajectory missing one of the kernel-health
+        # metrics regressed its reporting contract -> schema error
+        path = tmp_path / "BENCH_spmm.json"
+        write_bench_json(path, "bench_spmm", "bench_spmm --smoke",
+                         "2026-08-08",
+                         {"cora": {"launches_per_spmm": 1,
+                                   "ell_pad_waste_x": 6.0}})
+        (finding,) = _errors(check_bench_file(path))
+        assert "achieved_roofline_frac" in finding.message
+        write_bench_json(path, "bench_spmm", "bench_spmm --smoke",
+                         "2026-08-08",
+                         {"cora": {"launches_per_spmm": 1,
+                                   "ell_pad_waste_x": 6.0,
+                                   "achieved_roofline_frac": 0.004}})
+        assert check_bench_file(path) == []
+
+    def test_required_metrics_scoped_to_bench(self, tmp_path):
+        # other benches carry no required set — the suffix match must
+        # not leak bench_spmm's contract onto them
+        path = tmp_path / "BENCH_other.json"
+        write_bench_json(path, "bench_other", "bench_other", "2026-08-08",
+                         {"ms": 1.0})
+        assert check_bench_file(path) == []
 
     def test_committed_trajectories_valid(self, repo_root):
         findings = check_bench_files(repo_root)
