@@ -41,10 +41,11 @@ import time
 
 import numpy as np
 
+from repro.obs.metrics import percentile
 from repro.serving import (Arrival, RequestQueue, attach_resolve_probe,
                            bursty_trace, poisson_trace, replay_trace,
                            run_lifecycle_smoke, run_pipeline_smoke,
-                           run_smoke)
+                           run_smoke, run_trace_smoke)
 
 
 def make_family(n_graphs: int, f_in: int, hidden: int, n_classes: int,
@@ -108,8 +109,8 @@ def run_baseline(engine, trace, xs) -> dict:
     lat_ms = np.asarray(lat) * 1e3
     return {"mode": "call-at-a-time", "batches": len(trace),
             "mean_batch": 1.0, "pad_occupancy": 1.0,
-            "p50_ms": float(np.percentile(lat_ms, 50)),
-            "p99_ms": float(np.percentile(lat_ms, 99)),
+            "p50_ms": percentile(lat_ms, 50),
+            "p99_ms": percentile(lat_ms, 99),
             "deadline_misses": 0, "wall_s": wall,
             "req_per_s": len(trace) / wall}
 
@@ -152,7 +153,7 @@ def run_queue(engine, trace, xs, *, target_batch: int,
            "deadline_misses": snap["deadline_misses"], "wall_s": wall,
            "req_per_s": len(trace) / wall,
            "queue_delay_ms": float(sojourn_ms.mean()),
-           "sojourn_p99_ms": float(np.percentile(sojourn_ms, 99)),
+           "sojourn_p99_ms": percentile(sojourn_ms, 99),
            "overlap_ratio": snap["overlap_ratio"],
            "inflight_peak": snap["inflight_peak"]}
     return res, outs, queue
@@ -278,12 +279,18 @@ if __name__ == "__main__":
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write a BENCH_*.json perf-trajectory file "
                          "(schema checked by lint_repro --bench-check)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="with --smoke: write the traced run's Perfetto "
+                         "JSON here (loadable in ui.perfetto.dev; "
+                         "analyzed offline by scripts/trace_report.py)")
     args = ap.parse_args()
     if args.smoke and args.pipeline:
-        results = {"pipeline_smoke": run_pipeline_smoke()}
+        results = {"pipeline_smoke": run_pipeline_smoke(
+            trace_path=args.trace)}
     elif args.smoke:
         results = {"smoke": run_smoke(),
-                   "lifecycle": run_lifecycle_smoke()}
+                   "lifecycle": run_lifecycle_smoke(),
+                   "tracing": run_trace_smoke(trace_path=args.trace)}
     else:
         results = run(args.graphs, args.requests, args.rate,
                       target_batch=args.target_batch,

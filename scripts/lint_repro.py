@@ -55,6 +55,7 @@ CHANGED_MAP = (
     ("src/repro/core/*", {"jaxpr", "kernel"}),
     ("src/repro/engine/*", {"jaxpr", "kernel", "concurrency"}),
     ("src/repro/serving/*", {"concurrency"}),
+    ("src/repro/obs/*", {"concurrency"}),
     ("src/repro/analysis/*", set(ALL_PASSES)),
     ("scripts/lint_repro.py", set(ALL_PASSES)),
     ("BENCH_*.json", {"bench"}),

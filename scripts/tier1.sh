@@ -27,8 +27,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # serial AND pipelined dispatch on the overlap-modeling stub — asserts
 # outputs bitwise-equal between modes, >=2x lower mean queue delay
 # pipelined, zero added deadline misses, and the in-flight window bound.
+# A third traced run writes a Perfetto JSON artifact; trace_report then
+# re-derives the critical path from spans alone and --assert-complete
+# fails the tier on any unclosed span tree or an overlap ratio that
+# disagrees with the pipeline's own accounting by more than 10%.
+TRACE_OUT="${TRACE_OUT:-$(mktemp -t tier1-trace-XXXXXX.json)}"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python benchmarks/bench_serving.py --smoke --pipeline
+    python benchmarks/bench_serving.py --smoke --pipeline \
+    --trace "$TRACE_OUT"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python scripts/trace_report.py "$TRACE_OUT" --assert-complete
 # Docs check: the serving API docstring examples actually run, and every
 # internal link in README.md + docs/ resolves (files and anchors).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

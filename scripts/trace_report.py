@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Critical-path report over an exported serving trace.
+
+Usage:
+    python scripts/trace_report.py TRACE.json [--assert-complete] [--json OUT]
+
+Reads a Chrome-trace/Perfetto JSON file written by
+``repro.obs.export.write_chrome_trace`` (e.g. via
+``benchmarks/bench_serving.py --smoke --pipeline --trace TRACE.json``)
+and prints, from spans alone: per-stage p50/p99, each request's
+dominant stage, the measured staging/device overlap ratio cross-checked
+against the pipeline's own ``overlap_ewma``/``overlap_ratio``, and
+padded-MAC waste per shape class.
+
+``--assert-complete`` exits nonzero unless every per-request span tree
+is closed (no orphans, no unclosed spans, no ring wrap) AND the
+span-measured overlap ratio lands within 10% of the ratio the pipeline
+reported — the CI gate for the tier-1 trace artifact.
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import report as obs_report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file to analyze")
+    ap.add_argument("--assert-complete", action="store_true",
+                    help="exit 1 on incomplete span trees or an overlap "
+                         "mismatch beyond 10%%")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write the analysis bundle as JSON")
+    args = ap.parse_args(argv)
+
+    doc = obs_report.load_trace(args.trace)
+    rep = obs_report.report(doc)
+    print(obs_report.format_report(rep))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(rep, fh, indent=1, sort_keys=True)
+
+    if args.assert_complete:
+        if rep["problems"]:
+            print(f"FAIL: {len(rep['problems'])} completeness problem(s)",
+                  file=sys.stderr)
+            return 1
+        if not rep["overlap"]["ok"]:
+            print("FAIL: span-measured overlap disagrees with the "
+                  "pipeline's reported ratio by more than 10%",
+                  file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

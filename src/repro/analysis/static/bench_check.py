@@ -6,26 +6,37 @@ anything. The schema is deliberately flat and tiny:
 
     {
       "bench":   "bench_spmm",           # which benchmark wrote it
-      "schema":  1,                      # format version
+      "schema":  2,                      # format version
       "created": "2026-08-08",           # ISO date of the run
       "command": "bench_spmm --smoke",   # how to reproduce
+      "provenance": {                    # where the numbers came from
+        "git_sha":     "b93d566...",     #   (schema 2: a trajectory
+        "jax_version": "0.9.0",          #   point without its code +
+        "backend":     "cpu"             #   runtime identity cannot be
+      },                                 #   compared across PRs)
       "metrics": {"spmm.ragged_ms": 1.9, ...}   # flat str -> number
     }
 
 ``lint_repro.py --bench-check`` fails the lint if a committed trajectory
 file does not parse or violates this schema — a malformed file is worse
 than no file, because a future regression gate would silently skip it.
+Schema 2 added the ``provenance`` block; ``write_bench_json`` collects
+it automatically (best-effort fallbacks keep the writers dependency-
+free), and schema-1 files fail the check until reseeded.
 """
 from __future__ import annotations
 
 import json
 import numbers
+import subprocess
 from pathlib import Path
 from typing import List
 
 from repro.analysis.static.report import Finding
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+
+PROVENANCE_KEYS = ("git_sha", "jax_version", "backend")
 
 # Per-bench required metric names (suffix-matched against the flat
 # dotted keys): a trajectory file for that bench missing one of these
@@ -56,14 +67,41 @@ def flatten_metrics(obj, prefix: str = "") -> dict:
     return out
 
 
+def collect_provenance() -> dict:
+    """Best-effort run provenance for a trajectory file.
+
+    Every value is a non-empty string by construction — the schema
+    check requires that, and a writer must never fail because git or
+    jax is unavailable ("unknown"/"none" record that honestly).
+    """
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    try:
+        import jax
+        jax_version = jax.__version__
+        backend = jax.default_backend()
+    except Exception:       # noqa: BLE001 — provenance must not fail a run
+        jax_version = "none"
+        backend = "cpu"
+    return {"git_sha": sha or "unknown",
+            "jax_version": jax_version or "none",
+            "backend": backend or "cpu"}
+
+
 def write_bench_json(path, bench: str, command: str, created: str,
                      results: dict) -> dict:
-    """Flatten ``results`` and write a schema-1 trajectory file."""
+    """Flatten ``results`` and write a schema-2 trajectory file
+    (provenance auto-collected; callers pass only the run facts)."""
     doc = {
         "bench": bench,
         "schema": SCHEMA_VERSION,
         "created": created,
         "command": command,
+        "provenance": collect_provenance(),
         "metrics": flatten_metrics(results),
     }
     Path(path).write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
@@ -92,6 +130,16 @@ def check_bench_file(path) -> List[Finding]:
     if doc.get("schema") != SCHEMA_VERSION:
         findings.append(err(f"schema must be {SCHEMA_VERSION}, "
                             f"got {doc.get('schema')!r}"))
+    prov = doc.get("provenance")
+    if not isinstance(prov, dict):
+        findings.append(err("missing provenance object (schema 2: "
+                            "git_sha / jax_version / backend)"))
+    else:
+        for key in PROVENANCE_KEYS:
+            if not isinstance(prov.get(key), str) or not prov.get(key):
+                findings.append(err(
+                    f"provenance.{key} must be a non-empty string, "
+                    f"got {prov.get(key)!r}"))
     metrics = doc.get("metrics")
     if not isinstance(metrics, dict) or not metrics:
         findings.append(err("metrics must be a non-empty object"))

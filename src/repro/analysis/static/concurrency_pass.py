@@ -39,7 +39,7 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 from repro.analysis.static.report import Finding, scan_waivers
 
 # Default scope (relative to the repo root).
-SCOPE_DIRS = ("src/repro/serving", "src/repro/engine")
+SCOPE_DIRS = ("src/repro/serving", "src/repro/engine", "src/repro/obs")
 
 # Classes whose non-underscore methods constitute the user-thread API.
 ENTRY_CLASSES = frozenset({"Engine", "RequestQueue"})
@@ -67,6 +67,15 @@ LOCK_ORDER = (
     "Engine._stack_lock",
     "ExecutorCache._lock",
     "LatencyModel._lock",
+    # Metric primitives are leaves: any component may update a Counter/
+    # Histogram while holding its own lock, so these come last and must
+    # never wrap a component lock.
+    "MetricsRegistry._lock",
+    "Counter._lock",
+    "Gauge._lock",
+    "Histogram._lock",
+    "CounterFamily._lock",
+    "Tracer._lock",
 )
 
 _MAX_DEPTH = 16

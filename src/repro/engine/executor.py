@@ -20,23 +20,63 @@ so executor calls pay no host-to-device transfer for the graph itself.
 from __future__ import annotations
 
 import collections
-import dataclasses
 import threading
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.hybrid_spmm import gcn_forward, hybrid_spmm
+from repro.obs.metrics import Counter, MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 from .shape_class import ShapeClass
 
 
-@dataclasses.dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    evictions: int = 0     # dropped by LRU capacity pressure
-    invalidations: int = 0  # dropped because the class was retired
+    """Executor-cache telemetry on `repro.obs.metrics` counters.
+
+    One `Counter` per field — the unified metrics backing store — while
+    the legacy integer attribute surface (``stats.hits`` etc.) survives
+    as read-only properties, so external readers (the frontend's
+    cold-detect delta on ``stats.misses``, tests, benchmark prints) are
+    unchanged. Mutation goes through the ``inc_*`` methods; multi-field
+    coherence still comes from the owning ``ExecutorCache._lock`` — a
+    counter's own lock only makes its single value race-free.
+    """
+
+    def __init__(self, prefix: str = "cache", registry=None):
+        self._hits = Counter(prefix + ".hits", registry)
+        self._misses = Counter(prefix + ".misses", registry)
+        self._evictions = Counter(prefix + ".evictions", registry)
+        self._invalidations = Counter(prefix + ".invalidations", registry)
+
+    def inc_hits(self, n: int = 1) -> None:
+        self._hits.inc(n)
+
+    def inc_misses(self, n: int = 1) -> None:
+        self._misses.inc(n)
+
+    def inc_evictions(self, n: int = 1) -> None:
+        self._evictions.inc(n)
+
+    def inc_invalidations(self, n: int = 1) -> None:
+        self._invalidations.inc(n)
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
+
+    @property
+    def invalidations(self) -> int:
+        return self._invalidations.value
 
     @property
     def total(self) -> int:
@@ -64,8 +104,15 @@ class ExecutorCache:
         self.ell_dispatch = ell_dispatch
         self.max_entries = max_entries
         self._fns: collections.OrderedDict = collections.OrderedDict()
-        self.stats = CacheStats()
+        # Unified metrics backing store: the global cache counters live
+        # in this registry (`stats_snapshot` re-exports them); per-class
+        # CacheStats stay registry-less (their names would collide).
+        self.metrics = MetricsRegistry()
+        self.stats = CacheStats("cache", self.metrics)
         self._class_stats: dict = {}   # ShapeClass -> CacheStats
+        # Observability hooks (repro.obs): cache.hit/cache.miss instant
+        # events. Off by default; `Engine.attach_tracer` swaps it in.
+        self.tracer = NULL_TRACER
         # Autotuned ragged-kernel configs, ShapeClass -> sorted item
         # tuple. Part of every executor key, so applying a new winner
         # can never alias a stale compiled executor.
@@ -82,27 +129,34 @@ class ExecutorCache:
     def _per_class(self, sc: ShapeClass) -> CacheStats:
         st = self._class_stats.get(sc)
         if st is None:
-            st = self._class_stats[sc] = CacheStats()
+            st = self._class_stats[sc] = CacheStats("cache.class")
         return st
 
     def _get(self, key, build):
+        tr = self.tracer
         with self._lock:
             sc = key[1]
             cls = self._per_class(sc)
             fn = self._fns.get(key)
             if fn is None:
-                self.stats.misses += 1
-                cls.misses += 1
+                self.stats.inc_misses()
+                cls.inc_misses()
+                if tr.enabled:
+                    tr.instant("cache.miss", "engine",
+                               args={"kind": key[0]})
                 fn = build()
                 self._fns[key] = fn
                 while len(self._fns) > self.max_entries:
                     old_key, _ = self._fns.popitem(last=False)   # LRU out
-                    self.stats.evictions += 1
-                    self._per_class(old_key[1]).evictions += 1
+                    self.stats.inc_evictions()
+                    self._per_class(old_key[1]).inc_evictions()
             else:
                 self._fns.move_to_end(key)                       # mark MRU
-                self.stats.hits += 1
-                cls.hits += 1
+                self.stats.inc_hits()
+                cls.inc_hits()
+                if tr.enabled:
+                    tr.instant("cache.hit", "engine",
+                               args={"kind": key[0]})
             return fn
 
     def __len__(self) -> int:
@@ -155,8 +209,8 @@ class ExecutorCache:
             for key in dead:
                 del self._fns[key]
             if dead:
-                self.stats.invalidations += len(dead)
-                self._per_class(sc).invalidations += len(dead)
+                self.stats.inc_invalidations(len(dead))
+                self._per_class(sc).inc_invalidations(len(dead))
             return len(dead)
 
     # -------------------------------------------------------- autotune -----

@@ -287,9 +287,18 @@ class LifecycleManager:
                   "breaching": sum(1 for t in self._tracks.values()
                                    if t.breaches > 0)}
 
+        # Engine-attached tracer (repro.obs): retirements and skips show
+        # up as instant events on the trace timeline, aligned with the
+        # drain/dispatch spans they explain. `getattr` keeps the manager
+        # engine-agnostic — StubEngine needs no tracer attribute.
+        tracer = getattr(self.engine, "tracer", None)
+
         def skip(reason):
             window["skipped"][reason] = window["skipped"].get(reason, 0) + 1
             self.skipped[reason] = self.skipped.get(reason, 0) + 1
+            if tracer is not None and tracer.enabled:
+                tracer.instant("lifecycle.skip", "lifecycle",
+                               args={"reason": reason})
 
         lull = getattr(self.frontend, "retirement_lull", None)
         for sc in candidates:
@@ -329,6 +338,11 @@ class LifecycleManager:
                 track.defers += 1
                 skip("deferred")
                 continue
+            if tracer is not None and tracer.enabled:
+                tracer.instant("lifecycle.retire", "lifecycle",
+                               args={"class": self._summary(sc),
+                                     "reclassed": len(plan.names),
+                                     "new_classes": plan.n_new_classes})
             window["retired"].append(self._summary(sc))
             window["reclassed"] += len(plan.names)
             window["recompiles"] += plan.n_new_classes

@@ -41,6 +41,8 @@ import jax.tree_util as jtu
 from repro.core.formats import CSRMatrix, PartitionMeta, TriPartition
 from repro.core.partition import PartitionConfig, analyze_and_partition
 from repro.core.reorder import reorder as reorder_csr
+from repro.obs.metrics import Counter, MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 
 from .executor import ExecutorCache
 from .lifecycle import RetirementPlan
@@ -101,15 +103,41 @@ class Engine:
         # infer() calls. Per-member padding stays outside the lock (no
         # shared state); only the OrderedDict bookkeeping is inside.
         self._stack_lock = threading.Lock()
-        self.stack_hits = 0
-        self.stack_misses = 0
-        self.stack_evictions = 0
+        # Stack-cache telemetry on the unified metrics registry
+        # (repro.obs.metrics); the legacy int attributes survive as
+        # read-only properties below. Increments happen under
+        # _stack_lock, which keeps the hit/miss/evict triple coherent.
+        self.metrics = MetricsRegistry()
+        self._stack_hits = Counter("engine.stack_hits", self.metrics)
+        self._stack_misses = Counter("engine.stack_misses", self.metrics)
+        self._stack_evictions = Counter("engine.stack_evictions",
+                                        self.metrics)
+        # Request tracer (repro.obs.trace): off by default; a serving
+        # frontend constructed with `tracer=` calls `attach_tracer`,
+        # which also fans the tracer out to the executor cache and the
+        # autotuner so cache.hit/miss and sweep instants land in the
+        # same ring.
+        self.tracer = NULL_TRACER
         self._frontend = None   # attached repro.serving.RequestQueue
         self._lifecycle = None  # attached LifecycleManager
         # Ragged-kernel autotuner (lazy — first autotune() call builds
         # it). ``autotune_cache`` names the on-disk winner cache.
         self._autotune_cache = autotune_cache
         self._tuner = None
+
+    # Legacy integer reads of the stack-cache counters (tests and the
+    # benchmark prints use these; the backing store is the registry).
+    @property
+    def stack_hits(self) -> int:
+        return self._stack_hits.value
+
+    @property
+    def stack_misses(self) -> int:
+        return self._stack_misses.value
+
+    @property
+    def stack_evictions(self) -> int:
+        return self._stack_evictions.value
 
     # --------------------------------------------------------- offline -----
     def register(self, name: str, csr: CSRMatrix, *,
@@ -204,6 +232,7 @@ class Engine:
         if self._tuner is None or timer is not None:
             self._tuner = Autotuner(cache_path=self._autotune_cache,
                                     timer=timer)
+            self._tuner.tracer = self.tracer
         cfg = self._tuner.tune(h.sclass, int(f))
         self.executors.set_tuned(h.sclass, cfg)
         return cfg
@@ -315,10 +344,16 @@ class Engine:
         def pad(h, x, xp):
             return xp if xp is not None else self._pad_x(h, x)
 
+        tr = self.tracer
         if len(members) == 1:
             i, h, x, xp = members[0]
+            sp_pad = -1
+            if tr.enabled:
+                sp_pad = tr.begin("pad", "engine", args={"n": 1})
             fn = self.executors.gcn(sc, f_in, w_shapes)
-            outs = [self._unpad_y(h, fn(h.part, pad(h, x, xp), h.weights))]
+            xpad = pad(h, x, xp)
+            tr.end(sp_pad)
+            outs = [self._unpad_y(h, fn(h.part, xpad, h.weights))]
             return outs, self._completion_meta(outs, misses0)
         # Canonicalize group order by name so (g0,g1) and (g1,g0)
         # share one cached stack, then pad to the next power-of-two
@@ -328,12 +363,16 @@ class Engine:
         members.sort(key=lambda m: m[1].name)
         bs = 1 << (len(members) - 1).bit_length()
         padded = members + [members[-1]] * (bs - len(members))
+        sp_pad = -1
+        if tr.enabled:
+            sp_pad = tr.begin("pad", "engine",
+                              args={"n": len(members), "batch": bs})
         fn = self.executors.gcn_batched(sc, f_in, w_shapes, bs)
         stack_key = tuple(h.name for _, h, _, _ in padded)
         with self._stack_lock:
             stacks = self._stacks.get(stack_key)
             if stacks is None:
-                self.stack_misses += 1
+                self._stack_misses.inc()
                 part_stack = jtu.tree_map(
                     lambda *leaves: jnp.stack(leaves),
                     *[h.part for _, h, _, _ in padded])
@@ -342,13 +381,14 @@ class Engine:
                     *[h.weights for _, h, _, _ in padded])
                 while len(self._stacks) >= self._max_stacks:
                     self._stacks.popitem(last=False)       # LRU out
-                    self.stack_evictions += 1
+                    self._stack_evictions.inc()
                 stacks = self._stacks[stack_key] = (part_stack, w_stack)
             else:
                 self._stacks.move_to_end(stack_key)        # mark MRU
-                self.stack_hits += 1
+                self._stack_hits.inc()
         part_stack, w_stack = stacks
         x_stack = jnp.stack([pad(h, x, xp) for _, h, x, xp in padded])
+        tr.end(sp_pad)
         ys = fn(part_stack, x_stack, w_stack)
         results: list = [None] * len(members)
         for j, (i, h, _, _) in enumerate(members):
@@ -412,6 +452,17 @@ class Engine:
     LAUNCH_FLOOR_S = 2e-3
 
     # ----------------------------------------------------------- stats -----
+    def attach_tracer(self, tracer) -> None:
+        """Install a `repro.obs.trace.Tracer` and fan it out to the
+        engine's sub-components (executor cache; the autotuner when it
+        exists) so engine-side spans and instants land in the same ring
+        as the serving frontend's. `RequestQueue(..., tracer=...)` calls
+        this; passing `NULL_TRACER` turns engine tracing back off."""
+        self.tracer = tracer
+        self.executors.tracer = tracer
+        if self._tuner is not None:
+            self._tuner.tracer = tracer
+
     def attach_frontend(self, frontend) -> None:
         """Register a serving frontend (`repro.serving.RequestQueue`) so
         its `ServerStats` surface through ``stats()["serving"]``. One

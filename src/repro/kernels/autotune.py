@@ -126,6 +126,11 @@ class Autotuner:
         self.swept = 0
         self.rejected = 0
         self.timed = 0
+        # Optional repro.obs tracer: `Engine.attach_tracer` fans it out
+        # here so every sweep lands as an `autotune.sweep` instant on
+        # the trace timeline. None = no tracing (the tuner is usable
+        # without an engine).
+        self.tracer = None
 
     # ------------------------------------------------------------ keys -----
     def cache_key(self, sc, f: int) -> str:
@@ -203,9 +208,14 @@ class Autotuner:
         if not sc.ell_units or not sc.ell_kmax:
             return {}
         key = self.cache_key(sc, f)
+        tr = self.tracer
         cached = self.cache.get(key)
         if cached is not None:
             self.hits += 1
+            if tr is not None and tr.enabled:
+                tr.instant("autotune.sweep", "autotune",
+                           args={"sclass": sc.summary(), "cached": True,
+                                 "winner": dict(cached["config"])})
             return dict(cached["config"])
         self.misses += 1
         data = None
@@ -227,6 +237,10 @@ class Autotuner:
         winner = {} if best is None else dict(best[1])
         self.cache.put(key, {"config": winner,
                              "ms": None if best is None else best[0] * 1e3})
+        if tr is not None and tr.enabled:
+            tr.instant("autotune.sweep", "autotune",
+                       args={"sclass": sc.summary(), "cached": False,
+                             "swept": self.swept, "winner": dict(winner)})
         return dict(winner)
 
     def stats(self) -> dict:

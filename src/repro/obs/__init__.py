@@ -1,0 +1,23 @@
+"""Observability: span tracing, typed metrics, Perfetto export.
+
+``obs`` is the single home for the serving stack's telemetry plumbing:
+
+- :mod:`repro.obs.trace` — ring-buffered span tracer, lock-free on the
+  hot path, with explicit parent ids so spans survive thread hops
+  between the staging workers, the drainer, and the submit thread.
+- :mod:`repro.obs.metrics` — typed Counter/Gauge/Histogram registry
+  backing ``ServerStats``, ``ExecutorCache`` telemetry and the
+  ``Engine.stats()`` re-export, plus the one shared percentile helper.
+- :mod:`repro.obs.export` — Chrome-trace/Perfetto JSON export (one
+  track per thread + a virtual "device window" track).
+- :mod:`repro.obs.report` — offline critical-path analysis consumed by
+  ``scripts/trace_report.py``.
+"""
+from repro.obs.metrics import (Counter, CounterFamily, Gauge, Histogram,
+                               MetricsRegistry, percentile, percentile_ms)
+from repro.obs.trace import NULL_TRACER, Tracer
+
+__all__ = [
+    "Counter", "CounterFamily", "Gauge", "Histogram", "MetricsRegistry",
+    "percentile", "percentile_ms", "Tracer", "NULL_TRACER",
+]

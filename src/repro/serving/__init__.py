@@ -26,7 +26,7 @@ from .stats import ServerStats, SimClock
 from .simulate import (Arrival, StubEngine, StubShapeClass,
                        attach_resolve_probe, bursty_trace, poisson_trace,
                        replay_trace, run_lifecycle_smoke,
-                       run_pipeline_smoke, run_smoke)
+                       run_pipeline_smoke, run_smoke, run_trace_smoke)
 
 __all__ = [
     "DEFAULT_DEADLINE_MS", "AdmissionError", "AdmissionPolicy",
@@ -35,5 +35,5 @@ __all__ = [
     "pow2_ceil", "ServerStats", "SimClock", "Arrival", "StubEngine",
     "StubShapeClass", "attach_resolve_probe", "bursty_trace",
     "poisson_trace", "replay_trace", "run_lifecycle_smoke",
-    "run_pipeline_smoke", "run_smoke",
+    "run_pipeline_smoke", "run_smoke", "run_trace_smoke",
 ]

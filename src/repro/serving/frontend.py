@@ -41,6 +41,8 @@ import threading
 import time
 from typing import Optional
 
+from repro.obs.trace import NULL_TRACER, label
+
 from .latency import LatencyModel
 from .pipeline import DispatchPipeline
 from .scheduler import Scheduler, pow2_ceil
@@ -107,9 +109,11 @@ class RequestQueue:
                  max_linger_ms: Optional[float] = None,
                  clock=time.monotonic, attach: bool = True,
                  pipelined: bool = False, max_inflight: int = 4,
-                 stage_workers: int = 1, adaptive_inflight: bool = False):
+                 stage_workers: int = 1, adaptive_inflight: bool = False,
+                 tracer=None):
         self.engine = engine
         self.clock = clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.default_deadline_ms = default_deadline_ms
         self.admission = admission if admission is not None \
             else AdmissionPolicy()
@@ -137,7 +141,8 @@ class RequestQueue:
                 engine, latency=self.latency, stats=self.stats,
                 clock=self.clock, max_inflight=max_inflight,
                 stage_workers=stage_workers,
-                adaptive_inflight=adaptive_inflight)
+                adaptive_inflight=adaptive_inflight,
+                tracer=self.tracer)
             self.stats.pipelined = True
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
@@ -145,6 +150,12 @@ class RequestQueue:
             attach_fn = getattr(engine, "attach_frontend", None)
             if attach_fn is not None:
                 attach_fn(self)
+        if tracer is not None:
+            # engine-side instrumentation (pad spans, cache hit/miss,
+            # autotune sweeps) reports into the same ring
+            attach_tr = getattr(engine, "attach_tracer", None)
+            if attach_tr is not None:
+                attach_tr(tracer)
 
     # ---------------------------------------------------------- submit ----
     def _group_key(self, name: str, x) -> tuple:
@@ -201,10 +212,12 @@ class RequestQueue:
                 # after stop() no worker will ever dispatch this; admit
                 # nothing rather than strand a future until its timeout
                 self.stats.on_reject("stopped")
+                self._trace_reject(name, "stopped")
                 raise AdmissionError("stopped", "queue worker stopped")
             depth = self.scheduler.depth()
             if pol.max_depth is not None and depth >= pol.max_depth:
                 self.stats.on_reject("depth")
+                self._trace_reject(name, "depth")
                 raise AdmissionError(
                     "depth", f"queue depth {depth} >= {pol.max_depth}")
             if pol.max_wait_ms is not None:
@@ -216,16 +229,48 @@ class RequestQueue:
                     wait_s += self.pipeline.backlog_s()
                 if wait_s * 1e3 > pol.max_wait_ms:
                     self.stats.on_reject("wait")
+                    self._trace_reject(name, "wait")
                     raise AdmissionError(
                         "wait", f"estimated wait {wait_s * 1e3:.1f}ms > "
                                 f"{pol.max_wait_ms}ms")
             fut = RequestFuture()
             self.stats.on_arrival(now)
-            self.scheduler.add(name, x, key, now,
-                               deadline_s=now + deadline_ms / 1e3,
-                               future=fut)
+            req = self.scheduler.add(name, x, key, now,
+                                     deadline_s=now + deadline_ms / 1e3,
+                                     future=fut)
+            tr = self.tracer
+            if tr.sample(req.seq):
+                req.span_request = tr.begin(
+                    "request", "request", req=req.seq,
+                    args={"name": name, "deadline_ms": deadline_ms})
+                req.span_queue = tr.begin(
+                    "queue", "queue", req=req.seq,
+                    parent=req.span_request)
             self._wake.notify_all()
         return fut
+
+    def _trace_reject(self, name: str, reason: str) -> None:
+        """A rejected submission still yields a (trivially closed)
+        request span tree, tagged with a synthetic negative id — the
+        trace-completeness property covers rejects too."""
+        tr = self.tracer
+        if tr.enabled:
+            sid = tr.begin("request", "request", req=tr.reject_id(),
+                           args={"name": name, "rejected": reason})
+            tr.end(sid)
+
+    def _trace_plans(self, plans) -> None:
+        """Close members' queue spans when their batch plan closes —
+        the one place every dispatch path (pump, drain, retirement
+        barrier) funnels through, so queue wait is measured identically
+        in serial and pipelined mode."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        for plan in plans:
+            for r in plan.members:
+                if r.span_queue >= 0:
+                    tr.end(r.span_queue, args={"reason": plan.reason})
 
     # -------------------------------------------------------- dispatch ----
     def _dispatch(self, plan) -> None:
@@ -258,21 +303,33 @@ class RequestQueue:
                 groups.setdefault(self.engine.group_key(r.name, r.x),
                                   []).append(r)
         except Exception as err:   # noqa: BLE001 — futures carry it
-            self.stats.dispatch_errors += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+            self.stats.on_dispatch_error()
+            tr = self.tracer
             for r in plan.members:
                 if r.future is not None and not r.future.cancelled():
                     r.future.set_exception(err)
+                if r.span_request >= 0:
+                    tr.end(r.span_request, args={"error": True})
             return
         for key, members in groups.items():
             self._dispatch_group(key, members, plan.reason)
 
     def _dispatch_group(self, key, members, reason) -> None:
         """One same-key engine dispatch; caller holds the dispatch gate."""
+        tr = self.tracer
+        sp_batch = sp_dev = -1
+        if tr.enabled and any(r.span_request >= 0 for r in members):
+            sp_batch = tr.begin(
+                "dispatch", "serving",
+                args={"reqs": [r.seq for r in members], "reason": reason})
         misses0 = self.engine.executors.stats.misses  # lint: racy-ok(cold-detect delta; over-reports only)
         t0 = self.clock()
         try:
             outs = self.engine.serve_group(
                 [(r.name, r.x) for r in members])
+            # the serial device window: enqueue returned → results ready
+            if sp_batch >= 0:
+                sp_dev = tr.begin("device", "device", parent=sp_batch)
             # JAX dispatch is async: wait for the results, or dt would
             # be enqueue time and every latency/deadline number a lie.
             for y in outs:
@@ -280,15 +337,26 @@ class RequestQueue:
                 if ready is not None:
                     ready()
         except Exception as err:   # noqa: BLE001 — futures carry it
-            self.stats.dispatch_errors += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+            self.stats.on_dispatch_error()
+            tr.end(sp_dev, args={"error": True})
+            tr.end(sp_batch, args={"error": True})
             for r in members:
                 if r.future is not None and not r.future.cancelled():
                     r.future.set_exception(err)
+                if r.span_request >= 0:
+                    tr.end(r.span_request, args={"error": True})
             return
         dt = self.clock() - t0
         now = self.clock()
         padded = pow2_ceil(len(members))
         cold = self.engine.executors.stats.misses > misses0  # lint: racy-ok(cold-detect delta; over-reports only)
+        if sp_dev >= 0:
+            tr.end(sp_dev, args={
+                "reqs": [r.seq for r in members], "live": len(members),
+                "padded": padded, "reason": reason, "cold": cold,
+                "sclass": label(key[0])})
+            if cold:
+                tr.instant("compile_cold", "engine", parent=sp_batch)
         self.latency.observe(key, padded, dt, cold=cold)
         self.stats.on_batch(len(members), padded, reason)
         for r, y in zip(members, outs):
@@ -296,6 +364,10 @@ class RequestQueue:
                 r.future.set_result(y)
             self.stats.on_complete(now - r.submit_s,
                                    missed=now > r.deadline_s)
+            if r.span_request >= 0:
+                tr.end(r.span_request,
+                       args={"missed": now > r.deadline_s})
+        tr.end(sp_batch)
 
     def pump(self) -> int:
         """Close and dispatch every batch due now; returns batches run.
@@ -307,6 +379,7 @@ class RequestQueue:
         """
         with self._lock:
             plans = self.scheduler.poll(self.clock())
+            self._trace_plans(plans)
             # pipelined plans are ENROLLED inside the lock: a plan
             # popped out of the scheduler is the pipeline's
             # responsibility before the lock drops, so drain_class
@@ -333,6 +406,7 @@ class RequestQueue:
         n = self.pump()
         with self._lock:
             plans = self.scheduler.flush()
+            self._trace_plans(plans)
             if self.pipeline is not None:
                 enrolled = [(self.pipeline.enroll(p), p) for p in plans]
         if self.pipeline is not None:
@@ -386,6 +460,7 @@ class RequestQueue:
         with self._lock:
             plans = self.scheduler.close_matching(
                 lambda key: key[0] == sclass)
+            self._trace_plans(plans)
             if self.pipeline is not None:
                 # quiesce FIRST: work the pipeline already owns —
                 # including plans a pump thread enrolled but has not

@@ -48,6 +48,8 @@ from __future__ import annotations
 import threading
 from typing import Callable, Optional
 
+from repro.obs.metrics import Counter, MetricsRegistry
+
 
 class LatencyModel:
     """EWMA of warm dispatch latency, keyed by (group key, batch size).
@@ -82,13 +84,29 @@ class LatencyModel:
         self._ewma: dict = {}      # (key, batch) -> seconds, total
         self._staging: dict = {}   # (key, batch) -> seconds
         self._device: dict = {}    # (key, batch) -> seconds
-        self.observed = 0
-        self.cold_skipped = 0
-        self.prior_hits = 0
+        # Observation counters on the unified metrics backing store
+        # (repro.obs.metrics); legacy int reads stay available as
+        # properties below.
+        self.metrics = MetricsRegistry()
+        self._observed = Counter("latency.observed", self.metrics)
+        self._cold_skipped = Counter("latency.cold_skipped", self.metrics)
+        self._prior_hits = Counter("latency.prior_hits", self.metrics)
         # Pipelined serving observes from the completion drainer while
         # submit/pump threads estimate — _nearest iterates the tables,
         # so unsynchronized inserts would raise mid-iteration.
         self._lock = threading.Lock()
+
+    @property
+    def observed(self) -> int:
+        return self._observed.value
+
+    @property
+    def cold_skipped(self) -> int:
+        return self._cold_skipped.value
+
+    @property
+    def prior_hits(self) -> int:
+        return self._prior_hits.value
 
     def _fold(self, table: dict, k, dt_s: float) -> None:
         prev = table.get(k)
@@ -106,12 +124,11 @@ class LatencyModel:
         pipelined observations stay comparable.
         """
         if cold:
-            with self._lock:
-                self.cold_skipped += 1
+            self._cold_skipped.inc()
             return
         k = (key, int(batch))
         with self._lock:
-            self.observed += 1
+            self._observed.inc()
             if staging_s is not None:
                 self._fold(self._staging, k, staging_s)
             if device_s is not None:
@@ -148,8 +165,7 @@ class LatencyModel:
         if self.prior is not None:
             p = self.prior(key, batch)
             if p is not None:
-                with self._lock:
-                    self.prior_hits += 1
+                self._prior_hits.inc()
                 return float(p)
         return self.default_s
 

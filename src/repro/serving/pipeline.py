@@ -61,6 +61,8 @@ import queue as queue_mod
 import threading
 from typing import Optional
 
+from repro.obs.trace import NULL_TRACER, label
+
 from .scheduler import pow2_ceil
 
 
@@ -78,6 +80,8 @@ class InflightBatch:
     staging_s: float           # host prep + enqueue wall time
     t_enqueued: float          # clock at enqueue return
     done_hint_s: Optional[float] = None   # modeled finish (simulation)
+    span: int = -1             # device-window span id (-1 = untraced);
+                               # begun at enqueue, ended by the drainer
 
     @property
     def padded(self) -> int:
@@ -92,7 +96,7 @@ class DispatchPipeline:
 
     def __init__(self, engine, latency, stats, clock, *,
                  max_inflight: int = 4, stage_workers: int = 1,
-                 adaptive_inflight: bool = False):
+                 adaptive_inflight: bool = False, tracer=None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if stage_workers < 1:
@@ -102,6 +106,7 @@ class DispatchPipeline:
         self.latency = latency
         self.stats = stats
         self.clock = clock
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # ``max_inflight`` is the LIVE window bound (what staging checks);
         # ``inflight_cap`` the configured ceiling. With adaptive_inflight
         # the live bound tracks the observed staging/device overlap: a
@@ -191,16 +196,25 @@ class DispatchPipeline:
         return groups
 
     def _fail(self, members, err: Exception) -> None:
-        self.stats.dispatch_errors += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self.stats.on_dispatch_error()
+        tr = self.tracer
         for r in members:
             if r.future is not None and not r.future.cancelled():
                 r.future.set_exception(err)
+            if r.span_request >= 0:
+                tr.end(r.span_request, args={"error": True})
 
     def _stage_plan(self, seq: int, plan) -> None:
         """Regroup + prepare + enqueue one plan (caller owns ordering)."""
         with self._lock:
             self._queued.pop(seq, None)
             self._staging += 1
+        tr = self.tracer
+        sp_stage = -1
+        if tr.enabled and any(r.span_request >= 0 for r in plan.members):
+            sp_stage = tr.begin(
+                "staging", "serving",
+                args={"reqs": [r.seq for r in plan.members]})
         try:
             try:
                 groups = self._regroup(plan)
@@ -217,8 +231,9 @@ class DispatchPipeline:
                 while self.depth_inflight() >= self.max_inflight:  # lint: racy-ok(single-int window bound; any published value is in [1, cap])
                     self._drain_one(block=True)
                 self._enqueue_group(key, members, plan.reason,
-                                    prepared.get(key))
+                                    prepared.get(key), span_parent=sp_stage)
         finally:
+            tr.end(sp_stage)
             with self._lock:
                 self._staging -= 1
                 # keep the enqueue turnstile in step even inline, so a
@@ -235,7 +250,8 @@ class DispatchPipeline:
         return {key: [self.engine.prepare_x(r.name, r.x) for r in members]
                 for key, members in groups.items()}
 
-    def _enqueue_group(self, key, members, reason, prepared) -> None:
+    def _enqueue_group(self, key, members, reason, prepared, *,
+                       span_parent: int = -1) -> None:
         """One non-blocking same-key engine dispatch -> in-flight entry."""
         t0 = self.clock()
         try:
@@ -259,6 +275,13 @@ class DispatchPipeline:
             cold=bool(meta.get("cold")), ready=meta["ready"],
             complete=meta["complete"], staging_s=now - t0, t_enqueued=now,
             done_hint_s=meta.get("done_s"))
+        tr = self.tracer
+        if tr.enabled and any(r.span_request >= 0 for r in members):
+            # the device window opens HERE (enqueue returned); it closes
+            # on whichever thread drains the batch — explicit span id
+            batch.span = tr.begin(
+                "device", "device", parent=span_parent,
+                args={"reqs": [r.seq for r in members]})
         with self._lock:
             self._inflight.append(batch)
             self._work.notify_all()
@@ -294,6 +317,12 @@ class DispatchPipeline:
     def _finish(self, batch: InflightBatch) -> None:
         """Block until the batch's device work is done; account the
         device segment; resolve the member futures."""
+        tr = self.tracer
+        sp_wait = -1
+        if batch.span >= 0:
+            # host blocked on the device window: trace_report recomputes
+            # the overlap ratio from exactly these wait/device pairs
+            sp_wait = tr.begin("wait_device", "drain", parent=batch.span)
         t0 = self.clock()
         err = None
         try:
@@ -302,10 +331,21 @@ class DispatchPipeline:
             err = e
         now = self.clock()
         if err is not None:
+            tr.end(sp_wait, args={"error": True})
+            tr.end(batch.span, args={"error": True})
             self._fail(batch.members, err)
             return
         wait_s = now - t0
         device_s = now - batch.t_enqueued
+        tr.end(sp_wait)
+        if batch.span >= 0:
+            tr.end(batch.span, args={
+                "reqs": [r.seq for r in batch.members],
+                "live": len(batch.members), "padded": batch.padded,
+                "reason": batch.reason, "cold": batch.cold,
+                "sclass": label(batch.key[0])})
+            if batch.cold:
+                tr.instant("compile_cold", "engine", parent=batch.span)
         if self.adaptive_inflight and device_s > 0:
             self._observe_overlap(wait_s, device_s)
         self.latency.observe(batch.key, batch.padded, cold=batch.cold,
@@ -317,6 +357,9 @@ class DispatchPipeline:
                 r.future.set_result(y)
             self.stats.on_complete(now - r.submit_s,
                                    missed=now > r.deadline_s)
+            if r.span_request >= 0:
+                tr.end(r.span_request,
+                       args={"missed": now > r.deadline_s})
 
     def _observe_overlap(self, wait_s: float, device_s: float) -> None:
         """Fold one batch's staging/device overlap into the live window.
@@ -461,6 +504,13 @@ class DispatchPipeline:
             if item is None:
                 return
             seq, plan = item
+            tr = self.tracer
+            sp_stage = -1
+            if tr.enabled and any(r.span_request >= 0
+                                  for r in plan.members):
+                sp_stage = tr.begin(
+                    "staging", "serving",
+                    args={"reqs": [r.seq for r in plan.members]})
             # parallel part: regroup + pad happen per-worker; the
             # enqueue-order turnstile below serializes device submission
             # in plan-close order so no key can ever reorder internally.
@@ -471,9 +521,14 @@ class DispatchPipeline:
                 err = None
             except Exception as e:     # noqa: BLE001 — futures carry it
                 groups, prepared, err = {}, {}, e
+            sp_turn = -1
+            if sp_stage >= 0:
+                sp_turn = tr.begin("turnstile", "serving",
+                                   parent=sp_stage)
             with self._turn_cv:
                 while self._turn != seq and not self._stop:
                     self._turn_cv.wait(0.05)
+            tr.end(sp_turn)
             try:
                 with self._lock:
                     self._queued.pop(seq, None)
@@ -488,8 +543,10 @@ class DispatchPipeline:
                                    and not self._stop):
                                 self._room.wait(0.05)
                         self._enqueue_group(key, members, plan.reason,
-                                            prepared.get(key))
+                                            prepared.get(key),
+                                            span_parent=sp_stage)
             finally:
+                tr.end(sp_stage)
                 with self._lock:
                     self._turn += 1
                     self._staging -= 1
@@ -511,6 +568,12 @@ class DispatchPipeline:
                     "inflight_cap": self.inflight_cap,
                     "adaptive_inflight": self.adaptive_inflight,
                     "overlap_ewma": self.overlap_ewma,
+                    # per-batch overlap sample distribution (the EWMA's
+                    # input stream): what trace_report's span-measured
+                    # ratio is compared against
+                    "overlap_p50": self.stats.overlap_percentile(50),
+                    "overlap_p90": self.stats.overlap_percentile(90),
+                    "overlap_samples": self.stats.overlap_samples,
                     "stage_workers": self.stage_workers,
                     "threaded": bool(self._threads),
                     "queued_plans": len(self._queued),

@@ -48,6 +48,12 @@ class PendingRequest:
     submit_s: float
     deadline_s: float          # absolute; submit_s + deadline_ms/1e3
     future: object = None
+    # Trace span ids (repro.obs.trace): -1 = untraced. The frontend
+    # sets them at submit; explicit ids let the queue span close on the
+    # pump thread and the request span close on the drainer, no
+    # thread-local context needed.
+    span_request: int = -1     # root: submit -> future resolution
+    span_queue: int = -1       # child: submit -> batch-plan close
 
     def slack(self, now: float) -> float:
         return self.deadline_s - now

@@ -15,8 +15,13 @@ change between simulation and production measurement.
 from __future__ import annotations
 
 import dataclasses
+import os
+import tempfile
+from typing import Optional
 
 import numpy as np
+
+from repro.obs.metrics import percentile
 
 from .frontend import AdmissionError, AdmissionPolicy, RequestQueue
 from .scheduler import pow2_ceil
@@ -140,6 +145,7 @@ class StubEngine:
         self.executors_invalidated = 0
         self._frontend = None
         self._lifecycle = None
+        self.tracer = None     # set by attach_tracer (repro.obs)
 
     # ------------------------------------------------------- offline ----
     def _fits(self, size: int, sc: StubShapeClass) -> bool:
@@ -172,6 +178,13 @@ class StubEngine:
 
     def attach_lifecycle(self, manager) -> None:
         self._lifecycle = manager
+
+    def attach_tracer(self, tracer) -> None:
+        """Same hook the real Engine exposes; the stub records no spans
+        of its own (the frontend instruments around it) but keeping the
+        attribute lets `LifecycleManager` emit retire/skip instants
+        against stub-driven simulations too."""
+        self.tracer = tracer
 
     # -------------------------------------------------------- online ----
     def group_key(self, name: str, x) -> tuple:
@@ -451,8 +464,10 @@ def run_smoke(verbose: bool = True) -> dict:
     return snap
 
 
-def run_pipeline_smoke(verbose: bool = True) -> dict:
-    """Deterministic serial-vs-pipelined dispatch comparison (ISSUE 5).
+def run_pipeline_smoke(verbose: bool = True,
+                       trace_path: Optional[str] = None) -> dict:
+    """Deterministic serial-vs-pipelined dispatch comparison (ISSUE 5)
+    plus the end-to-end tracing contract (ISSUE 8).
 
     The same bursty near-capacity trace replays through a serial queue
     and a pipelined one over identical `StubEngine` worlds. Serial
@@ -467,8 +482,18 @@ def run_pipeline_smoke(verbose: bool = True) -> dict:
     bitwise-equal between modes, >= 2x lower mean queue delay and no
     worse p99 when pipelined, zero added deadline misses, the in-flight
     window bound respected, and measured overlap.
+
+    A third run replays the pipelined world with a `repro.obs.trace`
+    tracer attached and asserts the observability contract: outputs
+    still bitwise-equal, virtual mean sojourn within 2% of the untraced
+    run (the tracing-overhead gate — exact on `SimClock`, since tracer
+    bookkeeping never advances virtual time), every span tree closed,
+    and the span-measured overlap ratio within 10% of the pipeline's
+    own ``overlap_ratio``. ``trace_path`` writes the Perfetto JSON
+    there (tier-1 feeds it to ``scripts/trace_report.py``); None uses a
+    throwaway file.
     """
-    def run(pipelined: bool) -> tuple:
+    def run(pipelined: bool, traced: bool = False) -> tuple:
         clock = SimClock()
         engine = StubEngine(clock, base_s=0.004, per_item_s=0.001,
                             stage_s=0.004, compile_s=0.25)
@@ -477,9 +502,14 @@ def run_pipeline_smoke(verbose: bool = True) -> dict:
             engine.register(n)
         xs = {n: np.full((4, 3), float(i + 1), np.float32)
               for i, n in enumerate(names)}
+        tracer = None
+        if traced:
+            from repro.obs.trace import Tracer
+            tracer = Tracer(capacity=1 << 15, clock=clock)
         queue = RequestQueue(engine, target_batch=4,
                              default_deadline_ms=800.0, clock=clock,
-                             pipelined=pipelined, max_inflight=4)
+                             pipelined=pipelined, max_inflight=4,
+                             tracer=tracer)
         for bs in (1, 2, 4):       # warm every pow2 the replay can hit
             engine.serve_group([(names[0], xs[names[0]])] * bs)
         resolve_at = attach_resolve_probe(queue)
@@ -494,10 +524,10 @@ def run_pipeline_smoke(verbose: bool = True) -> dict:
         outs = [np.asarray(f.result(timeout=0)) for f in futs]
         sojourn = np.array([resolve_at[id(f)] - a.t_s
                             for a, f in zip(trace, futs)])
-        return queue, outs, sojourn
+        return queue, outs, sojourn, tracer
 
-    q_serial, outs_serial, soj_serial = run(pipelined=False)
-    q_pipe, outs_pipe, soj_pipe = run(pipelined=True)
+    q_serial, outs_serial, soj_serial, _ = run(pipelined=False)
+    q_pipe, outs_pipe, soj_pipe, _ = run(pipelined=True)
 
     for i, (a, b) in enumerate(zip(outs_serial, outs_pipe)):
         assert np.array_equal(a, b), \
@@ -513,8 +543,8 @@ def run_pipeline_smoke(verbose: bool = True) -> dict:
     # NB: snapshot p50/p99 measure submit->resolve; under overload the
     # serial pump delays the submissions themselves, so only the
     # sojourn percentiles are comparable across modes.
-    assert float(np.percentile(soj_pipe, 99)) <= \
-        float(np.percentile(soj_serial, 99)), "p99 sojourn must improve"
+    assert percentile(soj_pipe, 99) <= percentile(soj_serial, 99), \
+        "p99 sojourn must improve"
     assert snap_p["deadline_misses"] <= snap_s["deadline_misses"], \
         "pipelining must not add deadline misses"
     assert snap_p["deadline_misses"] == 0, snap_p
@@ -528,18 +558,164 @@ def run_pipeline_smoke(verbose: bool = True) -> dict:
     assert snap_p["staging_p50_ms"] > 0 and snap_p["device_p50_ms"] > 0
     assert snap_p["completed"] == snap_s["completed"] == len(outs_pipe)
 
+    # --- traced re-run: the ISSUE 8 observability contract ------------
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.report import check_complete, overlap_check
+
+    q_tr, outs_tr, soj_tr, tracer = run(pipelined=True, traced=True)
+    for i, (a, b) in enumerate(zip(outs_pipe, outs_tr)):
+        assert np.array_equal(a, b), \
+            f"request {i}: traced output differs bitwise from untraced"
+    delay_tr = float(soj_tr.mean()) * 1e3
+    assert abs(delay_tr - delay_p) <= 0.02 * delay_p, \
+        f"tracing overhead gate (<=2%): traced mean sojourn " \
+        f"{delay_tr:.3f}ms vs {delay_p:.3f}ms untraced"
+    assert not tracer.wrapped(), "the smoke trace must fit the ring"
+
+    meta = {"serving": q_tr.stats.snapshot(),
+            "pipeline": q_tr.pipeline.snapshot()}
+    if trace_path is None:
+        fd, tmp = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            doc = write_chrome_trace(tmp, tracer, metadata=meta)
+        finally:
+            os.unlink(tmp)
+    else:
+        doc = write_chrome_trace(trace_path, tracer, metadata=meta)
+    problems = check_complete(doc)
+    assert not problems, f"incomplete span trees: {problems}"
+    ov = overlap_check(doc)
+    assert ov["batches"] > 0, "traced run must record device windows"
+    assert ov["ok"], \
+        f"span-measured overlap {ov['measured']:.3f} not within 10% of " \
+        f"reported {ov['reported']}"
+    tracing = {"mean_sojourn_ms_off": delay_p,
+               "mean_sojourn_ms_on": delay_tr,
+               "overlap_measured": ov["measured"],
+               "overlap_reported": ov["reported"],
+               "events": len(doc["traceEvents"])}
+
     if verbose:
         print(f"[sim] serial:    {q_serial.stats.summary()}")
         print(f"[sim] pipelined: {q_pipe.stats.summary()}")
         print(f"[sim] mean queue delay {delay_s:.1f}ms -> {delay_p:.1f}ms "
               f"({delay_s / max(delay_p, 1e-9):.1f}x lower) | p99 sojourn "
-              f"{np.percentile(soj_serial, 99) * 1e3:.1f} -> "
-              f"{np.percentile(soj_pipe, 99) * 1e3:.1f}ms | "
+              f"{percentile(soj_serial, 99) * 1e3:.1f} -> "
+              f"{percentile(soj_pipe, 99) * 1e3:.1f}ms | "
               f"overlap={snap_p['overlap_ratio']:.2f} "
               f"inflight_peak={snap_p['inflight_peak']}")
+        print(f"[sim] tracing: {tracing['events']} events, overlap "
+              f"measured={ov['measured']:.3f} vs "
+              f"reported={ov['reported']:.3f}, overhead "
+              f"{delay_tr - delay_p:+.4f}ms"
+              + (f", trace -> {trace_path}" if trace_path else ""))
         print("[sim] pipelined-dispatch smoke OK (outputs bitwise-equal, "
               "real compiles: 0)")
-    return {"serial": snap_s, "pipelined": snap_p}
+    return {"serial": snap_s, "pipelined": snap_p, "tracing": tracing}
+
+
+def run_trace_smoke(verbose: bool = True,
+                    trace_path: Optional[str] = None) -> dict:
+    """Tracing smoke over the SERIAL dispatch path (ISSUE 8).
+
+    Replays one deterministic world twice — tracer off, then on — and
+    asserts the parts of the observability contract the pipelined smoke
+    cannot reach: the serial ``dispatch``/``device`` span pair, rejected
+    submissions (admission depth) tracing as immediately-closed roots
+    with synthetic negative ids, and a deadline-missed request carrying
+    ``missed: true`` on its root span. The overhead gate compares
+    virtual mean latency between the runs (<= 2%; exact under
+    `SimClock`, where tracer bookkeeping costs zero virtual time).
+    """
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.report import check_complete, spans
+    from repro.obs.trace import Tracer
+
+    def run(traced: bool) -> tuple:
+        clock = SimClock()
+        engine = StubEngine(clock)
+        names = [f"t{i}" for i in range(3)]
+        for n in names:
+            engine.register(n)
+        xs = {n: np.full((4, 3), float(i + 1), np.float32)
+              for i, n in enumerate(names)}
+        tracer = Tracer(capacity=1 << 14, clock=clock) if traced else None
+        queue = RequestQueue(engine, target_batch=4,
+                             default_deadline_ms=500.0, clock=clock,
+                             admission=AdmissionPolicy(max_depth=4),
+                             tracer=tracer)
+        for bs in (1, 2, 4):
+            engine.serve_group([(names[0], xs[names[0]])] * bs)
+        trace = bursty_trace(3, 4, 0.5, names, seed=5)
+        t0 = clock()
+        trace = [Arrival(a.t_s + t0 + 0.01, a.name) for a in trace]
+        _, rej = replay_trace(queue, trace, xs.__getitem__)
+        assert not any(rej), "the warm trace must be admitted in full"
+        # admission rejects: submit past max_depth without pumping
+        flood_futs, rejects = [], 0
+        for _ in range(6):
+            try:
+                flood_futs.append(queue.submit(names[0], xs[names[0]]))
+            except AdmissionError:
+                rejects += 1
+        assert rejects >= 1, "flood past max_depth must reject"
+        queue.drain()
+        assert all(f.done() for f in flood_futs)
+        # deadline miss: an unseen feature width is a cold executor key,
+        # so the dispatch pays compile_s=0.25s inside a 100ms deadline
+        xm = np.full((4, 5), 1.0, np.float32)
+        fm = queue.submit(names[0], xm, deadline_ms=100.0)
+        queue.drain()
+        assert fm.done()
+        assert queue.stats.deadline_misses >= 1, \
+            "the cold narrow-deadline request must miss"
+        return queue, tracer
+
+    q_off, _ = run(traced=False)
+    q_on, tracer = run(traced=True)
+    mean_off = q_off.stats.mean_latency_ms()
+    mean_on = q_on.stats.mean_latency_ms()
+    assert mean_off > 0
+    assert abs(mean_on - mean_off) <= 0.02 * mean_off, \
+        f"tracing overhead gate (<=2%): {mean_on:.3f}ms vs {mean_off:.3f}ms"
+    assert q_on.stats.snapshot() == q_off.stats.snapshot(), \
+        "tracing must not perturb any counter"
+    assert not tracer.wrapped()
+
+    meta = {"serving": q_on.stats.snapshot()}
+    if trace_path is None:
+        fd, tmp = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            doc = write_chrome_trace(tmp, tracer, metadata=meta)
+        finally:
+            os.unlink(tmp)
+    else:
+        doc = write_chrome_trace(trace_path, tracer, metadata=meta)
+    problems = check_complete(doc)
+    assert not problems, f"incomplete span trees: {problems}"
+    roots = [s for s in spans(doc) if s["name"] == "request"]
+    assert any(s["args"]["req"] < 0 and s["args"].get("rejected")
+               for s in roots), \
+        "rejected submissions must trace as closed roots"
+    assert any(s["args"].get("missed") for s in roots), \
+        "the deadline miss must be flagged on its request span"
+    assert any(s["name"] == "dispatch" for s in spans(doc)), \
+        "serial dispatch spans missing"
+
+    out = {"mean_ms_off": mean_off, "mean_ms_on": mean_on,
+           "requests": len(roots),
+           "rejected": sum(1 for s in roots if s["args"]["req"] < 0),
+           "events": len(doc["traceEvents"])}
+    if verbose:
+        print(f"[sim] trace smoke: {out['requests']} request roots "
+              f"({out['rejected']} rejected), {out['events']} events, "
+              f"mean latency {mean_off:.3f} -> {mean_on:.3f}ms"
+              + (f", trace -> {trace_path}" if trace_path else ""))
+        print("[sim] tracing smoke OK (closed span trees, <=2% overhead, "
+              "real compiles: 0)")
+    return out
 
 
 def run_lifecycle_smoke(verbose: bool = True) -> dict:

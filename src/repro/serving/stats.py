@@ -6,15 +6,25 @@ percentiles, deadline misses, and per-reason admission rejections. The
 queue updates counters inline; ``snapshot()`` renders one JSON-able dict
 that `Engine.stats()` surfaces as its ``serving`` block.
 
+Since the observability pass, `ServerStats` owns no ad-hoc ints or
+dicts: every figure is backed by a typed metric from
+:mod:`repro.obs.metrics` (Counter/Gauge/Histogram/CounterFamily)
+registered in ``self.metrics``, so the snapshot is race-free under the
+concurrency lint (each metric guards its own state with its own lock)
+and `docs/TELEMETRY.md` can point every stats key at its backing
+registry metric. The legacy attribute surface (``stats.batches``,
+``stats.close_reasons`` ...) is preserved as read-only properties.
+
 `SimClock` is the injectable manual clock the deterministic scheduler
 simulation and the tests run on — the production default is
 ``time.monotonic``.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
+
+from repro.obs.metrics import (Counter, CounterFamily, Gauge, Histogram,
+                               MetricsRegistry, percentile_ms)
 
 # Cap on retained per-request latency samples: percentiles come from the
 # most recent window, so a long-lived server's stats dict stays bounded.
@@ -44,39 +54,38 @@ class SimClock:
         return self.now
 
 
-@dataclasses.dataclass
 class ServerStats:
     """Counters for one serving frontend; all times in seconds.
 
-    Field reference (also rendered by ``snapshot()`` and documented
-    with interpretation guidance in ``docs/TELEMETRY.md``):
+    Key reference (every key is a view over a registry metric named in
+    parentheses; interpretation guidance in ``docs/TELEMETRY.md``):
 
-    ``arrivals``
+    ``arrivals`` (``serving.arrivals``)
         Requests **admitted** (rejections are not arrivals).
-    ``completed``
+    ``completed`` (``serving.completed``)
         Futures resolved with a result; ``arrivals - completed`` is the
         queue's current in-flight depth plus cancelled requests.
-    ``batches``
+    ``batches`` (``serving.batches``)
         Dispatches executed; ``completed / batches`` is occupancy.
-    ``deadline_misses``
+    ``deadline_misses`` (``serving.deadline_misses``)
         Requests whose result resolved *after* their absolute deadline.
         Soft accounting: the late result is still delivered.
-    ``dispatch_errors``
+    ``dispatch_errors`` (``serving.dispatch_errors``)
         Batches whose engine dispatch raised; every member future of
         such a batch carries the exception.
-    ``rejected``
+    ``rejected`` (``serving.rejected``)
         {admission reason: count} — ``"depth"`` / ``"wait"`` /
         ``"stopped"`` (see `AdmissionPolicy`).
-    ``batch_hist``
+    ``batch_hist`` (``serving.batch_hist``)
         {live batch size: count of dispatched batches}.
-    ``close_reasons``
+    ``close_reasons`` (``serving.close_reasons``)
         {close rule: count} — ``"size"`` (pow2 target reached),
         ``"deadline"`` (slack ran out), ``"drain"`` (flush), and
         ``"retire"`` (flushed by a shape-class retirement barrier).
-    ``padded_slots``
+    ``padded_slots`` (``serving.padded_slots``)
         Total pow2-padded vmap slots dispatched;
         ``completed / padded_slots`` is pad occupancy.
-    ``latency_s``
+    ``latency_s`` (``serving.latency_s``)
         Rolling window (most recent ``LATENCY_WINDOW`` samples) of
         per-request submit→resolve latencies feeding the percentiles.
 
@@ -84,16 +93,21 @@ class ServerStats:
 
     ``pipelined``
         Whether this frontend dispatches through a `DispatchPipeline`.
-    ``inflight_depth`` / ``inflight_peak``
+    ``inflight_depth`` / ``inflight_peak`` (``serving.inflight_*``)
         Current and peak device-side in-flight window occupancy
         (batches enqueued, results not yet resolved).
-    ``staging_s`` / ``device_s``
+    ``staging_s`` / ``device_s`` (``serving.staging_s/device_s``)
         Rolling windows of per-batch host-staging and enqueue→ready
         wall times — the two pipeline segments.
     ``device_span_total_s`` / ``device_wait_total_s``
         Cumulative device-segment span vs the host time actually spent
         *blocked* waiting on it; their gap is compute the pipeline hid
         behind staging (see ``overlap_ratio``).
+    ``overlap`` (``serving.overlap``)
+        Per-batch overlap samples (``1 − blocked/span``), the
+        distribution behind the pipeline's adaptive-window EWMA —
+        ``trace_report`` cross-checks its span-measured ratio against
+        this family.
 
     >>> s = ServerStats()
     >>> s.on_arrival(0.0); s.on_batch(3, padded=4, reason="drain")
@@ -102,74 +116,155 @@ class ServerStats:
     (1, 4, 0)
     """
 
-    arrivals: int = 0
-    completed: int = 0
-    batches: int = 0
-    deadline_misses: int = 0
-    dispatch_errors: int = 0
-    rejected: dict = dataclasses.field(default_factory=dict)
-    batch_hist: dict = dataclasses.field(default_factory=dict)
-    close_reasons: dict = dataclasses.field(default_factory=dict)
-    padded_slots: int = 0          # pow2 vmap slots actually dispatched
-    first_arrival_s: float = 0.0
-    last_arrival_s: float = 0.0
-    latency_s: list = dataclasses.field(default_factory=list)
-    # pipelined-dispatch segment telemetry
-    pipelined: bool = False
-    inflight_depth: int = 0
-    inflight_peak: int = 0
-    staging_s: list = dataclasses.field(default_factory=list)
-    device_s: list = dataclasses.field(default_factory=list)
-    device_span_total_s: float = 0.0
-    device_wait_total_s: float = 0.0
+    def __init__(self):
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        self._arrivals = Counter("serving.arrivals", m)
+        self._completed = Counter("serving.completed", m)
+        self._batches = Counter("serving.batches", m)
+        self._deadline_misses = Counter("serving.deadline_misses", m)
+        self._dispatch_errors = Counter("serving.dispatch_errors", m)
+        self._rejected = CounterFamily("serving.rejected", m)
+        self._batch_hist = CounterFamily("serving.batch_hist", m)
+        self._close_reasons = CounterFamily("serving.close_reasons", m)
+        self._padded_slots = Counter("serving.padded_slots", m)
+        self._first_arrival = Gauge("serving.first_arrival_s", m)
+        self._last_arrival = Gauge("serving.last_arrival_s", m)
+        self._latency = Histogram("serving.latency_s", m,
+                                  window=LATENCY_WINDOW)
+        # pipelined-dispatch segment telemetry
+        self.pipelined = False
+        self._inflight_depth = Gauge("serving.inflight_depth", m)
+        self._inflight_peak = Gauge("serving.inflight_peak", m)
+        self._staging = Histogram("serving.staging_s", m,
+                                  window=LATENCY_WINDOW)
+        self._device = Histogram("serving.device_s", m,
+                                 window=LATENCY_WINDOW)
+        self._device_span_total = Counter("serving.device_span_total_s", m)
+        self._device_wait_total = Counter("serving.device_wait_total_s", m)
+        self._overlap = Histogram("serving.overlap", m,
+                                  window=LATENCY_WINDOW)
 
     # ------------------------------------------------------------ hooks ----
     def on_arrival(self, now: float) -> None:
-        if self.arrivals == 0:
-            self.first_arrival_s = now
-        self.last_arrival_s = now
-        self.arrivals += 1
+        if self._arrivals.value == 0:
+            self._first_arrival.set(now)
+        self._last_arrival.set(now)
+        self._arrivals.inc()
 
     def on_reject(self, reason: str) -> None:
-        self.rejected[reason] = self.rejected.get(reason, 0) + 1
+        self._rejected.inc(reason)
 
     def on_batch(self, size: int, padded: int, reason: str) -> None:
-        self.batches += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
-        self.padded_slots += padded  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
-        self.batch_hist[size] = self.batch_hist.get(size, 0) + 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
-        self.close_reasons[reason] = self.close_reasons.get(reason, 0) + 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self._batches.inc()
+        self._padded_slots.inc(padded)
+        self._batch_hist.inc(size)
+        self._close_reasons.inc(reason)
 
     def on_complete(self, latency_s: float, missed: bool) -> None:
-        self.completed += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self._completed.inc()
         if missed:
-            self.deadline_misses += 1  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
-        self.latency_s.append(latency_s)
-        if len(self.latency_s) > LATENCY_WINDOW:
-            del self.latency_s[: len(self.latency_s) - LATENCY_WINDOW]  # lint: racy-ok(bounded trim; np copies the window)
+            self._deadline_misses.inc()
+        self._latency.observe(latency_s)
+
+    def on_dispatch_error(self) -> None:
+        self._dispatch_errors.inc()
 
     def on_inflight(self, depth: int) -> None:
         """Gauge update from the dispatch pipeline's window."""
-        self.inflight_depth = depth  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
-        if depth > self.inflight_peak:
-            self.inflight_peak = depth  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self._inflight_depth.set(depth)
+        self._inflight_peak.set_max(depth)
 
     def on_pipeline(self, staging_s: float, device_s: float,
                     wait_s: float) -> None:
         """One pipelined batch's segment record: host staging time,
         enqueue→ready device span, and the host time actually spent
         blocked on that span (the unhidden remainder)."""
-        self.staging_s.append(staging_s)
-        self.device_s.append(device_s)
-        for w in (self.staging_s, self.device_s):
-            if len(w) > LATENCY_WINDOW:
-                del w[: len(w) - LATENCY_WINDOW]
-        self.device_span_total_s += device_s  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
-        self.device_wait_total_s += min(wait_s, device_s)  # lint: racy-ok(GIL-atomic counter; snapshot is advisory)
+        self._staging.observe(staging_s)
+        self._device.observe(device_s)
+        self._device_span_total.inc(device_s)
+        self._device_wait_total.inc(min(wait_s, device_s))
+        if device_s > 0:
+            self._overlap.observe(
+                min(1.0, max(0.0, 1.0 - wait_s / device_s)))
+
+    # ------------------------------------------- legacy attribute views ----
+    @property
+    def arrivals(self) -> int:
+        return self._arrivals.value
+
+    @property
+    def completed(self) -> int:
+        return self._completed.value
+
+    @property
+    def batches(self) -> int:
+        return self._batches.value
+
+    @property
+    def deadline_misses(self) -> int:
+        return self._deadline_misses.value
+
+    @property
+    def dispatch_errors(self) -> int:
+        return self._dispatch_errors.value
+
+    @property
+    def rejected(self) -> dict:
+        return self._rejected.as_dict()
+
+    @property
+    def batch_hist(self) -> dict:
+        return self._batch_hist.as_dict()
+
+    @property
+    def close_reasons(self) -> dict:
+        return self._close_reasons.as_dict()
+
+    @property
+    def padded_slots(self) -> int:
+        return self._padded_slots.value
+
+    @property
+    def first_arrival_s(self) -> float:
+        return self._first_arrival.value
+
+    @property
+    def last_arrival_s(self) -> float:
+        return self._last_arrival.value
+
+    @property
+    def latency_s(self) -> list:
+        return self._latency.values()
+
+    @property
+    def inflight_depth(self) -> int:
+        return self._inflight_depth.value
+
+    @property
+    def inflight_peak(self) -> int:
+        return self._inflight_peak.value
+
+    @property
+    def staging_s(self) -> list:
+        return self._staging.values()
+
+    @property
+    def device_s(self) -> list:
+        return self._device.values()
+
+    @property
+    def device_span_total_s(self) -> float:
+        return self._device_span_total.value
+
+    @property
+    def device_wait_total_s(self) -> float:
+        return self._device_wait_total.value
 
     # --------------------------------------------------------- rollups ----
     @property
     def rejected_total(self) -> int:
-        return sum(self.rejected.values())
+        return self._rejected.total()
 
     @property
     def mean_batch(self) -> float:
@@ -187,42 +282,46 @@ class ServerStats:
         blocked-wait / device-span. 0 under serial dispatch (the host
         waits out every device segment); approaching 1 means the
         completion path almost always finds results already ready."""
-        if self.device_span_total_s <= 0:
+        span = self.device_span_total_s
+        if span <= 0:
             return 0.0
-        return 1.0 - self.device_wait_total_s / self.device_span_total_s
+        return 1.0 - self.device_wait_total_s / span
+
+    def overlap_percentile(self, q: float) -> float:
+        """Percentile of the per-batch overlap sample distribution."""
+        return self._overlap.percentile(q)
+
+    @property
+    def overlap_samples(self) -> int:
+        return self._overlap.count
 
     def arrival_rate_hz(self) -> float:
         span = self.last_arrival_s - self.first_arrival_s
         return (self.arrivals - 1) / span if span > 0 else 0.0
 
-    @staticmethod
-    def _percentile_ms(window: list, q: float) -> float:
-        if not window:
-            return 0.0
-        return float(np.percentile(np.asarray(window), q) * 1e3)
-
     def latency_percentile_ms(self, q: float) -> float:
-        return self._percentile_ms(self.latency_s, q)
+        return self._latency.percentile(q) * 1e3
 
     def mean_latency_ms(self) -> float:
         """Mean submit→resolve latency over the rolling window — the
         queue-delay headline the pipeline benchmark compares on (service
         time is a near-constant floor; growth here is queue delay)."""
-        if not self.latency_s:
+        window = self._latency.values()
+        if not window:
             return 0.0
-        return float(np.mean(np.asarray(self.latency_s)) * 1e3)
+        return float(np.mean(np.asarray(window)) * 1e3)
 
     def snapshot(self) -> dict:
         return {
             "arrivals": self.arrivals,
             "completed": self.completed,
-            "rejected": dict(self.rejected),
+            "rejected": self.rejected,
             "rejected_total": self.rejected_total,
             "batches": self.batches,
             "batch_hist": dict(sorted(self.batch_hist.items())),
             "mean_batch": self.mean_batch,
             "pad_occupancy": self.pad_occupancy,
-            "close_reasons": dict(self.close_reasons),
+            "close_reasons": self.close_reasons,
             "arrival_rate_hz": self.arrival_rate_hz(),
             "p50_ms": self.latency_percentile_ms(50),
             "p99_ms": self.latency_percentile_ms(99),
@@ -232,11 +331,14 @@ class ServerStats:
             "pipelined": self.pipelined,
             "inflight_depth": self.inflight_depth,
             "inflight_peak": self.inflight_peak,
-            "staging_p50_ms": self._percentile_ms(self.staging_s, 50),
-            "staging_p99_ms": self._percentile_ms(self.staging_s, 99),
-            "device_p50_ms": self._percentile_ms(self.device_s, 50),
-            "device_p99_ms": self._percentile_ms(self.device_s, 99),
+            "staging_p50_ms": percentile_ms(self.staging_s, 50),
+            "staging_p99_ms": percentile_ms(self.staging_s, 99),
+            "device_p50_ms": percentile_ms(self.device_s, 50),
+            "device_p99_ms": percentile_ms(self.device_s, 99),
             "overlap_ratio": self.overlap_ratio,
+            "overlap_p50": self.overlap_percentile(50),
+            "overlap_p90": self.overlap_percentile(90),
+            "overlap_samples": self.overlap_samples,
         }
 
     def summary(self) -> str:

@@ -223,6 +223,49 @@ class TestConcurrencyPass:
         """))
         assert _errors(analyze_paths([mod], entry_classes={"Svc"})) == []
 
+    def test_unlocked_histogram_write_caught(self, tmp_path):
+        # Known-bad obs fixture: a Histogram-like ring whose worker
+        # stores samples without the lock the public snapshot takes.
+        # Subscript stores are writes to the lint — this pins that the
+        # obs scope extension actually bites on the shape of bug the
+        # metrics primitives could regress into.
+        mod = tmp_path / "hist.py"
+        mod.write_text(textwrap.dedent("""\
+            import threading
+
+            class Hist:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.window = [0.0] * 64
+                    self.n = 0
+                    self._t = threading.Thread(target=self._worker,
+                                               daemon=True)
+
+                def _worker(self):
+                    while True:
+                        self.window[self.n % 64] = 1.0
+                        self.n += 1
+
+                def snapshot(self):
+                    with self._lock:
+                        return {"n": self.n, "window": list(self.window)}
+        """))
+        findings = analyze_paths([mod], entry_classes={"Hist"})
+        errs = _errors(findings)
+        assert "field-race" in _rules(findings)
+        assert any("Hist.window" in f.message for f in errs)
+
+    def test_obs_dir_in_default_scope(self):
+        from repro.analysis.static.concurrency_pass import (LOCK_ORDER,
+                                                            SCOPE_DIRS)
+        assert "src/repro/obs" in SCOPE_DIRS
+        # metric locks are declared leaves: after every component lock
+        for comp in ("RequestQueue._lock", "ExecutorCache._lock",
+                     "LatencyModel._lock"):
+            for leaf in ("Counter._lock", "Histogram._lock",
+                         "Tracer._lock"):
+                assert LOCK_ORDER.index(comp) < LOCK_ORDER.index(leaf)
+
     def test_lock_order_inversion_caught(self, tmp_path):
         mod = tmp_path / "inv.py"
         mod.write_text(textwrap.dedent("""\
@@ -268,21 +311,58 @@ class TestBenchCheck:
     @pytest.mark.parametrize("doc", [
         "not json {",
         json.dumps([1, 2]),
+        # schema 1 (pre-provenance) files must fail until reseeded
         json.dumps({"bench": "b", "schema": 1, "created": "d",
-                    "command": "c", "metrics": {}}),
+                    "command": "c", "metrics": {"m": 1}}),
+        # schema 2 without the provenance block
         json.dumps({"bench": "b", "schema": 2, "created": "d",
                     "command": "c", "metrics": {"m": 1}}),
-        json.dumps({"bench": "b", "schema": 1, "created": "d",
-                    "command": "c", "metrics": {"m": "fast"}}),
-        json.dumps({"bench": "b", "schema": 1, "created": "d",
-                    "command": "c", "metrics": {"m": True}}),
-        json.dumps({"schema": 1, "created": "d", "command": "c",
+        # provenance present but not an object
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c", "provenance": "b93d566",
+                    "metrics": {"m": 1}}),
+        # provenance with a missing / empty / non-string key
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c",
+                    "provenance": {"git_sha": "x", "jax_version": "y"},
+                    "metrics": {"m": 1}}),
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c",
+                    "provenance": {"git_sha": "", "jax_version": "y",
+                                   "backend": "cpu"},
+                    "metrics": {"m": 1}}),
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c",
+                    "provenance": {"git_sha": 7, "jax_version": "y",
+                                   "backend": "cpu"},
+                    "metrics": {"m": 1}}),
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c",
+                    "provenance": {"git_sha": "x", "jax_version": "y",
+                                   "backend": "cpu"},
+                    "metrics": {"m": "fast"}}),
+        json.dumps({"bench": "b", "schema": 2, "created": "d",
+                    "command": "c",
+                    "provenance": {"git_sha": "x", "jax_version": "y",
+                                   "backend": "cpu"},
+                    "metrics": {"m": True}}),
+        json.dumps({"schema": 2, "created": "d", "command": "c",
+                    "provenance": {"git_sha": "x", "jax_version": "y",
+                                   "backend": "cpu"},
                     "metrics": {"m": 1}}),
     ])
     def test_malformed_files_fail(self, tmp_path, doc):
         path = tmp_path / "BENCH_bad.json"
         path.write_text(doc)
         assert _errors(check_bench_file(path))
+
+    def test_provenance_collected_automatically(self, tmp_path):
+        path = tmp_path / "BENCH_test.json"
+        doc = write_bench_json(path, "bench_test", "bench_test --smoke",
+                               "2026-08-08", {"ms": 1.0})
+        prov = doc["provenance"]
+        assert set(prov) == {"git_sha", "jax_version", "backend"}
+        assert all(isinstance(v, str) and v for v in prov.values())
 
     def test_required_metrics_enforced(self, tmp_path):
         # a bench_spmm trajectory missing one of the kernel-health
