@@ -32,7 +32,14 @@ Run:    PYTHONPATH=src python benchmarks/bench_serving.py [--graphs 6]
         PYTHONPATH=src python benchmarks/bench_serving.py --pipeline
 Smoke:  PYTHONPATH=src python benchmarks/bench_serving.py --smoke
         PYTHONPATH=src python benchmarks/bench_serving.py --smoke --pipeline
+        PYTHONPATH=src python benchmarks/bench_serving.py --smoke --replicas 4
         (deterministic scheduler simulation, virtual clock, no compiles)
+
+``--replicas N`` adds the multi-replica axis (ISSUE 9): the 1-vs-N
+`ReplicaSet` comparison on simulated devices (bitwise-equal outputs,
+per-key order preserved, >=3x aggregate throughput at N=4) plus the
+fault-injection rescue smoke; with ``--json`` the per-replica
+utilization and aggregate throughput land in BENCH_serving.json.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ from repro.obs.metrics import percentile
 from repro.serving import (Arrival, RequestQueue, attach_resolve_probe,
                            bursty_trace, poisson_trace, replay_trace,
                            run_lifecycle_smoke, run_pipeline_smoke,
+                           run_replica_fault_smoke, run_replica_smoke,
                            run_smoke, run_trace_smoke)
 
 
@@ -283,6 +291,12 @@ if __name__ == "__main__":
                     help="with --smoke: write the traced run's Perfetto "
                          "JSON here (loadable in ui.perfetto.dev; "
                          "analyzed offline by scripts/trace_report.py)")
+    ap.add_argument("--replicas", type=int, default=0, metavar="N",
+                    help="add the multi-replica axis: with --smoke, the "
+                         "deterministic 1-vs-N ReplicaSet comparison "
+                         "(>=3x throughput at N=4, outputs bitwise-"
+                         "equal, per-key order preserved) plus the "
+                         "fault-injection rescue smoke")
     args = ap.parse_args()
     if args.smoke and args.pipeline:
         results = {"pipeline_smoke": run_pipeline_smoke(
@@ -296,6 +310,10 @@ if __name__ == "__main__":
                       target_batch=args.target_batch,
                       pipeline=args.pipeline,
                       max_inflight=args.max_inflight)
+    if args.smoke and args.replicas:
+        results["replica_smoke"] = run_replica_smoke(
+            replicas=args.replicas)
+        results["replica_fault"] = run_replica_fault_smoke()
     if args.json:
         import sys
         from repro.analysis.static.bench_check import write_bench_json

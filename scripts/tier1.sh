@@ -37,6 +37,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     --trace "$TRACE_OUT"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python scripts/trace_report.py "$TRACE_OUT" --assert-complete
+# Replica smoke: the 1-vs-4 ReplicaSet comparison on simulated devices
+# (same bursty trace, SimClock, zero real compiles) — asserts outputs
+# bitwise-equal to single-replica, per-key order preserved under the
+# key-epoch pin, >=3x aggregate throughput at 4 replicas, zero added
+# deadline misses — plus the fault-injection rescue smoke (a replica
+# dies mid-window: zero stranded futures, admission capacity shrinks).
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_serving.py --smoke --replicas 4
 # Docs check: the serving API docstring examples actually run, and every
 # internal link in README.md + docs/ resolves (files and anchors).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

@@ -38,18 +38,24 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 from repro.analysis.static.report import Finding, scan_waivers
 
-# Default scope (relative to the repo root).
-SCOPE_DIRS = ("src/repro/serving", "src/repro/engine", "src/repro/obs")
+# Default scope (relative to the repo root). Directory entries glob
+# ``*.py``; a ``.py`` entry names one file explicitly (replicas.py is
+# both covered by its directory AND pinned by name, so a future scope
+# reshuffle cannot silently drop the router from the lint).
+SCOPE_DIRS = ("src/repro/serving", "src/repro/serving/replicas.py",
+              "src/repro/engine", "src/repro/obs")
 
 # Classes whose non-underscore methods constitute the user-thread API.
-ENTRY_CLASSES = frozenset({"Engine", "RequestQueue"})
+ENTRY_CLASSES = frozenset({"Engine", "RequestQueue", "ReplicaSet"})
 
 # Types of attributes the AST cannot infer (assigned from parameters).
 ATTR_TYPE_HINTS = {
     ("RequestQueue", "engine"): "Engine",
+    ("RequestQueue", "replica_set"): "ReplicaSet",
     ("DispatchPipeline", "engine"): "Engine",
     ("DispatchPipeline", "latency"): "LatencyModel",
     ("DispatchPipeline", "stats"): "ServerStats",
+    ("ReplicaSet", "stats"): "ServerStats",
     ("Engine", "_frontend"): "RequestQueue",
     ("Engine", "_lifecycle"): "LifecycleManager",
     ("LifecycleManager", "engine"): "Engine",
@@ -58,11 +64,13 @@ ATTR_TYPE_HINTS = {
 
 # The declared acquisition hierarchy: a thread may only take a lock to
 # the RIGHT of every lock it already holds. Mirrors the docstrings in
-# frontend/pipeline ("lock order is always _lock -> _dispatch_gate",
-# queue lock outermost over pipeline/engine internals).
+# frontend/pipeline/replicas ("lock order is always _lock ->
+# _dispatch_gate", queue lock outermost, the ReplicaSet router lock
+# between the frontend and the per-replica pipelines it routes into).
 LOCK_ORDER = (
     "RequestQueue._lock",
     "RequestQueue._dispatch_gate",
+    "ReplicaSet._lock",
     "DispatchPipeline._lock",
     "Engine._stack_lock",
     "ExecutorCache._lock",
@@ -75,6 +83,7 @@ LOCK_ORDER = (
     "Gauge._lock",
     "Histogram._lock",
     "CounterFamily._lock",
+    "GaugeFamily._lock",
     "Tracer._lock",
 )
 
@@ -504,7 +513,14 @@ def analyze_paths(paths: Sequence, *, entry_classes=ENTRY_CLASSES,
 def run_concurrency_pass(root=None) -> List[Finding]:
     """Repo-level entry: lint the serving and engine packages."""
     root = Path(root) if root is not None else _repo_root()
-    paths = sorted(p for d in SCOPE_DIRS for p in (root / d).glob("*.py"))
+    scoped = set()
+    for d in SCOPE_DIRS:
+        target = root / d
+        if d.endswith(".py"):
+            scoped.add(target)  # explicit file entry
+        else:
+            scoped.update(target.glob("*.py"))
+    paths = sorted(scoped)
     return analyze_paths(paths)
 
 

@@ -72,6 +72,42 @@ class GraphHandle:
         return self.meta.n_rows
 
 
+class _EngineReplicaView:
+    """One replica's engine-facing view for a `repro.serving.ReplicaSet`.
+
+    Shares the owning engine's `ClassRegistry`, registered graphs, and
+    stack cache (read-mostly state one process can serve from), but owns
+    a PRIVATE `ExecutorCache` — executors are per-device state, so each
+    replica compiles and warms its own, and one replica's compile never
+    invalidates or evicts another's. Dispatches route through the
+    engine's ``serve_group_async`` with this view's cache injected.
+    """
+
+    def __init__(self, engine: "Engine", replica_id: int, executors):
+        self._engine = engine
+        self.replica_id = replica_id
+        self.executors = executors
+
+    def group_key(self, name: str, x) -> tuple:
+        return self._engine.group_key(name, x)
+
+    def handle(self, name: str):
+        return self._engine.handle(name)
+
+    def latency_prior(self, key: tuple, batch: int):
+        return self._engine.latency_prior(key, batch)
+
+    def prepare_x(self, name: str, x):
+        return self._engine.prepare_x(name, x)
+
+    def serve_group_async(self, requests, prepared=None) -> tuple:
+        return self._engine.serve_group_async(
+            requests, prepared, executors=self.executors)
+
+    def serve_group(self, requests) -> list:
+        return self.serve_group_async(requests)[0]
+
+
 class Engine:
     """Shape-class compiled serving engine for the tri-hybrid SpMM/GCN."""
 
@@ -120,6 +156,11 @@ class Engine:
         self.tracer = NULL_TRACER
         self._frontend = None   # attached repro.serving.RequestQueue
         self._lifecycle = None  # attached LifecycleManager
+        # Per-replica executor caches handed out by replica_view();
+        # lifecycle retirement must invalidate a retired class in EVERY
+        # one (after drain_class quiesced all replica pipelines).
+        self._replica_views: dict = {}
+        self._replica_caches: list = []
         # Ragged-kernel autotuner (lazy — first autotune() call builds
         # it). ``autotune_cache`` names the on-disk winner cache.
         self._autotune_cache = autotune_cache
@@ -185,6 +226,24 @@ class Engine:
 
     def handle(self, name: str) -> GraphHandle:
         return self._graphs[name]
+
+    def replica_view(self, i: int) -> _EngineReplicaView:
+        """The per-replica engine view a `repro.serving.ReplicaSet` lane
+        drives: shared registry and graphs, private `ExecutorCache`
+        (same backend/dispatch configuration as the engine's own).
+        Idempotent per index — a lane's cache survives re-wiring."""
+        view = self._replica_views.get(i)
+        if view is None:
+            ex = self.executors
+            cache = ExecutorCache(backend=ex.backend,
+                                  block_cols=ex.block_cols,
+                                  ell_dispatch=ex.ell_dispatch,
+                                  max_entries=ex.max_entries)
+            cache.tracer = self.tracer
+            self._replica_caches.append(cache)
+            view = self._replica_views[i] = _EngineReplicaView(
+                self, i, cache)
+        return view
 
     # ---------------------------------------------------------- online -----
     def _pad_x(self, h: GraphHandle, x) -> jnp.ndarray:
@@ -299,7 +358,8 @@ class Engine:
         step."""
         return self._pad_x(self._graphs[name], x)
 
-    def serve_group_async(self, requests, prepared=None) -> tuple:
+    def serve_group_async(self, requests, prepared=None, *,
+                          executors=None) -> tuple:
         """Non-blocking ``serve_group``: stage + enqueue, don't wait.
 
         Returns ``(outs, meta)``: ``outs`` are the per-request outputs
@@ -317,7 +377,10 @@ class Engine:
         ``prepared`` optionally carries pre-staged padded features
         (`prepare_x`, aligned with ``requests``) so a staging pool can
         parallelize the padding while the enqueue itself stays ordered.
+        ``executors`` substitutes a per-replica `ExecutorCache` (what
+        `replica_view` dispatches through); None uses the engine's own.
         """
+        ex = executors if executors is not None else self.executors
         if not requests:
             return [], {"cold": False, "ready": lambda: True,
                         "complete": lambda: None}
@@ -339,7 +402,7 @@ class Engine:
         # Deliberate unguarded miss-counter read: a stale value only
         # over-reports cold, which skips a warm sample and never poisons
         # the latency EWMA — see _completion_meta.
-        misses0 = self.executors.stats.misses  # lint: racy-ok(cold-detect delta; over-reports only)
+        misses0 = ex.stats.misses  # lint: racy-ok(cold-detect delta; over-reports only)
 
         def pad(h, x, xp):
             return xp if xp is not None else self._pad_x(h, x)
@@ -350,11 +413,11 @@ class Engine:
             sp_pad = -1
             if tr.enabled:
                 sp_pad = tr.begin("pad", "engine", args={"n": 1})
-            fn = self.executors.gcn(sc, f_in, w_shapes)
+            fn = ex.gcn(sc, f_in, w_shapes)
             xpad = pad(h, x, xp)
             tr.end(sp_pad)
             outs = [self._unpad_y(h, fn(h.part, xpad, h.weights))]
-            return outs, self._completion_meta(outs, misses0)
+            return outs, self._completion_meta(outs, misses0, ex)
         # Canonicalize group order by name so (g0,g1) and (g1,g0)
         # share one cached stack, then pad to the next power-of-two
         # batch (repeating the last member; its extra outputs are
@@ -367,7 +430,7 @@ class Engine:
         if tr.enabled:
             sp_pad = tr.begin("pad", "engine",
                               args={"n": len(members), "batch": bs})
-        fn = self.executors.gcn_batched(sc, f_in, w_shapes, bs)
+        fn = ex.gcn_batched(sc, f_in, w_shapes, bs)
         stack_key = tuple(h.name for _, h, _, _ in padded)
         with self._stack_lock:
             stacks = self._stacks.get(stack_key)
@@ -393,15 +456,20 @@ class Engine:
         results: list = [None] * len(members)
         for j, (i, h, _, _) in enumerate(members):
             results[i] = self._unpad_y(h, ys[j])
-        return results, self._completion_meta(results, misses0)
+        return results, self._completion_meta(results, misses0, ex)
 
-    def _completion_meta(self, outs, misses0: int) -> dict:
+    def _completion_meta(self, outs, misses0: int, ex=None) -> dict:
         """The async-dispatch completion contract for one enqueued group.
 
-        ``cold`` is a miss-counter delta: under concurrent staging a
-        sibling's miss can be misattributed, which only *over*-reports
-        cold — a skipped warm sample, never a poisoned EWMA.
+        ``cold`` is a miss-counter delta on the cache that served the
+        dispatch (a replica view's own, or the engine's): under
+        concurrent staging a sibling's miss can be misattributed, which
+        only *over*-reports cold — a skipped warm sample, never a
+        poisoned EWMA.
         """
+        if ex is None:
+            ex = self.executors
+
         def ready() -> bool:
             return all(getattr(y, "is_ready", lambda: True)() for y in outs)
 
@@ -411,7 +479,7 @@ class Engine:
                 if blocker is not None:
                     blocker()
 
-        return {"cold": self.executors.stats.misses > misses0,  # lint: racy-ok(cold-detect delta; over-reports only)
+        return {"cold": ex.stats.misses > misses0,  # lint: racy-ok(cold-detect delta; over-reports only)
                 "ready": ready, "complete": complete}
 
     # --------------------------------------------------------- latency -----
@@ -460,6 +528,8 @@ class Engine:
         this; passing `NULL_TRACER` turns engine tracing back off."""
         self.tracer = tracer
         self.executors.tracer = tracer
+        for cache in self._replica_caches:
+            cache.tracer = tracer
         if self._tuner is not None:
             self._tuner.tracer = tracer
 
@@ -519,8 +589,12 @@ class Engine:
                 for sc, entry in self.class_waste_by_class().items()}
 
     def class_traffic(self) -> dict:
-        """Cumulative executor lookups per ShapeClass (lifecycle input)."""
-        return self.executors.traffic_by_class()
+        """Cumulative executor lookups per ShapeClass (lifecycle input),
+        summed over the engine's own cache and every replica view's."""
+        out = collections.Counter(self.executors.traffic_by_class())
+        for cache in self._replica_caches:
+            out.update(cache.traffic_by_class())
+        return dict(out)
 
     # ------------------------------------------------------- lifecycle -----
     def attach_lifecycle(self, manager) -> None:
@@ -585,6 +659,11 @@ class Engine:
             h.sclass = target
             moved.append(name)
         invalidated = self.executors.invalidate_class(sc)
+        # every replica's private cache holds its own executors for the
+        # retired class; drain_class already quiesced all replica
+        # pipelines, so no lane can be mid-dispatch on a stale key here
+        for cache in self._replica_caches:
+            invalidated += cache.invalidate_class(sc)
         # cached member stacks hold the OLD padded arrays of moved
         # graphs — any stack containing one is stale
         moved_set = set(moved)

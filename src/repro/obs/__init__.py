@@ -13,11 +13,13 @@
 - :mod:`repro.obs.report` — offline critical-path analysis consumed by
   ``scripts/trace_report.py``.
 """
-from repro.obs.metrics import (Counter, CounterFamily, Gauge, Histogram,
-                               MetricsRegistry, percentile, percentile_ms)
+from repro.obs.metrics import (Counter, CounterFamily, Gauge, GaugeFamily,
+                               Histogram, MetricsRegistry, percentile,
+                               percentile_ms)
 from repro.obs.trace import NULL_TRACER, Tracer
 
 __all__ = [
-    "Counter", "CounterFamily", "Gauge", "Histogram", "MetricsRegistry",
-    "percentile", "percentile_ms", "Tracer", "NULL_TRACER",
+    "Counter", "CounterFamily", "Gauge", "GaugeFamily", "Histogram",
+    "MetricsRegistry", "percentile", "percentile_ms", "Tracer",
+    "NULL_TRACER",
 ]

@@ -15,6 +15,10 @@ Track layout:
   with ``cat == "device"`` lands here regardless of which host thread
   opened it, so staging/compute overlap is visually checkable by
   stacking the device track against the host tracks.
+- ``pid 2 / tid 1+r`` — multi-replica traces: a device span whose
+  begin args carry ``"replica": r`` lands on its own per-replica
+  device track (``device[r]``), so 4-replica runs render four stacked
+  device timelines and cross-replica overlap is visually checkable.
 
 Timestamps are microseconds relative to the earliest event (Chrome
 format convention). The source clock is whatever the tracer was built
@@ -74,9 +78,15 @@ def chrome_trace(events: List[dict], *, metadata: Optional[dict] = None,
 
     out: List[dict] = []
     host_tids = set()
+    device_tids = {DEVICE_TID: "device window"}
 
     def track(ev: dict):
         if ev["cat"] == "device":
+            replica = (ev["args"] or {}).get("replica", -1)
+            if isinstance(replica, int) and replica >= 0:
+                tid = DEVICE_TID + replica
+                device_tids[tid] = f"device[{replica}]"
+                return DEVICE_PID, tid
             return DEVICE_PID, DEVICE_TID
         host_tids.add(ev["tid"])
         return HOST_PID, ev["tid"]
@@ -108,9 +118,11 @@ def chrome_trace(events: List[dict], *, metadata: Optional[dict] = None,
          "args": {"name": "host"}},
         {"ph": "M", "name": "process_name", "pid": DEVICE_PID, "tid": 0,
          "args": {"name": "device"}},
-        {"ph": "M", "name": "thread_name", "pid": DEVICE_PID,
-         "tid": DEVICE_TID, "args": {"name": "device window"}},
     ]
+    for tid in sorted(device_tids):
+        meta_events.append(
+            {"ph": "M", "name": "thread_name", "pid": DEVICE_PID,
+             "tid": tid, "args": {"name": device_tids[tid]}})
     for k, tid in enumerate(sorted(host_tids)):
         meta_events.append(
             {"ph": "M", "name": "thread_name", "pid": HOST_PID, "tid": tid,

@@ -1,4 +1,4 @@
-"""Typed metrics: Counter / Gauge / Histogram / CounterFamily + registry.
+"""Typed metrics: Counter / Gauge / Histogram / {Counter,Gauge}Family + registry.
 
 This module is the single backing store for serving and engine
 telemetry: ``ServerStats``, ``ExecutorCache`` cache counters, the
@@ -208,6 +208,44 @@ class CounterFamily:
     def total(self) -> Number:
         with self._lock:
             return sum(self._v.values())
+
+    def as_dict(self) -> Dict:
+        with self._lock:
+            return dict(self._v)
+
+    def snapshot_value(self) -> Dict:
+        return self.as_dict()
+
+
+class GaugeFamily:
+    """A labeled gauge: one logical metric, one last-written value per
+    label. The per-replica analogue of :class:`CounterFamily` — e.g.
+    ``replicas.depth`` holds each replica's current pipeline depth under
+    its ``replica_id`` label. The whole family shares one lock;
+    ``as_dict`` returns a coherent copy.
+    """
+
+    kind = "family"
+
+    def __init__(self, name: str, registry: "Optional[MetricsRegistry]" = None):
+        self.name = name
+        self._lock = threading.Lock()
+        self._v: Dict = {}
+        if registry is not None:
+            registry.register(self)
+
+    def set(self, label, value: Number) -> None:
+        with self._lock:
+            self._v[label] = value
+
+    def set_max(self, label, value: Number) -> None:
+        with self._lock:
+            if value > self._v.get(label, value - 1):
+                self._v[label] = value
+
+    def get(self, label, default: Number = 0) -> Number:
+        with self._lock:
+            return self._v.get(label, default)
 
     def as_dict(self) -> Dict:
         with self._lock:

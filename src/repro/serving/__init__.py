@@ -15,25 +15,34 @@ serial dispatch. The queue also hosts the
 shape-class lifecycle's drain barrier (`RequestQueue.drain_class`):
 batches in flight on a retiring class dispatch through the old
 executors before invalidation, and new submissions route to the
-successor class (ISSUE 4).
+successor class (ISSUE 4). ``replicas=N`` scales out (ISSUE 9): a
+`ReplicaSet` owns one executor stack + pipeline per device, routes each
+closed batch to the least-loaded replica under key-epoch pinning (per-
+key order preserved exactly), aggregates admission capacity across
+replicas, and rescues a faulted replica's in-flight work onto survivors
+(`ReplicaFault` -> requeue, zero stranded futures).
 """
 from .frontend import (DEFAULT_DEADLINE_MS, AdmissionError, AdmissionPolicy,
                        RequestFuture, RequestQueue)
-from .latency import LatencyModel
+from .latency import AggregateLatencyModel, LatencyModel
 from .pipeline import DispatchPipeline, InflightBatch
+from .replicas import Replica, ReplicaFault, ReplicaSet
 from .scheduler import BatchPlan, PendingRequest, Scheduler, pow2_ceil
 from .stats import ServerStats, SimClock
-from .simulate import (Arrival, StubEngine, StubShapeClass,
+from .simulate import (Arrival, StubEngine, StubReplica, StubShapeClass,
                        attach_resolve_probe, bursty_trace, poisson_trace,
                        replay_trace, run_lifecycle_smoke,
-                       run_pipeline_smoke, run_smoke, run_trace_smoke)
+                       run_pipeline_smoke, run_replica_fault_smoke,
+                       run_replica_smoke, run_smoke, run_trace_smoke)
 
 __all__ = [
     "DEFAULT_DEADLINE_MS", "AdmissionError", "AdmissionPolicy",
-    "RequestFuture", "RequestQueue", "LatencyModel", "DispatchPipeline",
-    "InflightBatch", "BatchPlan", "PendingRequest", "Scheduler",
-    "pow2_ceil", "ServerStats", "SimClock", "Arrival", "StubEngine",
-    "StubShapeClass", "attach_resolve_probe", "bursty_trace",
-    "poisson_trace", "replay_trace", "run_lifecycle_smoke",
-    "run_pipeline_smoke", "run_smoke", "run_trace_smoke",
+    "RequestFuture", "RequestQueue", "AggregateLatencyModel",
+    "LatencyModel", "DispatchPipeline", "InflightBatch", "Replica",
+    "ReplicaFault", "ReplicaSet", "BatchPlan", "PendingRequest",
+    "Scheduler", "pow2_ceil", "ServerStats", "SimClock", "Arrival",
+    "StubEngine", "StubReplica", "StubShapeClass", "attach_resolve_probe",
+    "bursty_trace", "poisson_trace", "replay_trace", "run_lifecycle_smoke",
+    "run_pipeline_smoke", "run_replica_fault_smoke", "run_replica_smoke",
+    "run_smoke", "run_trace_smoke",
 ]

@@ -33,6 +33,14 @@ Two dispatch disciplines:
              accounts for the in-flight work the scheduler can't see.
              Outputs stay bitwise-equal to serial dispatch (same
              grouping, same executors, per-key order preserved).
+
+A third discipline stacks on the pipelined one: ``replicas=N`` routes
+closed batches across N per-device pipelines through a `ReplicaSet`
+(least-loaded routing, key-epoch pinning for per-key order, fault
+requeue — see :mod:`repro.serving.replicas`). Admission then aggregates
+fleet capacity: the depth budget scales with the healthy replica count
+(`AdmissionPolicy.effective_depth`), the scheduler backlog drains
+N-wide, and the in-flight wait term is the min-over-replicas backlog.
 """
 from __future__ import annotations
 
@@ -45,6 +53,7 @@ from repro.obs.trace import NULL_TRACER, label
 
 from .latency import LatencyModel
 from .pipeline import DispatchPipeline
+from .replicas import ReplicaSet
 from .scheduler import Scheduler, pow2_ceil
 from .stats import ServerStats
 
@@ -97,6 +106,22 @@ class AdmissionPolicy:
         self.max_depth = max_depth
         self.max_wait_ms = max_wait_ms
 
+    def effective_depth(self, replicas: int = 1) -> Optional[int]:
+        """Aggregate backlog budget: ``max_depth`` is a per-replica
+        window, so the fleet-level cap sums it over healthy replicas —
+        and shrinks again when the router marks a replica unhealthy.
+
+        >>> AdmissionPolicy(max_depth=8).effective_depth(4)
+        32
+        >>> AdmissionPolicy(max_depth=8).effective_depth()
+        8
+        >>> AdmissionPolicy(max_depth=None).effective_depth(4) is None
+        True
+        """
+        if self.max_depth is None:
+            return None
+        return self.max_depth * max(1, int(replicas))
+
 
 class RequestQueue:
     """Standing request queue with deadline-based batch closing."""
@@ -110,22 +135,35 @@ class RequestQueue:
                  clock=time.monotonic, attach: bool = True,
                  pipelined: bool = False, max_inflight: int = 4,
                  stage_workers: int = 1, adaptive_inflight: bool = False,
-                 tracer=None):
+                 tracer=None, replicas: Optional[int] = None):
         self.engine = engine
         self.clock = clock
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.default_deadline_ms = default_deadline_ms
         self.admission = admission if admission is not None \
             else AdmissionPolicy()
-        self.latency = latency_model if latency_model is not None \
-            else LatencyModel(
-                prior=getattr(engine, "latency_prior", None))
+        self.stats = ServerStats()
+        # ``replicas=N`` implies pipelined dispatch: the ReplicaSet owns
+        # one pipeline + LatencyModel per replica and exposes the same
+        # driving surface; the queue-level model becomes the read-only
+        # min-over-replicas aggregate (a caller-supplied latency_model
+        # is ignored — per-replica observation is the whole point).
+        self.replica_set: Optional[ReplicaSet] = None
+        if replicas is not None:
+            self.replica_set = ReplicaSet(
+                engine, replicas, stats=self.stats, clock=self.clock,
+                max_inflight=max_inflight, stage_workers=stage_workers,
+                adaptive_inflight=adaptive_inflight, tracer=self.tracer)
+            self.latency = self.replica_set.latency
+        else:
+            self.latency = latency_model if latency_model is not None \
+                else LatencyModel(
+                    prior=getattr(engine, "latency_prior", None))
         self.scheduler = Scheduler(
             self.latency, target_batch=target_batch,
             safety_factor=safety_factor,
             max_linger_s=None if max_linger_ms is None
             else max_linger_ms / 1e3)
-        self.stats = ServerStats()
         self._lock = threading.RLock()
         self._wake = threading.Condition(self._lock)
         # Serializes dispatches across threads. Lock order is always
@@ -136,7 +174,10 @@ class RequestQueue:
         # frozen while a retiring class drains and swaps.
         self._dispatch_gate = threading.Lock()
         self.pipeline: Optional[DispatchPipeline] = None
-        if pipelined:
+        if self.replica_set is not None:
+            self.pipeline = self.replica_set
+            self.stats.pipelined = True
+        elif pipelined:
             self.pipeline = DispatchPipeline(
                 engine, latency=self.latency, stats=self.stats,
                 clock=self.clock, max_inflight=max_inflight,
@@ -214,18 +255,28 @@ class RequestQueue:
                 self.stats.on_reject("stopped")
                 self._trace_reject(name, "stopped")
                 raise AdmissionError("stopped", "queue worker stopped")
+            n_healthy = self._healthy_replicas()
             depth = self.scheduler.depth()
-            if pol.max_depth is not None and depth >= pol.max_depth:
+            depth_cap = pol.effective_depth(n_healthy)
+            if depth_cap is not None and depth >= depth_cap:
                 self.stats.on_reject("depth")
                 self._trace_reject(name, "depth")
                 raise AdmissionError(
-                    "depth", f"queue depth {depth} >= {pol.max_depth}")
+                    "depth", f"queue depth {depth} >= {depth_cap}")
             if pol.max_wait_ms is not None:
                 wait_s = self.scheduler.estimated_wait_s(key, now)
+                if n_healthy > 1:
+                    # the scheduler backlog drains across every healthy
+                    # replica in parallel (the router spreads closed
+                    # plans), so the wait a request actually faces is
+                    # the fleet-divided estimate ...
+                    wait_s /= n_healthy
                 if self.pipeline is not None:
-                    # the scheduler sees only pending queues; work the
-                    # pipeline already owns (queued plans + the bounded
-                    # in-flight window) is wait all the same
+                    # ... plus work the pipeline already owns (queued
+                    # plans + the bounded in-flight window), which the
+                    # scheduler can't see. A ReplicaSet reports the
+                    # min-over-replicas backlog here: the router will
+                    # place this request's batch on that lane.
                     wait_s += self.pipeline.backlog_s()
                 if wait_s * 1e3 > pol.max_wait_ms:
                     self.stats.on_reject("wait")
@@ -248,6 +299,13 @@ class RequestQueue:
                     parent=req.span_request)
             self._wake.notify_all()
         return fut
+
+    def _healthy_replicas(self) -> int:
+        """Healthy replica count (1 for single-device queues) — the
+        admission capacity multiplier."""
+        if self.replica_set is None:
+            return 1
+        return max(1, self.replica_set.healthy_count())
 
     def _trace_reject(self, name: str, reason: str) -> None:
         """A rejected submission still yields a (trivially closed)
@@ -456,6 +514,13 @@ class RequestQueue:
         strand on the retired class's executors, and no batch can
         dispatch twice (plans leave the scheduler exactly once and the
         pipeline pops each exactly once).
+
+        Multi-replica mode strengthens the same barrier: the
+        `ReplicaSet` facade's ``flush`` quiesces EVERY replica's
+        pipeline (drain-all-before-invalidate), so when ``action`` runs
+        ``execute_retirement`` — which invalidates the class across all
+        per-replica executor caches — no replica holds live work keyed
+        on the retiring class.
         """
         with self._lock:
             plans = self.scheduler.close_matching(

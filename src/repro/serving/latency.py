@@ -201,3 +201,54 @@ class LatencyModel:
                     "cold_skipped": self.cold_skipped,
                     "split_entries": len(self._device),
                     "prior_hits": self.prior_hits}
+
+
+class AggregateLatencyModel:
+    """Read-only min-over-replicas view of per-replica latency models.
+
+    Under a `ReplicaSet` every replica learns its own EWMAs (replicas
+    may have speed skew, and one replica's compile must not pollute
+    another's estimates), but the scheduler and admission control need
+    ONE model answering "how fast can the fleet serve this key?". The
+    fleet serves a batch as fast as its best replica, so every estimate
+    is the minimum over the member models; each member applies its own
+    observation > prior > default fallback before the min is taken.
+
+    The aggregate is intentionally not observable: dispatch completions
+    must be folded into the owning replica's model (the pipeline does
+    this), never into the fleet view — ``observe`` raises to make
+    accidental single-device-style wiring fail loudly.
+
+    >>> a, b = LatencyModel(default_s=0.05), LatencyModel(default_s=0.05)
+    >>> a.observe("k", 4, 0.08); b.observe("k", 4, 0.02)
+    >>> agg = AggregateLatencyModel([a, b])
+    >>> agg.estimate("k", 4)
+    0.02
+    >>> agg.known("k", 4)
+    True
+    """
+
+    def __init__(self, models):
+        if not models:
+            raise ValueError("AggregateLatencyModel needs >= 1 model")
+        self.models = list(models)
+        self.default_s = self.models[0].default_s
+
+    def observe(self, *args, **kwargs) -> None:
+        raise TypeError(
+            "AggregateLatencyModel is read-only: fold observations into "
+            "the owning replica's own LatencyModel")
+
+    def estimate(self, key, batch: int) -> float:
+        return min(m.estimate(key, batch) for m in self.models)
+
+    def estimate_segments(self, key, batch: int) -> tuple:
+        return min((m.estimate_segments(key, batch) for m in self.models),
+                   key=sum)
+
+    def known(self, key, batch: int) -> bool:
+        return any(m.known(key, batch) for m in self.models)
+
+    def snapshot(self) -> dict:
+        return {"replicas": len(self.models),
+                "models": [m.snapshot() for m in self.models]}

@@ -96,7 +96,8 @@ class DispatchPipeline:
 
     def __init__(self, engine, latency, stats, clock, *,
                  max_inflight: int = 4, stage_workers: int = 1,
-                 adaptive_inflight: bool = False, tracer=None):
+                 adaptive_inflight: bool = False, tracer=None,
+                 replica_id: int = -1):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         if stage_workers < 1:
@@ -107,6 +108,15 @@ class DispatchPipeline:
         self.stats = stats
         self.clock = clock
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        # -1 = single-device pipeline; >= 0 labels this pipeline's device
+        # spans, stats, and in-flight gauges with its replica in a
+        # `ReplicaSet` (each replica owns exactly one pipeline).
+        self.replica_id = replica_id
+        # optional `(members, err) -> bool` hook consulted before member
+        # futures carry a dispatch error; returning True means the
+        # handler took ownership (the ReplicaSet's fault-requeue path).
+        # Set post-construction, before any dispatch.
+        self.fail_handler = None
         # ``max_inflight`` is the LIVE window bound (what staging checks);
         # ``inflight_cap`` the configured ceiling. With adaptive_inflight
         # the live bound tracks the observed staging/device overlap: a
@@ -196,6 +206,9 @@ class DispatchPipeline:
         return groups
 
     def _fail(self, members, err: Exception) -> None:
+        handler = self.fail_handler
+        if handler is not None and handler(members, err):
+            return                     # requeued elsewhere, futures live
         self.stats.on_dispatch_error()
         tr = self.tracer
         for r in members:
@@ -278,14 +291,19 @@ class DispatchPipeline:
         tr = self.tracer
         if tr.enabled and any(r.span_request >= 0 for r in members):
             # the device window opens HERE (enqueue returned); it closes
-            # on whichever thread drains the batch — explicit span id
+            # on whichever thread drains the batch — explicit span id.
+            # The replica label (when >= 0) is what routes the span onto
+            # its own per-replica device track in the Chrome export.
+            span_args = {"reqs": [r.seq for r in members]}
+            if self.replica_id >= 0:
+                span_args["replica"] = self.replica_id
             batch.span = tr.begin(
-                "device", "device", parent=span_parent,
-                args={"reqs": [r.seq for r in members]})
+                "device", "device", parent=span_parent, args=span_args)
         with self._lock:
             self._inflight.append(batch)
             self._work.notify_all()
-        self.stats.on_inflight(self.depth_inflight())
+        self.stats.on_inflight(self.depth_inflight(),
+                               replica=self.replica_id)
 
     # -------------------------------------------------------- completion ----
     def _drain_one(self, block: bool) -> bool:
@@ -311,7 +329,8 @@ class DispatchPipeline:
                 self._completing -= 1
                 self._room.notify_all()
                 self._idle.notify_all()
-            self.stats.on_inflight(self.depth_inflight())
+            self.stats.on_inflight(self.depth_inflight(),
+                                   replica=self.replica_id)
         return True
 
     def _finish(self, batch: InflightBatch) -> None:
@@ -339,11 +358,14 @@ class DispatchPipeline:
         device_s = now - batch.t_enqueued
         tr.end(sp_wait)
         if batch.span >= 0:
-            tr.end(batch.span, args={
+            end_args = {
                 "reqs": [r.seq for r in batch.members],
                 "live": len(batch.members), "padded": batch.padded,
                 "reason": batch.reason, "cold": batch.cold,
-                "sclass": label(batch.key[0])})
+                "sclass": label(batch.key[0])}
+            if self.replica_id >= 0:
+                end_args["replica"] = self.replica_id
+            tr.end(batch.span, args=end_args)
             if batch.cold:
                 tr.instant("compile_cold", "engine", parent=batch.span)
         if self.adaptive_inflight and device_s > 0:
@@ -351,7 +373,8 @@ class DispatchPipeline:
         self.latency.observe(batch.key, batch.padded, cold=batch.cold,
                              staging_s=batch.staging_s, device_s=device_s)
         self.stats.on_batch(len(batch.members), batch.padded, batch.reason)
-        self.stats.on_pipeline(batch.staging_s, device_s, wait_s)
+        self.stats.on_pipeline(batch.staging_s, device_s, wait_s,
+                               replica=self.replica_id)
         for r, y in zip(batch.members, batch.outs):
             if r.future is not None and not r.future.cancelled():
                 r.future.set_result(y)
@@ -393,6 +416,17 @@ class DispatchPipeline:
             return 0
         n = 0
         while self._drain_one(block=False):
+            n += 1
+        return n
+
+    def drain_inflight(self) -> int:
+        """Complete (or fail) every batch currently in the in-flight
+        window, blocking on each. The `ReplicaSet` fault path uses this
+        to evict a dead replica's window in FIFO order — each batch
+        raises at completion and lands in the failure handler — before
+        requeueing, so rescued members keep their per-key order."""
+        n = 0
+        while self._drain_one(block=True):
             n += 1
         return n
 
@@ -564,7 +598,8 @@ class DispatchPipeline:
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {"max_inflight": self.max_inflight,
+            return {"replica_id": self.replica_id,
+                    "max_inflight": self.max_inflight,
                     "inflight_cap": self.inflight_cap,
                     "adaptive_inflight": self.adaptive_inflight,
                     "overlap_ewma": self.overlap_ewma,

@@ -8,6 +8,14 @@ service-time model with the same ``handle`` / ``serve_group`` /
 ``executors.stats.misses`` surface) — so an entire arrival trace replays
 in microseconds, bit-for-bit reproducibly.
 
+Multi-replica simulation: ``StubEngine(..., replicas=N)`` models N
+device timelines (`StubReplica`: per-replica ``device_free_s``,
+configurable speed skew and a fault schedule that raises `ReplicaFault`
+mid-window), and ``replica_view(i)`` hands each `ReplicaSet` lane a
+view bound to its own timeline — `run_replica_smoke` and
+`run_replica_fault_smoke` replay the same traces against 1 vs N
+simulated replicas entirely offline.
+
 The same replay loop (`replay_trace`) also drives the *real* engine in
 ``benchmarks/bench_serving.py``: only the clock and the dispatch target
 change between simulation and production measurement.
@@ -24,6 +32,7 @@ import numpy as np
 from repro.obs.metrics import percentile
 
 from .frontend import AdmissionError, AdmissionPolicy, RequestQueue
+from .replicas import ReplicaFault
 from .scheduler import pow2_ceil
 from .stats import SimClock
 
@@ -100,6 +109,56 @@ class StubShapeClass:
         return f"StubClass cap={self.cap} gen={self.gen}"
 
 
+@dataclasses.dataclass
+class StubReplica:
+    """One simulated device timeline inside a multi-replica `StubEngine`.
+
+    ``speed`` scales the warm service rate (2.0 = twice as fast —
+    replica skew for the router tests); ``fault_after`` is the dispatch
+    count at which the replica dies: the NEXT dispatch raises
+    `ReplicaFault`, and every batch already in flight raises the same
+    fault from its completion hook (a device lost mid-window). Each
+    replica warms its own ``compiled`` set — executors are per-device
+    state, so a fresh replica pays its own compiles.
+    """
+
+    replica_id: int
+    speed: float = 1.0
+    fault_after: Optional[int] = None
+    device_free_s: float = 0.0
+    dead: bool = False
+    dispatches: int = 0
+    compiled: set = dataclasses.field(default_factory=set)
+
+
+class _StubReplicaView:
+    """The engine surface `DispatchPipeline` drives, bound to one
+    replica's timeline — what ``StubEngine.replica_view`` returns and
+    `ReplicaSet` wires one pipeline around."""
+
+    def __init__(self, engine: "StubEngine", replica_id: int):
+        self._engine = engine
+        self.replica_id = replica_id
+
+    def group_key(self, name: str, x) -> tuple:
+        return self._engine.group_key(name, x)
+
+    def handle(self, name: str):
+        return self._engine.handle(name)
+
+    @property
+    def executors(self):
+        return self._engine.executors
+
+    def serve_group_async(self, requests, prepared=None) -> tuple:
+        return self._engine.serve_group_async(
+            requests, prepared, replica=self.replica_id)
+
+    def serve_group(self, requests) -> list:
+        return self._engine.serve_group(requests,
+                                        replica=self.replica_id)
+
+
 class StubEngine:
     """Engine stand-in: serve_group advances the SimClock by a modeled
     service time instead of running kernels.
@@ -120,12 +179,23 @@ class StubEngine:
     `repro.engine.lifecycle.LifecycleManager` runs against it
     unchanged — retirement, successor routing, and recompile
     accounting all exercise with zero real compiles.
+
+    Replica surface: ``replicas=N`` models N independent device
+    timelines (`StubReplica`), ``speeds`` maps replica_id -> rate
+    multiplier, ``faults`` maps replica_id -> dispatch count after
+    which that replica dies. ``replica_view(i)`` returns the per-lane
+    view a `ReplicaSet` pipeline drives; the default single replica
+    plus the ``device_free_s`` / ``_compiled`` properties keep every
+    pre-replica caller byte-compatible.
     """
 
     def __init__(self, clock: SimClock, *, base_s: float = 0.004,
                  per_item_s: float = 0.001, compile_s: float = 0.25,
                  stage_s: float = 0.002, sclass_of=None,
-                 growth: float = 2.0, fit_slack: float = 4.0):
+                 growth: float = 2.0, fit_slack: float = 4.0,
+                 replicas: int = 1, speeds=None, faults=None):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.clock = clock
         self.base_s = base_s
         self.per_item_s = per_item_s
@@ -133,10 +203,16 @@ class StubEngine:
         self.stage_s = stage_s
         self.growth = growth
         self.fit_slack = fit_slack
-        self.device_free_s = 0.0     # modeled device-stream timeline
+        speeds = speeds or {}
+        if isinstance(speeds, (list, tuple)):
+            speeds = dict(enumerate(speeds))
+        faults = faults or {}
+        self.replicas = [
+            StubReplica(replica_id=i, speed=float(speeds.get(i, 1.0)),
+                        fault_after=faults.get(i))
+            for i in range(replicas)]
         self.executors = _StubExecutors()
         self._graphs: dict = {}
-        self._compiled: set = set()
         self._sclass_of = sclass_of or (lambda name: "simclass")
         self.dispatches: list = []     # (key, batch, reason placeholder)
         self.classes: list = []        # live StubShapeClass, found order
@@ -146,6 +222,28 @@ class StubEngine:
         self._frontend = None
         self._lifecycle = None
         self.tracer = None     # set by attach_tracer (repro.obs)
+
+    # ------------------------------------------------- replica surface ----
+    @property
+    def device_free_s(self) -> float:
+        """Back-compat single-device timeline == replica 0's."""
+        return self.replicas[0].device_free_s
+
+    @device_free_s.setter
+    def device_free_s(self, v: float) -> None:
+        self.replicas[0].device_free_s = v
+
+    @property
+    def _compiled(self) -> set:
+        """Back-compat warm-executor set == replica 0's."""
+        return self.replicas[0].compiled
+
+    def replica_view(self, i: int) -> _StubReplicaView:
+        """The per-replica engine view a `ReplicaSet` lane drives."""
+        if not 0 <= i < len(self.replicas):
+            raise IndexError(
+                f"replica {i} out of range (have {len(self.replicas)})")
+        return _StubReplicaView(self, i)
 
     # ------------------------------------------------------- offline ----
     def _fits(self, size: int, sc: StubShapeClass) -> bool:
@@ -195,32 +293,49 @@ class StubEngine:
     def service_s(self, batch: int) -> float:
         return self.base_s + self.per_item_s * batch
 
-    def serve_group_async(self, requests, prepared=None) -> tuple:
+    def serve_group_async(self, requests, prepared=None, *,
+                          replica: int = 0) -> tuple:
         """Non-blocking dispatch against the modeled device timeline.
 
         Host-side cost (compile if cold, plus ``stage_s`` of staging)
         advances the SimClock — it occupies the pump/staging thread.
-        Device-side cost occupies a separate ``device_free_s`` timeline:
-        the batch starts when the device frees up and finishes
-        ``service_s`` later, so staging batch k+1 while batch k computes
-        genuinely overlaps in virtual time — exactly the behavior the
-        pipelined dispatch policy is CI-tested against with zero real
-        compiles. The completion hook advances the clock to the finish
-        instant (a host that waits), ``ready`` polls it.
+        Device-side cost occupies a separate per-replica
+        ``device_free_s`` timeline: the batch starts when that device
+        frees up and finishes ``service_s / speed`` later, so staging
+        batch k+1 while batch k computes genuinely overlaps in virtual
+        time — exactly the behavior the pipelined dispatch policy is
+        CI-tested against with zero real compiles. The completion hook
+        advances the clock to the finish instant (a host that waits),
+        ``ready`` polls it.
+
+        Fault schedule: a dead replica raises `ReplicaFault` here, and
+        a replica whose ``fault_after`` budget is spent dies on this
+        dispatch. Batches already enqueued when the replica dies raise
+        the same fault from ``complete`` — lost mid-window, which is
+        what the `ReplicaSet` rescue path is tested against.
         """
+        rep = self.replicas[replica]
+        if rep.dead:
+            raise ReplicaFault(f"stub replica {replica} is dead")
+        rep.dispatches += 1
+        if rep.fault_after is not None and rep.dispatches > rep.fault_after:
+            rep.dead = True
+            raise ReplicaFault(
+                f"stub replica {replica} died on dispatch "
+                f"{rep.dispatches} (fault_after={rep.fault_after})")
         key = self.group_key(requests[0][0], requests[0][1])
         bs = pow2_ceil(len(requests))
         exec_key = (key, bs)
         cold = False
-        if exec_key not in self._compiled:
-            self._compiled.add(exec_key)
+        if exec_key not in rep.compiled:
+            rep.compiled.add(exec_key)
             self.executors.stats.misses += 1
             self.clock.advance(self.compile_s)   # jit compiles host-side
             cold = True
         self.clock.advance(self.stage_s)         # pad/stack/enqueue
-        start = max(self.clock(), self.device_free_s)
-        done = start + self.service_s(bs)
-        self.device_free_s = done
+        start = max(self.clock(), rep.device_free_s)
+        done = start + self.service_s(bs) / rep.speed
+        rep.device_free_s = done
         self.dispatches.append((key, len(requests)))
         sc = key[0]
         self._traffic[sc] = self._traffic.get(sc, 0) + 1
@@ -229,19 +344,22 @@ class StubEngine:
         clock = self.clock
 
         def ready() -> bool:
-            return clock() >= done - 1e-12
+            return rep.dead or clock() >= done - 1e-12
 
         def complete() -> None:
+            if rep.dead:
+                raise ReplicaFault(
+                    f"stub replica {rep.replica_id} died mid-window")
             if clock() < done:
                 clock.advance(done - clock())
 
         return outs, {"cold": cold, "ready": ready, "complete": complete,
                       "done_s": done}
 
-    def serve_group(self, requests) -> list:
+    def serve_group(self, requests, *, replica: int = 0) -> list:
         """Blocking dispatch: enqueue, then wait out the device — the
         serial discipline (host and device strictly alternate)."""
-        outs, meta = self.serve_group_async(requests)
+        outs, meta = self.serve_group_async(requests, replica=replica)
         meta["complete"]()
         return outs
 
@@ -306,11 +424,17 @@ class StubEngine:
                 self._gen = max(self._gen, target.gen + 1)
             h.sclass = target
             moved += 1
-        dead = [k for k in self._compiled if k[0][0] == sc]
-        for k in dead:
-            self._compiled.discard(k)
-        self.executors_invalidated += len(dead)
-        return {"members": moved, "executors_invalidated": len(dead),
+        # Invalidate the retired class's warm executors on EVERY
+        # replica — `drain_class` has already quiesced all lanes, so
+        # nothing can be serving a stale key while the sets shrink.
+        dead = 0
+        for rep in self.replicas:
+            stale = [k for k in rep.compiled if k[0][0] == sc]
+            for k in stale:
+                rep.compiled.discard(k)
+            dead += len(stale)
+        self.executors_invalidated += dead
+        return {"members": moved, "executors_invalidated": dead,
                 "new_classes": len(plan.new_classes)}
 
 
@@ -825,3 +949,256 @@ def run_lifecycle_smoke(verbose: bool = True) -> dict:
         print("[sim] lifecycle drift smoke OK "
               f"(virtual time {clock():.2f}s, real compiles: 0)")
     return snap
+
+
+def _attach_order_probe(queue) -> list:
+    """Wrap ``queue.submit`` so the returned list records ``id(future)``
+    in RESOLUTION order — the per-key ordering oracle (resolve instants
+    alone can tie on a SimClock; the callback sequence cannot)."""
+    order: list = []
+    orig_submit = queue.submit
+
+    def submit(name, x, deadline_ms=None):
+        fut = orig_submit(name, x, deadline_ms=deadline_ms)
+        fut.add_done_callback(lambda f: order.append(id(f)))
+        return fut
+
+    queue.submit = submit
+    return order
+
+
+def _assert_key_order(trace, futs, order) -> None:
+    """Within every group key (one per name here), resolution order
+    must equal submit order — the `ReplicaSet` epoch-pinning contract."""
+    rank = {fid: i for i, fid in enumerate(order)}
+    by_name: dict = {}
+    for arr, f in zip(trace, futs):
+        by_name.setdefault(arr.name, []).append(rank[id(f)])
+    for name, ranks in by_name.items():
+        assert ranks == sorted(ranks), \
+            f"key {name!r} resolved out of submit order: {ranks}"
+
+
+def run_replica_smoke(verbose: bool = True, replicas: int = 4) -> dict:
+    """Deterministic 1-vs-N replica comparison (the ISSUE 9 contract).
+
+    The same bursty trace — heavy enough to saturate one simulated
+    device — replays through a single-replica `ReplicaSet` and an
+    N-replica one over identical `StubEngine` worlds on a `SimClock`.
+    Four graph names map to four distinct shape classes, so the router
+    has four independent group keys to spread across lanes while the
+    key-epoch pin keeps each key's order intact. Asserts: outputs
+    bitwise-equal between 1 and N replicas, per-key resolution order ==
+    submit order in both, >= 3x aggregate throughput at N=4, zero
+    deadline misses added, every replica routed work, and (traced
+    re-run) device spans landing on >= 2 per-replica device tracks with
+    every span tree closed. Zero real compiles.
+    """
+    def run(n: int, traced: bool = False) -> tuple:
+        clock = SimClock()
+        engine = StubEngine(clock, base_s=0.004, per_item_s=0.002,
+                            stage_s=0.002, compile_s=0.25, replicas=n,
+                            sclass_of=lambda name: name)
+        names = [f"rep{i}" for i in range(4)]
+        for nm in names:
+            engine.register(nm)
+        xs = {nm: np.full((4, 3), float(i + 1), np.float32)
+              for i, nm in enumerate(names)}
+        tracer = None
+        if traced:
+            from repro.obs.trace import Tracer
+            tracer = Tracer(capacity=1 << 16, clock=clock)
+        queue = RequestQueue(engine, target_batch=4,
+                             default_deadline_ms=2000.0, clock=clock,
+                             replicas=n, max_inflight=4, tracer=tracer)
+        # Warm every replica at every pow2 batch the replay can hit —
+        # executors are per-device state, so each lane pays its own.
+        for i in range(n):
+            for bs in (1, 2, 4):
+                for nm in names:
+                    engine.serve_group([(nm, xs[nm])] * bs, replica=i)
+        order = _attach_order_probe(queue)
+        # bursts of 12 every 8ms: one device owes 3 closed 4-batches
+        # (3 x 12ms) per 8ms of arrivals — saturated; four devices
+        # retire it in step. Names rotate round-robin over the bursty
+        # arrival times so all four keys carry equal load (the router
+        # spreads KEYS, so a lopsided key would serialize on its lane
+        # and measure the straggler, not the fleet).
+        trace = bursty_trace(40, 12, 0.008, names, seed=3)
+        t0 = clock()
+        trace = [Arrival(a.t_s + t0 + 0.05, names[i % len(names)])
+                 for i, a in enumerate(trace)]
+        futs, rej = replay_trace(queue, trace, xs.__getitem__)
+        assert not any(rej), "default admission must admit the trace"
+        queue.drain()
+        makespan = clock() - trace[0].t_s
+        outs = [np.asarray(f.result(timeout=0)) for f in futs]
+        _assert_key_order(trace, futs, order)
+        return queue, outs, makespan, tracer
+
+    q1, outs1, makespan1, _ = run(1)
+    qn, outsn, makespann, _ = run(replicas)
+
+    for i, (a, b) in enumerate(zip(outs1, outsn)):
+        assert np.array_equal(a, b), \
+            f"request {i}: {replicas}-replica output differs bitwise " \
+            f"from single-replica"
+
+    snap1 = q1.stats.snapshot()
+    snapn = qn.stats.snapshot()
+    assert snap1["deadline_misses"] == 0, snap1
+    assert snapn["deadline_misses"] == 0, \
+        f"replicas must not add deadline misses: {snapn}"
+    assert snapn["completed"] == snap1["completed"] == len(outsn)
+
+    tput1 = len(outs1) / makespan1
+    tputn = len(outsn) / makespann
+    speedup = tputn / tput1
+    assert speedup >= 3.0, \
+        f"{replicas} replicas must give >=3x throughput: " \
+        f"{tput1:.0f} -> {tputn:.0f} rps ({speedup:.2f}x)"
+
+    rsnap = snapn["replicas"]
+    assert rsnap["count"] == replicas, rsnap
+    served = [r for r, d in rsnap["per_replica"].items()
+              if d["batches"] > 0]
+    assert len(served) >= 2, \
+        f"router must spread keys across replicas: {rsnap['per_replica']}"
+    assert rsnap["faults"] == 0 and rsnap["requeued"] == 0
+    assert qn.replica_set.healthy_count() == replicas
+
+    # --- traced re-run: per-replica device tracks in the export --------
+    from repro.obs.export import write_chrome_trace
+    from repro.obs.report import check_complete
+
+    q_tr, outs_tr, _, tracer = run(replicas, traced=True)
+    for i, (a, b) in enumerate(zip(outsn, outs_tr)):
+        assert np.array_equal(a, b), \
+            f"request {i}: traced output differs bitwise from untraced"
+    assert not tracer.wrapped(), "the smoke trace must fit the ring"
+    fd, tmp = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        doc = write_chrome_trace(
+            tmp, tracer, metadata={"serving": q_tr.stats.snapshot()})
+    finally:
+        os.unlink(tmp)
+    problems = check_complete(doc)
+    assert not problems, f"incomplete span trees: {problems}"
+    device_tids = {ev["tid"] for ev in doc["traceEvents"]
+                   if ev["ph"] == "X" and ev["cat"] == "device"}
+    assert len(device_tids) >= 2, \
+        f"device spans must land on per-replica tracks: {device_tids}"
+
+    out = {"replicas": replicas,
+           "completed": snapn["completed"],
+           "throughput_rps_1": tput1,
+           "throughput_rps_n": tputn,
+           "replica_speedup_x": speedup,
+           "makespan_s_1": makespan1,
+           "makespan_s_n": makespann,
+           "replicas_served": len(served),
+           "key_epochs": rsnap["key_epochs"],
+           "per_replica_util": {
+               r: d["device_span_s"] / makespann
+               for r, d in rsnap["per_replica"].items()},
+           "device_tracks": len(device_tids)}
+    if verbose:
+        util = " ".join(f"r{r}={u:.2f}"
+                        for r, u in sorted(out["per_replica_util"].items()))
+        print(f"[sim] replicas: {tput1:.0f} -> {tputn:.0f} rps "
+              f"({speedup:.2f}x at {replicas} replicas) | "
+              f"makespan {makespan1 * 1e3:.0f} -> "
+              f"{makespann * 1e3:.0f}ms | util {util}")
+        print(f"[sim] replica routing: {len(served)}/{replicas} lanes "
+              f"served, key_epochs={rsnap['key_epochs']}, "
+              f"{len(device_tids)} device tracks in the trace")
+        print("[sim] replica smoke OK (outputs bitwise-equal, per-key "
+              "order preserved, real compiles: 0)")
+    return out
+
+
+def run_replica_fault_smoke(verbose: bool = True) -> dict:
+    """Fault-injection contract: a replica that dies mid-window strands
+    nothing.
+
+    Three simulated replicas take the trace; replica 1's fault schedule
+    kills it partway through. The `ReplicaSet` must mark it unhealthy,
+    drain its in-flight window (every batch fails at completion),
+    requeue all rescued members onto survivors in submit order, and
+    shrink admission capacity to the surviving lanes. Asserts: every
+    future resolves with the correct value (zero stranded), per-key
+    order holds across the migration, at most one duplicate dispatch
+    suppressed, healthy count drops to 2, and
+    `AdmissionPolicy.effective_depth` tracks it. Zero real compiles.
+    """
+    clock = SimClock()
+    names = [f"flt{i}" for i in range(3)]
+    # 9 warm dispatches land on each replica before traffic; replica 1
+    # then dies on its 5th trace-driven dispatch — mid-trace, with work
+    # in flight.
+    engine = StubEngine(clock, base_s=0.004, per_item_s=0.001,
+                        stage_s=0.002, compile_s=0.25, replicas=3,
+                        faults={1: 13}, sclass_of=lambda name: name)
+    for nm in names:
+        engine.register(nm)
+    xs = {nm: np.full((4, 3), float(i + 1), np.float32)
+          for i, nm in enumerate(names)}
+    queue = RequestQueue(engine, target_batch=4,
+                         default_deadline_ms=2000.0, clock=clock,
+                         replicas=3, max_inflight=4)
+    for i in range(3):
+        for bs in (1, 2, 4):
+            for nm in names:
+                engine.serve_group([(nm, xs[nm])] * bs, replica=i)
+    order = _attach_order_probe(queue)
+    trace = bursty_trace(20, 9, 0.010, names, seed=7)
+    t0 = clock()
+    trace = [Arrival(a.t_s + t0 + 0.05, a.name) for a in trace]
+    futs, rej = replay_trace(queue, trace, xs.__getitem__)
+    assert not any(rej), "default admission must admit the trace"
+    queue.drain()
+
+    # Zero stranded futures: everything resolves, with correct values —
+    # rescued members were re-dispatched, not failed.
+    assert all(f.done() for f in futs), "fault stranded futures"
+    for arr, f in zip(trace, futs):
+        np.testing.assert_array_equal(f.result(timeout=0),
+                                      xs[arr.name] * 2.0)
+    _assert_key_order(trace, futs, order)
+    assert queue.depth() == 0 and queue.inflight() == 0
+
+    rs = queue.replica_set
+    assert rs.healthy_count() == 2, \
+        f"replica 1 must be marked unhealthy: {rs.snapshot()}"
+    assert not rs.replica(1).healthy
+    rsnap = queue.stats.replica_snapshot()
+    assert rsnap["faults"] >= 1, rsnap
+    assert rsnap["requeued"] >= 1, \
+        f"the dead replica's window must requeue: {rsnap}"
+    assert rsnap["dup_suppressed"] <= 1, \
+        f"at most one duplicate dispatch suppressed: {rsnap}"
+    snap = queue.stats.snapshot()
+    assert snap["completed"] == len(futs)
+    assert snap["deadline_misses"] == 0, snap
+
+    # Admission capacity shrinks with the healthy count.
+    pol = AdmissionPolicy(max_depth=8)
+    assert queue._healthy_replicas() == 2
+    assert pol.effective_depth(queue._healthy_replicas()) == 16 \
+        < pol.effective_depth(3)
+
+    out = {"replicas": 3, "healthy": rs.healthy_count(),
+           "completed": snap["completed"],
+           "faults": rsnap["faults"], "requeued": rsnap["requeued"],
+           "dup_suppressed": rsnap["dup_suppressed"],
+           "key_epochs": rsnap["key_epochs"]}
+    if verbose:
+        print(f"[sim] fault: replica 1 died mid-window -> "
+              f"{rsnap['requeued']} members requeued, "
+              f"{rsnap['dup_suppressed']} dup suppressed, "
+              f"{snap['completed']}/{len(futs)} completed, "
+              f"healthy {rs.healthy_count()}/3")
+        print("[sim] replica fault smoke OK (zero stranded futures, "
+              "admission capacity shrunk, real compiles: 0)")
+    return out

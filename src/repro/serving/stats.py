@@ -23,8 +23,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.obs.metrics import (Counter, CounterFamily, Gauge, Histogram,
-                               MetricsRegistry, percentile_ms)
+from repro.obs.metrics import (Counter, CounterFamily, Gauge, GaugeFamily,
+                               Histogram, MetricsRegistry, percentile_ms)
 
 # Cap on retained per-request latency samples: percentiles come from the
 # most recent window, so a long-lived server's stats dict stays bounded.
@@ -109,6 +109,25 @@ class ServerStats:
         ``trace_report`` cross-checks its span-measured ratio against
         this family.
 
+    Multi-replica telemetry (``replicas.*``, populated only when the
+    frontend dispatches through a `ReplicaSet`; surfaces in
+    ``snapshot()["replicas"]``):
+
+    ``replicas.depth`` / ``replicas.depth_peak``
+        Per-replica pipeline depth (current / peak), labeled by
+        ``replica_id``.
+    ``replicas.batches`` / ``replicas.routed``
+        Per-replica dispatched-batch and router-decision counts.
+    ``replicas.device_span_s`` / ``replicas.device_wait_s``
+        Per-replica cumulative device span vs blocked-wait time; their
+        ratio is the per-replica overlap in the snapshot.
+    ``replicas.faults`` / ``replicas.requeued`` /
+    ``replicas.dup_suppressed`` / ``replicas.key_epochs``
+        Fault-handling counters: replicas marked unhealthy, member
+        requests requeued onto survivors, duplicate dispatches
+        suppressed (future already resolved at requeue), and key→
+        replica pin epochs opened by the router.
+
     >>> s = ServerStats()
     >>> s.on_arrival(0.0); s.on_batch(3, padded=4, reason="drain")
     >>> s.on_complete(0.25, missed=False)
@@ -144,6 +163,17 @@ class ServerStats:
         self._device_wait_total = Counter("serving.device_wait_total_s", m)
         self._overlap = Histogram("serving.overlap", m,
                                   window=LATENCY_WINDOW)
+        # multi-replica telemetry (populated only under a ReplicaSet)
+        self._replica_depth = GaugeFamily("replicas.depth", m)
+        self._replica_depth_peak = GaugeFamily("replicas.depth_peak", m)
+        self._replica_batches = CounterFamily("replicas.batches", m)
+        self._replica_routed = CounterFamily("replicas.routed", m)
+        self._replica_span = CounterFamily("replicas.device_span_s", m)
+        self._replica_wait = CounterFamily("replicas.device_wait_s", m)
+        self._replica_faults = Counter("replicas.faults", m)
+        self._replica_requeued = Counter("replicas.requeued", m)
+        self._replica_dups = Counter("replicas.dup_suppressed", m)
+        self._key_epochs = Counter("replicas.key_epochs", m)
 
     # ------------------------------------------------------------ hooks ----
     def on_arrival(self, now: float) -> None:
@@ -170,13 +200,19 @@ class ServerStats:
     def on_dispatch_error(self) -> None:
         self._dispatch_errors.inc()
 
-    def on_inflight(self, depth: int) -> None:
-        """Gauge update from the dispatch pipeline's window."""
+    def on_inflight(self, depth: int, replica: int = -1) -> None:
+        """Gauge update from the dispatch pipeline's window. Under a
+        `ReplicaSet` each pipeline reports its own depth under its
+        ``replica_id`` label (the aggregate depth is their sum, computed
+        at snapshot time)."""
         self._inflight_depth.set(depth)
         self._inflight_peak.set_max(depth)
+        if replica >= 0:
+            self._replica_depth.set(replica, depth)
+            self._replica_depth_peak.set_max(replica, depth)
 
     def on_pipeline(self, staging_s: float, device_s: float,
-                    wait_s: float) -> None:
+                    wait_s: float, replica: int = -1) -> None:
         """One pipelined batch's segment record: host staging time,
         enqueue→ready device span, and the host time actually spent
         blocked on that span (the unhidden remainder)."""
@@ -187,6 +223,34 @@ class ServerStats:
         if device_s > 0:
             self._overlap.observe(
                 min(1.0, max(0.0, 1.0 - wait_s / device_s)))
+        if replica >= 0:
+            self._replica_batches.inc(replica)
+            self._replica_span.inc(replica, device_s)
+            self._replica_wait.inc(replica, min(wait_s, device_s))
+
+    # --------------------------------------------------- replica hooks ----
+    def on_route(self, replica: int) -> None:
+        """One router decision: a closed plan enrolled on ``replica``."""
+        self._replica_routed.inc(replica)
+
+    def on_key_epoch(self) -> None:
+        """A group key (re)pinned to a replica — a new routing epoch."""
+        self._key_epochs.inc()
+
+    def on_replica_fault(self) -> None:
+        """A replica raised from its fault schedule and was marked
+        unhealthy by the router."""
+        self._replica_faults.inc()
+
+    def on_requeued(self, n: int = 1) -> None:
+        """Member requests rescued from a dead replica's batch and
+        requeued onto a surviving replica."""
+        self._replica_requeued.inc(n)
+
+    def on_dup_suppressed(self, n: int = 1) -> None:
+        """Requeue skipped a member whose future had already resolved —
+        a duplicate dispatch suppressed."""
+        self._replica_dups.inc(n)
 
     # ------------------------------------------- legacy attribute views ----
     @property
@@ -311,8 +375,42 @@ class ServerStats:
             return 0.0
         return float(np.mean(np.asarray(window)) * 1e3)
 
-    def snapshot(self) -> dict:
+    def replica_snapshot(self) -> dict:
+        """Per-replica depth/overlap plus the aggregate latency
+        percentiles (the global histogram pools every replica's
+        completions, so its p50/p99 ARE the aggregate figures)."""
+        depths = self._replica_depth.as_dict()
+        peaks = self._replica_depth_peak.as_dict()
+        batches = self._replica_batches.as_dict()
+        routed = self._replica_routed.as_dict()
+        spans = self._replica_span.as_dict()
+        waits = self._replica_wait.as_dict()
+        per = {}
+        for rid in sorted(set(depths) | set(batches) | set(routed)):
+            span = spans.get(rid, 0.0)
+            per[rid] = {
+                "depth": depths.get(rid, 0),
+                "depth_peak": peaks.get(rid, 0),
+                "batches": batches.get(rid, 0),
+                "routed": routed.get(rid, 0),
+                "device_span_s": span,
+                "overlap_ratio":
+                    (1.0 - waits.get(rid, 0.0) / span) if span > 0 else 0.0,
+            }
         return {
+            "count": len(per),
+            "per_replica": per,
+            "inflight_depth": sum(depths.values()),
+            "p50_ms": self.latency_percentile_ms(50),
+            "p99_ms": self.latency_percentile_ms(99),
+            "faults": self._replica_faults.value,
+            "requeued": self._replica_requeued.value,
+            "dup_suppressed": self._replica_dups.value,
+            "key_epochs": self._key_epochs.value,
+        }
+
+    def snapshot(self) -> dict:
+        snap = {
             "arrivals": self.arrivals,
             "completed": self.completed,
             "rejected": self.rejected,
@@ -340,6 +438,11 @@ class ServerStats:
             "overlap_p90": self.overlap_percentile(90),
             "overlap_samples": self.overlap_samples,
         }
+        # only multi-replica frontends grow the block: single-pipeline
+        # snapshots stay byte-identical to the pre-replica format
+        if self._replica_routed.as_dict() or self._replica_depth.as_dict():
+            snap["replicas"] = self.replica_snapshot()
+        return snap
 
     def summary(self) -> str:
         return (f"ServerStats arrivals={self.arrivals} "

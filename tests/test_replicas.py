@@ -1,0 +1,241 @@
+"""Multi-replica serving tests (ISSUE 9).
+
+Covers the `ReplicaSet` router contracts end-to-end on simulated
+replicas (`StubEngine` + `SimClock`, zero real compiles):
+
+- property test: for any interleaving of submits across keys and any
+  replica count / speed skew, per-key responses arrive in submit order
+  and every future resolves exactly once;
+- fault injection: a replica that dies mid-window strands nothing —
+  in-flight batches requeue onto survivors, the router marks it
+  unhealthy, and admission capacity shrinks;
+- lifecycle regression: `drain_class` with 4 replicas quiesces every
+  replica's pipeline before `invalidate_class`, and no replica serves
+  a retired class key after the swap.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (AdmissionPolicy, RequestQueue, SimClock,
+                           StubEngine, run_replica_fault_smoke,
+                           run_replica_smoke)
+
+
+def _order_probe(queue):
+    """Record id(future) in resolution order (callback sequence — the
+    oracle; resolve instants can tie on a SimClock)."""
+    order = []
+    orig = queue.submit
+
+    def submit(name, x, deadline_ms=None):
+        fut = orig(name, x, deadline_ms=deadline_ms)
+        fut.add_done_callback(lambda f: order.append(id(f)))
+        return fut
+
+    queue.submit = submit
+    return order
+
+
+# ------------------------------------------------------------ property -----
+
+class TestReplicaOrderProperty:
+    @given(st.lists(st.integers(0, 2), min_size=1, max_size=24),
+           st.integers(1, 4),
+           st.sampled_from([None, [1.0, 0.5, 2.0, 0.25], [4.0, 1.0, 1.0]]))
+    @settings(max_examples=10, deadline=None)
+    def test_per_key_order_and_single_resolution(self, seq, n, speeds):
+        """For any interleaving of submits across 3 keys, any replica
+        count in 1..4 and any speed skew: within a key, responses
+        arrive in submit order, and every future resolves exactly once
+        with the correct value."""
+        clock = SimClock()
+        engine = StubEngine(clock, base_s=0.004, per_item_s=0.001,
+                            stage_s=0.002, compile_s=0.02, replicas=n,
+                            speeds=speeds, sclass_of=lambda name: name)
+        names = [f"k{i}" for i in range(3)]
+        for nm in names:
+            engine.register(nm)
+        xs = {nm: np.full((2, 3), float(i + 1), np.float32)
+              for i, nm in enumerate(names)}
+        queue = RequestQueue(engine, target_batch=2,
+                             default_deadline_ms=60_000.0, clock=clock,
+                             replicas=n, max_inflight=2)
+        order = _order_probe(queue)
+
+        resolutions = []  # one append per done-callback firing
+        futs = []
+        for j, ki in enumerate(seq):
+            nm = names[ki]
+            fut = queue.submit(nm, xs[nm])
+            fut.add_done_callback(lambda f: resolutions.append(id(f)))
+            futs.append((nm, fut))
+            clock.advance(0.0005 * (j % 3))  # uneven arrival spacing
+        queue.drain()
+
+        # Every future resolves exactly once, with the right payload.
+        assert all(f.done() for _, f in futs)
+        counts: dict = {}
+        for fid in resolutions:
+            counts[fid] = counts.get(fid, 0) + 1
+        assert counts == {id(f): 1 for _, f in futs}, \
+            "a future resolved zero or multiple times"
+        for nm, f in futs:
+            np.testing.assert_array_equal(f.result(timeout=0),
+                                          xs[nm] * 2.0)
+
+        # Within each key, resolution order == submit order.
+        rank = {fid: i for i, fid in enumerate(order)}
+        by_key: dict = {}
+        for nm, f in futs:
+            by_key.setdefault(nm, []).append(rank[id(f)])
+        for nm, ranks in by_key.items():
+            assert ranks == sorted(ranks), \
+                f"key {nm!r} resolved out of submit order: {ranks}"
+
+        assert queue.depth() == 0 and queue.inflight() == 0
+
+
+# ------------------------------------------------------- fault injection ----
+
+class TestReplicaFaults:
+    def test_fault_smoke_strands_nothing(self):
+        out = run_replica_fault_smoke(verbose=False)
+        assert out["healthy"] == 2
+        assert out["faults"] >= 1
+        assert out["requeued"] >= 1
+        assert out["dup_suppressed"] <= 1
+        assert out["completed"] == 180
+
+    def test_dead_replica_leaves_survivors_serving(self):
+        """After a mid-window death, the router routes everything to
+        the survivors and admission capacity tracks the healthy count."""
+        clock = SimClock()
+        names = ["fa", "fb"]
+        engine = StubEngine(clock, base_s=0.004, per_item_s=0.001,
+                            stage_s=0.002, compile_s=0.02, replicas=2,
+                            faults={0: 2}, sclass_of=lambda name: name)
+        for nm in names:
+            engine.register(nm)
+        x = np.full((2, 3), 1.0, np.float32)
+        queue = RequestQueue(engine, target_batch=2,
+                             default_deadline_ms=60_000.0, clock=clock,
+                             replicas=2, max_inflight=2)
+        futs = []
+        for j in range(12):
+            futs.append(queue.submit(names[j % 2], x))
+            clock.advance(0.002)
+        queue.drain()
+
+        assert all(f.done() for f in futs), "fault stranded futures"
+        for f in futs:
+            np.testing.assert_array_equal(f.result(timeout=0), x * 2.0)
+        rs = queue.replica_set
+        assert rs.healthy_count() == 1
+        assert not rs.replica(0).healthy
+        assert queue._healthy_replicas() == 1
+        pol = AdmissionPolicy(max_depth=8)
+        assert pol.effective_depth(queue._healthy_replicas()) == 8 \
+            < pol.effective_depth(2)
+        # survivor replica did all post-fault work
+        rsnap = queue.stats.replica_snapshot()
+        assert rsnap["faults"] >= 1 and rsnap["requeued"] >= 1
+
+
+# ------------------------------------------------------------- lifecycle ----
+
+class TestReplicaLifecycle:
+    def test_drain_class_quiesces_all_replicas_before_invalidate(self):
+        """Retirement with 4 replicas: at the instant the lifecycle
+        executes the swap, EVERY replica pipeline must be quiescent,
+        and afterwards no replica serves (or keeps warm executors for)
+        the retired class."""
+        from repro.engine.lifecycle import LifecycleConfig, LifecycleManager
+
+        clock = SimClock()
+        engine = StubEngine(clock, replicas=4)
+        queue = RequestQueue(engine, target_batch=4,
+                             default_deadline_ms=2000.0, clock=clock,
+                             replicas=4, max_inflight=4)
+        cfg = LifecycleConfig(waste_budget=0.52, breach_windows=1,
+                              max_retires_per_window=1,
+                              max_recompiles_per_window=8, min_traffic=1,
+                              cooldown_windows=1)
+        mgr = LifecycleManager(engine, frontend=queue, config=cfg)
+
+        big = [f"big{i}" for i in range(3)]
+        for nm in big:
+            engine.register(nm, size=100)      # founds StubClass cap=200
+        small = [f"small{i}" for i in range(4)]
+        for nm in small:
+            engine.register(nm, size=60)       # pads into the big class
+        x = np.full((4, 3), 1.0, np.float32)
+        old_class = engine.handle(big[0]).sclass
+        assert engine.handle(small[0]).sclass == old_class
+
+        # Warm the retiring class on EVERY replica so each one holds
+        # stale executors the swap must invalidate.
+        for i in range(4):
+            engine.serve_group([(big[0], x)], replica=i)
+        assert all(any(k[0][0] == old_class for k in rep.compiled)
+                   for rep in engine.replicas)
+
+        futs = [queue.submit(nm, x) for nm in big + small]
+        queue.drain()
+        assert all(f.done() for f in futs)
+
+        # Probe the invalidation instant: wrap execute_retirement to
+        # capture per-replica pipeline state right before the swap.
+        probe: dict = {}
+        orig = engine.execute_retirement
+
+        def probing(plan):
+            rs = queue.replica_set
+            probe["depths"] = [
+                (r.pipeline.depth(), r.pipeline.depth_inflight())
+                for r in rs._replicas]
+            return orig(plan)
+
+        engine.execute_retirement = probing
+
+        # Leave work pending on the retiring class so the drain barrier
+        # actually has something to flush on the replica lanes.
+        pending = [queue.submit(nm, x) for nm in small[:2]]
+        w = mgr.step()
+        assert len(w["retired"]) == 1, w
+        assert probe["depths"] == [(0, 0)] * 4, \
+            f"a replica was not quiesced at invalidation: {probe['depths']}"
+        assert all(f.done() for f in pending), \
+            "retirement stranded in-flight requests"
+        for f in pending:
+            np.testing.assert_array_equal(f.result(timeout=0), x * 2.0)
+
+        # No replica holds a warm executor for the retired class.
+        assert old_class not in engine.classes
+        for rep in engine.replicas:
+            stale = [k for k in rep.compiled if k[0][0] == old_class]
+            assert not stale, \
+                f"replica {rep.replica_id} kept retired executors: {stale}"
+
+        # And no replica serves the retired class key after the swap:
+        # fresh traffic dispatches exclusively on successor-class keys.
+        n0 = len(engine.dispatches)
+        futs = [queue.submit(nm, x) for nm in big + small]
+        queue.drain()
+        for f in futs:
+            np.testing.assert_array_equal(f.result(timeout=0), x * 2.0)
+        post = engine.dispatches[n0:]
+        assert post and all(k[0] != old_class for k, _ in post), \
+            f"a replica served a retired class key after the swap: {post}"
+
+
+# ------------------------------------------------------------------ smoke ---
+
+class TestReplicaSmoke:
+    def test_replica_smoke_contract(self):
+        out = run_replica_smoke(verbose=False, replicas=4)
+        assert out["replica_speedup_x"] >= 3.0
+        assert out["replicas_served"] >= 2
+        assert out["device_tracks"] >= 2
+        assert len(out["per_replica_util"]) == out["replicas"]
+        assert out["throughput_rps_n"] > out["throughput_rps_1"]

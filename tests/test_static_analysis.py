@@ -292,6 +292,71 @@ class TestConcurrencyPass:
         assert "lock-order" in _rules(findings)
         assert any("inversion" in f.message for f in _errors(findings))
 
+    def test_replicas_file_in_default_scope(self):
+        from repro.analysis.static.concurrency_pass import (LOCK_ORDER,
+                                                            SCOPE_DIRS)
+        assert "src/repro/serving/replicas.py" in SCOPE_DIRS
+        # The router lock sits between the frontend locks and the
+        # per-replica pipeline lock it routes batches into, and above
+        # every metric leaf it updates while routing.
+        assert (LOCK_ORDER.index("RequestQueue._dispatch_gate")
+                < LOCK_ORDER.index("ReplicaSet._lock")
+                < LOCK_ORDER.index("DispatchPipeline._lock"))
+        for leaf in ("Counter._lock", "CounterFamily._lock",
+                     "GaugeFamily._lock"):
+            assert LOCK_ORDER.index("ReplicaSet._lock") < LOCK_ORDER.index(leaf)
+
+    def test_scope_file_entry_is_linted_once(self):
+        # replicas.py appears in SCOPE_DIRS both via its directory glob
+        # and as an explicit file entry; run_concurrency_pass must
+        # dedupe rather than double-report (or crash globbing a file).
+        from repro.analysis.static.concurrency_pass import (SCOPE_DIRS,
+                                                            _repo_root)
+        root = _repo_root()
+        scoped = set()
+        for d in SCOPE_DIRS:
+            target = root / d
+            if d.endswith(".py"):
+                assert target.is_file()
+                scoped.add(target)
+            else:
+                scoped.update(target.glob("*.py"))
+        assert root / "src/repro/serving/replicas.py" in scoped
+
+    def test_unlocked_replica_depth_read_caught(self, tmp_path):
+        # Known-bad router fixture: the dispatch worker updates a
+        # replica-depth field under the router lock, but the routing
+        # path reads it lock-free to score replicas. That torn read is
+        # exactly the bug class ReplicaSet._score avoids by routing
+        # under self._lock.
+        mod = tmp_path / "router.py"
+        mod.write_text(textwrap.dedent("""\
+            import threading
+
+            class Router:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.depth = 0
+                    self._t = threading.Thread(target=self._drain,
+                                               daemon=True)
+
+                def _drain(self):
+                    while True:
+                        with self._lock:
+                            self.depth -= 1
+
+                def route(self):
+                    return self.depth
+
+                def enroll(self):
+                    with self._lock:
+                        self.depth += 1
+        """))
+        findings = analyze_paths([mod], entry_classes={"Router"})
+        errs = _errors(findings)
+        assert "field-race" in _rules(findings)
+        assert any("Router.depth" in f.message for f in errs)
+
 
 # -------------------------------------------------------------- bench -----
 
