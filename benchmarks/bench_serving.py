@@ -33,6 +33,7 @@ Run:    PYTHONPATH=src python benchmarks/bench_serving.py [--graphs 6]
 Smoke:  PYTHONPATH=src python benchmarks/bench_serving.py --smoke
         PYTHONPATH=src python benchmarks/bench_serving.py --smoke --pipeline
         PYTHONPATH=src python benchmarks/bench_serving.py --smoke --replicas 4
+        PYTHONPATH=src python benchmarks/bench_serving.py --smoke --chaos
         (deterministic scheduler simulation, virtual clock, no compiles)
 
 ``--replicas N`` adds the multi-replica axis (ISSUE 9): the 1-vs-N
@@ -51,9 +52,9 @@ import numpy as np
 from repro.obs.metrics import percentile
 from repro.serving import (Arrival, RequestQueue, attach_resolve_probe,
                            bursty_trace, poisson_trace, replay_trace,
-                           run_lifecycle_smoke, run_pipeline_smoke,
-                           run_replica_fault_smoke, run_replica_smoke,
-                           run_smoke, run_trace_smoke)
+                           run_chaos_smoke, run_lifecycle_smoke,
+                           run_pipeline_smoke, run_replica_fault_smoke,
+                           run_replica_smoke, run_smoke, run_trace_smoke)
 
 
 def make_family(n_graphs: int, f_in: int, hidden: int, n_classes: int,
@@ -297,6 +298,11 @@ if __name__ == "__main__":
                          "(>=3x throughput at N=4, outputs bitwise-"
                          "equal, per-key order preserved) plus the "
                          "fault-injection rescue smoke")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --smoke: replay the end-to-end failure-"
+                         "containment smoke — every chaos site fires "
+                         "(dispatch/compile/hang/poison/replica) plus "
+                         "the brownout flood; see docs/ROBUSTNESS.md")
     args = ap.parse_args()
     if args.smoke and args.pipeline:
         results = {"pipeline_smoke": run_pipeline_smoke(
@@ -314,6 +320,8 @@ if __name__ == "__main__":
         results["replica_smoke"] = run_replica_smoke(
             replicas=args.replicas)
         results["replica_fault"] = run_replica_fault_smoke()
+    if args.smoke and args.chaos:
+        results["chaos"] = run_chaos_smoke()
     if args.json:
         import sys
         from repro.analysis.static.bench_check import write_bench_json

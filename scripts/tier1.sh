@@ -45,6 +45,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
 # dies mid-window: zero stranded futures, admission capacity shrinks).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python benchmarks/bench_serving.py --smoke --replicas 4
+# Chaos smoke: end-to-end failure containment (docs/ROBUSTNESS.md) — a
+# seeded fault plan fires every injection site (dispatch raise, compile
+# failure, device hang, poisoned member, replica kill) over a bursty
+# trace, then a flood trips the brownout. Asserts zero stranded
+# futures, exactly the poisoned name fails (PoisonedRequest) with
+# batch-mates bitwise-equal, per-key order preserved, a deterministic
+# shed count, and guaranteed traffic served through the brownout.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python benchmarks/bench_serving.py --smoke --chaos
 # Docs check: the serving API docstring examples actually run, and every
 # internal link in README.md + docs/ resolves (files and anchors).
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \

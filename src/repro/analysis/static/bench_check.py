@@ -45,7 +45,7 @@ PROVENANCE_KEYS = ("git_sha", "jax_version", "backend")
 REQUIRED_METRICS = {
     "bench_spmm": ("launches_per_spmm", "ell_pad_waste_x",
                    "achieved_roofline_frac"),
-    "bench_serving": ("replica_speedup_x",),
+    "bench_serving": ("replica_speedup_x", "chaos_rescued", "chaos_shed"),
 }
 
 

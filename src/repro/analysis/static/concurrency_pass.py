@@ -39,10 +39,13 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 from repro.analysis.static.report import Finding, scan_waivers
 
 # Default scope (relative to the repo root). Directory entries glob
-# ``*.py``; a ``.py`` entry names one file explicitly (replicas.py is
-# both covered by its directory AND pinned by name, so a future scope
-# reshuffle cannot silently drop the router from the lint).
+# ``*.py``; a ``.py`` entry names one file explicitly (replicas.py,
+# chaos.py, and resilience.py are both covered by their directory AND
+# pinned by name, so a future scope reshuffle cannot silently drop the
+# router or the failure-containment layer from the lint).
 SCOPE_DIRS = ("src/repro/serving", "src/repro/serving/replicas.py",
+              "src/repro/serving/chaos.py",
+              "src/repro/serving/resilience.py",
               "src/repro/engine", "src/repro/obs")
 
 # Classes whose non-underscore methods constitute the user-thread API.
@@ -72,8 +75,19 @@ LOCK_ORDER = (
     "RequestQueue._dispatch_gate",
     "ReplicaSet._lock",
     "DispatchPipeline._lock",
+    # Resilience layer (docs/ROBUSTNESS.md): the coordinator's handler
+    # runs from the pipeline's failure path, so its lock nests inside
+    # the pipeline's; watchdog and brownout are self-contained leaves
+    # on their side of the engine boundary.
+    "ResilienceCoordinator._lock",
+    "DispatchWatchdog._lock",
+    "BrownoutController._lock",
     "Engine._stack_lock",
     "ExecutorCache._lock",
+    # Chaos polls fire inside the executor-cache miss path (compile
+    # site), so the injector lock nests inside the cache lock and
+    # wraps nothing.
+    "ChaosInjector._lock",
     "LatencyModel._lock",
     # Metric primitives are leaves: any component may update a Counter/
     # Histogram while holding its own lock, so these come last and must

@@ -1,1 +1,2 @@
-from .checkpoint import COMMIT_MARKER, CheckpointManager  # noqa: F401
+from .checkpoint import (COMMIT_MARKER, CheckpointManager,  # noqa: F401
+                         ChecksumError)

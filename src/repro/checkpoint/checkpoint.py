@@ -24,11 +24,23 @@ import os
 import shutil
 import threading
 import time
+import zlib
 
 import jax
 import numpy as np
 
 COMMIT_MARKER = "COMMITTED"
+
+
+class ChecksumError(RuntimeError):
+    """A restored array's CRC32 does not match its manifest entry —
+    bit-rot or a torn write that still passed the npz container parse."""
+
+    def __init__(self, step: int, key: str):
+        super().__init__(
+            f"checksum mismatch restoring step {step}, leaf {key!r}")
+        self.step = step
+        self.key = key
 
 
 def _flatten(tree):
@@ -44,6 +56,7 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread = None
+        self.events: list = []   # (kind, step) integrity/fallback records
         os.makedirs(directory, exist_ok=True)
         self._backfill_markers()
 
@@ -85,8 +98,9 @@ class CheckpointManager:
         os.makedirs(tmp)
         np.savez(os.path.join(tmp, "arrays.npz"),
                  **{f"a{i}": v for i, v in enumerate(vals)})
+        crcs = [zlib.crc32(np.ascontiguousarray(v).tobytes()) for v in vals]
         manifest = {"step": step, "keys": keys, "time": time.time(),
-                    "extra": extra}
+                    "crc32": crcs, "extra": extra}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
         if os.path.exists(final):
@@ -140,6 +154,13 @@ class CheckpointManager:
             manifest = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
         vals = [data[f"a{i}"] for i in range(len(manifest["keys"]))]
+        # Integrity gate: every leaf must hash to its manifest CRC.
+        # (Pre-CRC checkpoints carry no "crc32" key and skip the check.)
+        for i, (k, v) in enumerate(zip(manifest["keys"], vals)):
+            want = manifest.get("crc32", [])
+            if i < len(want) and \
+                    zlib.crc32(np.ascontiguousarray(v).tobytes()) != want[i]:
+                raise ChecksumError(step, k)
         keys, ref_vals, treedef = _flatten(like)
         assert keys == manifest["keys"], "checkpoint/model structure mismatch"
         for v, r in zip(vals, ref_vals):
@@ -152,12 +173,18 @@ class CheckpointManager:
         """Restore the newest committed step, falling back to the next
         one if a concurrent re-save removed or clobbered it between
         listing and reading (the list-then-read window the marker can't
-        cover)."""
+        cover), or if its arrays fail CRC verification (silent
+        corruption after commit). Each fallback is recorded in
+        ``self.events`` so the caller can surface it."""
         import zipfile
 
         for step in reversed(self.all_steps()):
             try:
                 return self.restore(step, like)
+            except ChecksumError:
+                self.events.append(("checksum_fallback", step))
+                continue
             except (OSError, zipfile.BadZipFile, json.JSONDecodeError):
+                self.events.append(("unreadable_fallback", step))
                 continue
         return None, None

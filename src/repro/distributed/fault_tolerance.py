@@ -89,7 +89,10 @@ class TrainingRunner:
             # silent-corruption guard: loss spike -> rollback
             if len(self.loss_history) >= 8:
                 med = float(np.median(self.loss_history[-8:]))
-                if np.isfinite(loss) is False \
+                # `np.isfinite` returns np.bool_, which is never `is`
+                # Python's False — the identity check silently skipped
+                # NaN/inf losses.
+                if not np.isfinite(loss) \
                         or loss > self.cfg.loss_spike_factor * max(med, 1e-9):
                     prev = self.ckpt.latest_step()
                     if prev is not None:

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from repro.core.hybrid_spmm import gcn_forward, hybrid_spmm
 from repro.obs.metrics import Counter, MetricsRegistry
 from repro.obs.trace import NULL_TRACER
+from repro.serving.chaos import NULL_INJECTOR, InjectedFault
 
 from .shape_class import ShapeClass
 
@@ -113,6 +114,10 @@ class ExecutorCache:
         # Observability hooks (repro.obs): cache.hit/cache.miss instant
         # events. Off by default; `Engine.attach_tracer` swaps it in.
         self.tracer = NULL_TRACER
+        # Chaos hook (repro.serving.chaos): the "compile" injection site
+        # lives in the `_get` miss path. `Engine.attach_injector` swaps
+        # a live injector in; NULL_INJECTOR keeps the path zero-cost.
+        self.injector = NULL_INJECTOR
         # Autotuned ragged-kernel configs, ShapeClass -> sorted item
         # tuple. Part of every executor key, so applying a new winner
         # can never alias a stale compiled executor.
@@ -144,6 +149,13 @@ class ExecutorCache:
                 if tr.enabled:
                     tr.instant("cache.miss", "engine",
                                args={"kind": key[0]})
+                inj = self.injector
+                if inj.enabled and inj.poll("compile") is not None:
+                    # injected compile failure: the build never ran, so
+                    # the next lookup misses again and a retry recompiles
+                    # (transient by construction)
+                    raise InjectedFault(
+                        "compile", detail=f"executor build for {key[0]}")
                 fn = build()
                 self._fns[key] = fn
                 while len(self._fns) > self.max_entries:

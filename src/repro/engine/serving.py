@@ -43,6 +43,7 @@ from repro.core.partition import PartitionConfig, analyze_and_partition
 from repro.core.reorder import reorder as reorder_csr
 from repro.obs.metrics import Counter, MetricsRegistry
 from repro.obs.trace import NULL_TRACER
+from repro.serving.chaos import NULL_INJECTOR, InjectedFault
 
 from .executor import ExecutorCache
 from .lifecycle import RetirementPlan
@@ -154,6 +155,13 @@ class Engine:
         # autotuner so cache.hit/miss and sweep instants land in the
         # same ring.
         self.tracer = NULL_TRACER
+        # Chaos injector (repro.serving.chaos): off by default; a
+        # frontend constructed with `injector=` calls `attach_injector`,
+        # which fans it out to the executor caches (the compile-failure
+        # site). Sites owned here: "dispatch" (raise at enqueue),
+        # "poison" (mark one member's name; outputs for poisoned names
+        # come back non-finite), "hang" (completion meta never ready).
+        self.injector = NULL_INJECTOR
         self._frontend = None   # attached repro.serving.RequestQueue
         self._lifecycle = None  # attached LifecycleManager
         # Per-replica executor caches handed out by replica_view();
@@ -240,6 +248,7 @@ class Engine:
                                   ell_dispatch=ex.ell_dispatch,
                                   max_entries=ex.max_entries)
             cache.tracer = self.tracer
+            cache.injector = self.injector
             self._replica_caches.append(cache)
             view = self._replica_views[i] = _EngineReplicaView(
                 self, i, cache)
@@ -384,6 +393,15 @@ class Engine:
         if not requests:
             return [], {"cold": False, "ready": lambda: True,
                         "complete": lambda: None}
+        inj = self.injector
+        if inj.enabled:
+            spec = inj.poll("dispatch")
+            if spec is not None:
+                raise InjectedFault("dispatch",
+                                    transient=spec.mode == "transient")
+            spec = inj.poll("poison")
+            if spec is not None:
+                inj.mark_poisoned(requests[spec.member % len(requests)][0])
         members = []
         key0 = None
         for i, (name, x) in enumerate(requests):
@@ -417,7 +435,10 @@ class Engine:
             xpad = pad(h, x, xp)
             tr.end(sp_pad)
             outs = [self._unpad_y(h, fn(h.part, xpad, h.weights))]
-            return outs, self._completion_meta(outs, misses0, ex)
+            meta = self._completion_meta(outs, misses0, ex)
+            if inj.enabled:
+                outs, meta = self._inject_async(inj, requests, outs, meta)
+            return outs, meta
         # Canonicalize group order by name so (g0,g1) and (g1,g0)
         # share one cached stack, then pad to the next power-of-two
         # batch (repeating the last member; its extra outputs are
@@ -456,7 +477,29 @@ class Engine:
         results: list = [None] * len(members)
         for j, (i, h, _, _) in enumerate(members):
             results[i] = self._unpad_y(h, ys[j])
-        return results, self._completion_meta(results, misses0, ex)
+        meta = self._completion_meta(results, misses0, ex)
+        if inj.enabled:
+            results, meta = self._inject_async(inj, requests, results, meta)
+        return results, meta
+
+    def _inject_async(self, inj, requests, outs, meta) -> tuple:
+        """Apply post-enqueue chaos sites to one dispatch's results:
+        poisoned member names yield non-finite outputs (every dispatch,
+        so quarantine bisection can isolate them), and a fired "hang"
+        spec makes the completion meta never ready — only the dispatch
+        watchdog can reclaim the slot."""
+        if inj.poisoned_names():
+            outs = [y * float("nan") if inj.is_poisoned(nm) else y
+                    for (nm, _), y in zip(requests, outs)]
+        spec = inj.poll("hang")
+        if spec is not None:
+            def hung_complete():
+                raise InjectedFault(
+                    "hang", detail="completion forced on a hung dispatch")
+            meta = dict(meta)
+            meta["ready"] = lambda: False
+            meta["complete"] = hung_complete
+        return outs, meta
 
     def _completion_meta(self, outs, misses0: int, ex=None) -> dict:
         """The async-dispatch completion contract for one enqueued group.
@@ -532,6 +575,16 @@ class Engine:
             cache.tracer = tracer
         if self._tuner is not None:
             self._tuner.tracer = tracer
+
+    def attach_injector(self, injector) -> None:
+        """Install a `repro.serving.chaos.ChaosInjector` and fan it out
+        to every executor cache (the compile-failure site lives in
+        `ExecutorCache._get`). Mirrors ``attach_tracer``; passing
+        `NULL_INJECTOR` turns injection back off."""
+        self.injector = injector
+        self.executors.injector = injector
+        for cache in self._replica_caches:
+            cache.injector = injector
 
     def attach_frontend(self, frontend) -> None:
         """Register a serving frontend (`repro.serving.RequestQueue`) so

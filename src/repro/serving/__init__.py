@@ -21,17 +21,33 @@ closed batch to the least-loaded replica under key-epoch pinning (per-
 key order preserved exactly), aggregates admission capacity across
 replicas, and rescues a faulted replica's in-flight work onto survivors
 (`ReplicaFault` -> requeue, zero stranded futures).
+
+Failure containment (ISSUE 10): `chaos` provides deterministic, seeded
+fault injection at named sites (dispatch raise, compile failure, device
+hang, poisoned member, replica kill) behind the zero-cost-off
+``NULL_INJECTOR``; `resilience` contains each of them — bounded inline
+retries with seeded backoff, poison-batch quarantine by bisection
+(structured `PoisonedRequest`, batch-mates bitwise-equal), a dispatch
+watchdog converting hangs into retryable timeouts, and SLO-aware
+brownout shedding (`BrownoutController`; ``guaranteed=True`` traffic is
+exempt). `run_chaos_smoke` replays the whole taxonomy on a `SimClock`
+with zero stranded futures — see docs/ROBUSTNESS.md.
 """
+from .chaos import (NULL_INJECTOR, ChaosInjector, FaultPlan, FaultSpec,
+                    InjectedFault)
 from .frontend import (DEFAULT_DEADLINE_MS, AdmissionError, AdmissionPolicy,
                        RequestFuture, RequestQueue)
 from .latency import AggregateLatencyModel, LatencyModel
 from .pipeline import DispatchPipeline, InflightBatch
 from .replicas import Replica, ReplicaFault, ReplicaSet
+from .resilience import (BrownoutController, DispatchWatchdog,
+                         PoisonedRequest, ResilienceCoordinator,
+                         RetryPolicy, WatchdogTimeout)
 from .scheduler import BatchPlan, PendingRequest, Scheduler, pow2_ceil
 from .stats import ServerStats, SimClock
 from .simulate import (Arrival, StubEngine, StubReplica, StubShapeClass,
                        attach_resolve_probe, bursty_trace, poisson_trace,
-                       replay_trace, run_lifecycle_smoke,
+                       replay_trace, run_chaos_smoke, run_lifecycle_smoke,
                        run_pipeline_smoke, run_replica_fault_smoke,
                        run_replica_smoke, run_smoke, run_trace_smoke)
 
@@ -45,4 +61,8 @@ __all__ = [
     "bursty_trace", "poisson_trace", "replay_trace", "run_lifecycle_smoke",
     "run_pipeline_smoke", "run_replica_fault_smoke", "run_replica_smoke",
     "run_smoke", "run_trace_smoke",
+    "NULL_INJECTOR", "ChaosInjector", "FaultPlan", "FaultSpec",
+    "InjectedFault", "BrownoutController", "DispatchWatchdog",
+    "PoisonedRequest", "ResilienceCoordinator", "RetryPolicy",
+    "WatchdogTimeout", "run_chaos_smoke",
 ]

@@ -54,6 +54,8 @@ from repro.obs.trace import NULL_TRACER, label
 from .latency import LatencyModel
 from .pipeline import DispatchPipeline
 from .replicas import ReplicaSet
+from .resilience import (ResilienceCoordinator, outputs_finite,
+                         sync_dispatch_fn)
 from .scheduler import Scheduler, pow2_ceil
 from .stats import ServerStats
 
@@ -135,7 +137,8 @@ class RequestQueue:
                  clock=time.monotonic, attach: bool = True,
                  pipelined: bool = False, max_inflight: int = 4,
                  stage_workers: int = 1, adaptive_inflight: bool = False,
-                 tracer=None, replicas: Optional[int] = None):
+                 tracer=None, replicas: Optional[int] = None,
+                 injector=None, resilience=None, brownout=None):
         self.engine = engine
         self.clock = clock
         self.tracer = tracer if tracer is not None else NULL_TRACER
@@ -197,6 +200,26 @@ class RequestQueue:
             attach_tr = getattr(engine, "attach_tracer", None)
             if attach_tr is not None:
                 attach_tr(tracer)
+        # chaos-injection wiring mirrors the tracer: the engine owns the
+        # actual injection sites (dispatch/compile/hang/poison/replica),
+        # the queue just hands the injector down
+        if injector is not None:
+            attach_inj = getattr(engine, "attach_injector", None)
+            if attach_inj is not None:
+                attach_inj(injector)
+        # failure containment (docs/ROBUSTNESS.md): a coordinator wraps
+        # every pipeline's fail handler (after the ReplicaSet's, which
+        # keeps first claim on ReplicaFault), arms per-pipeline
+        # watchdogs, and serves the serial dispatch path. `brownout`
+        # adds SLO-aware load shedding at admission. Both default off —
+        # the disabled paths cost one attribute check.
+        self.brownout = brownout
+        self._resilience: Optional[ResilienceCoordinator] = None
+        if resilience:
+            if resilience is True:
+                resilience = ResilienceCoordinator(
+                    stats=self.stats, clock=self.clock, tracer=self.tracer)
+            resilience.install(self)
 
     # ---------------------------------------------------------- submit ----
     def _group_key(self, name: str, x) -> tuple:
@@ -205,7 +228,8 @@ class RequestQueue:
         return self.engine.group_key(name, x)
 
     def submit(self, name: str, x,
-               deadline_ms: Optional[float] = None) -> RequestFuture:
+               deadline_ms: Optional[float] = None,
+               guaranteed: bool = False) -> RequestFuture:
         """Queue one inference request for graph ``name`` with features
         ``x``; returns a `RequestFuture` that resolves to the logits.
 
@@ -226,9 +250,12 @@ class RequestQueue:
             Budgets are checked before queueing; a violation raises
             `AdmissionError` instead of returning a future — ``.reason``
             is ``"depth"`` (queue backlog cap), ``"wait"`` (estimated
-            cross-key service wait exceeds ``max_wait_ms``), or
-            ``"stopped"`` (the queue was stopped). Rejected requests do
-            not count as arrivals.
+            cross-key service wait exceeds ``max_wait_ms``),
+            ``"stopped"`` (the queue was stopped), or ``"brownout"``
+            (overload shedding active and the request is best-effort —
+            ``guaranteed=True`` traffic is exempt; see
+            `repro.serving.resilience.BrownoutController`). Rejected
+            requests do not count as arrivals.
 
         Grouping
             The request joins the pending queue for
@@ -255,8 +282,22 @@ class RequestQueue:
                 self.stats.on_reject("stopped")
                 self._trace_reject(name, "stopped")
                 raise AdmissionError("stopped", "queue worker stopped")
-            n_healthy = self._healthy_replicas()
             depth = self.scheduler.depth()
+            bo = self.brownout
+            if bo is not None and bo.observe(depth, now) \
+                    and not guaranteed:
+                # sustained overload: shed best-effort load at the door
+                # (deterministic — every submit observes the same depth
+                # state in submit order); guaranteed traffic proceeds to
+                # the ordinary budget checks below
+                self.stats.on_reject("brownout")
+                self.stats.on_shed()
+                self._trace_reject(name, "brownout")
+                raise AdmissionError(
+                    "brownout",
+                    f"overload brownout active (depth {depth} vs high "
+                    f"watermark {bo.high_depth}); best-effort load shed")
+            n_healthy = self._healthy_replicas()
             depth_cap = pol.effective_depth(n_healthy)
             if depth_cap is not None and depth >= depth_cap:
                 self.stats.on_reject("depth")
@@ -288,7 +329,7 @@ class RequestQueue:
             self.stats.on_arrival(now)
             req = self.scheduler.add(name, x, key, now,
                                      deadline_s=now + deadline_ms / 1e3,
-                                     future=fut)
+                                     future=fut, guaranteed=guaranteed)
             tr = self.tracer
             if tr.sample(req.seq):
                 req.span_request = tr.begin(
@@ -395,6 +436,15 @@ class RequestQueue:
                 if ready is not None:
                     ready()
         except Exception as err:   # noqa: BLE001 — futures carry it
+            res = self._resilience
+            if res is not None and res.handle_failure(
+                    members, err, dispatch_fn=sync_dispatch_fn(self.engine),
+                    latency=self.latency):
+                # rescued inline (retry or quarantine resolved every
+                # member); the batch span closes as rescued, not errored
+                tr.end(sp_dev, args={"error": True})
+                tr.end(sp_batch, args={"rescued": True})
+                return
             self.stats.on_dispatch_error()
             tr.end(sp_dev, args={"error": True})
             tr.end(sp_batch, args={"error": True})
@@ -408,6 +458,16 @@ class RequestQueue:
         now = self.clock()
         padded = pow2_ceil(len(members))
         cold = self.engine.executors.stats.misses > misses0  # lint: racy-ok(cold-detect delta; over-reports only)
+        res = self._resilience
+        if res is not None and not outputs_finite(outs):
+            # poisoned batch: quarantine bisection takes ownership of
+            # every member; the poisoned sample never feeds the EWMA
+            tr.end(sp_dev, args={"poisoned": True})
+            self.latency.observe(key, padded, dt, cold=True)
+            res.quarantine(members,
+                           dispatch_fn=sync_dispatch_fn(self.engine))
+            tr.end(sp_batch)
+            return
         if sp_dev >= 0:
             tr.end(sp_dev, args={
                 "reqs": [r.seq for r in members], "live": len(members),

@@ -59,10 +59,12 @@ import dataclasses
 import itertools
 import queue as queue_mod
 import threading
+import time
 from typing import Optional
 
 from repro.obs.trace import NULL_TRACER, label
 
+from .resilience import WatchdogTimeout, outputs_finite, sync_dispatch_fn
 from .scheduler import pow2_ceil
 
 
@@ -117,6 +119,13 @@ class DispatchPipeline:
         # handler took ownership (the ReplicaSet's fault-requeue path).
         # Set post-construction, before any dispatch.
         self.fail_handler = None
+        # failure-containment hooks, both installed (post-construction)
+        # by a `ResilienceCoordinator`; None = zero-cost disabled path.
+        # `watchdog` bounds time-in-device-window (a hang becomes a
+        # retryable `WatchdogTimeout`); `resilience` owns poison-batch
+        # quarantine of non-finite outputs.
+        self.watchdog = None
+        self.resilience = None
         # ``max_inflight`` is the LIVE window bound (what staging checks);
         # ``inflight_cap`` the configured ceiling. With adaptive_inflight
         # the live bound tracks the observed staging/device overlap: a
@@ -139,6 +148,7 @@ class DispatchPipeline:
         self._idle = threading.Condition(self._lock)
         self._inflight: collections.deque = collections.deque()
         self._completing = 0        # popped for completion, not finished
+        self._completing_tids: collections.Counter = collections.Counter()
         self._queued: dict = {}     # seq -> (key, padded) awaiting staging
         self._staging = 0           # plans inside a worker right now
         self._seq = itertools.count()
@@ -280,7 +290,25 @@ class DispatchPipeline:
                 meta = {"cold": False, "ready": lambda: True,
                         "complete": lambda: None}
         except Exception as err:   # noqa: BLE001 — futures carry it
-            self._fail(members, err)
+            # A dispatch-time failure must NOT fail (or rescue) its
+            # members here: earlier same-key batches may still be in the
+            # window, and resolving these members first would break the
+            # per-key ordering contract. Park the failure as an already-
+            # ready in-flight batch whose completion re-raises — it
+            # surfaces in `_finish` at its FIFO slot, where the failure
+            # path (and any resilience retry) is order-safe.
+            now = self.clock()
+
+            def _reraise(e=err):
+                raise e
+
+            batch = InflightBatch(
+                key=key, members=members, reason=reason, outs=[],
+                cold=False, ready=lambda: True, complete=_reraise,
+                staging_s=now - t0, t_enqueued=now)
+            with self._lock:
+                self._inflight.append(batch)
+                self._work.notify_all()
             return
         now = self.clock()
         batch = InflightBatch(
@@ -317,16 +345,27 @@ class DispatchPipeline:
             if not block:
                 try:
                     if not head.ready():
-                        return False
+                        # a hung head past its watchdog deadline is
+                        # drained anyway: _finish converts it into a
+                        # retryable WatchdogTimeout instead of letting
+                        # it hold the window slot forever
+                        wd = self.watchdog
+                        if wd is None or not wd.expired(head, self.clock()):
+                            return False
                 except Exception:      # noqa: BLE001 — resolve via finish
                     pass
             self._inflight.popleft()
             self._completing += 1
+            tid = threading.get_ident()
+            self._completing_tids[tid] += 1
         try:
             self._finish(head)
         finally:
             with self._lock:
                 self._completing -= 1
+                self._completing_tids[tid] -= 1
+                if not self._completing_tids[tid]:
+                    del self._completing_tids[tid]
                 self._room.notify_all()
                 self._idle.notify_all()
             self.stats.on_inflight(self.depth_inflight(),
@@ -344,10 +383,14 @@ class DispatchPipeline:
             sp_wait = tr.begin("wait_device", "drain", parent=batch.span)
         t0 = self.clock()
         err = None
-        try:
-            batch.complete()
-        except Exception as e:         # noqa: BLE001 — futures carry it
-            err = e
+        timed_out = False
+        if self.watchdog is not None:
+            timed_out, err = self._watch(batch)
+        if not timed_out:
+            try:
+                batch.complete()
+            except Exception as e:     # noqa: BLE001 — futures carry it
+                err = e
         now = self.clock()
         if err is not None:
             tr.end(sp_wait, args={"error": True})
@@ -368,6 +411,18 @@ class DispatchPipeline:
             tr.end(batch.span, args=end_args)
             if batch.cold:
                 tr.instant("compile_cold", "engine", parent=batch.span)
+        res = self.resilience
+        if res is not None and not outputs_finite(batch.outs):
+            # poisoned batch: quarantine bisection takes ownership of
+            # every member (offenders fail with PoisonedRequest, the
+            # rest resolve inline, preserving per-key order); the
+            # poisoned sample never feeds the latency EWMA
+            self.latency.observe(batch.key, batch.padded, cold=True,
+                                 staging_s=batch.staging_s,
+                                 device_s=device_s)
+            res.quarantine(batch.members,
+                           dispatch_fn=sync_dispatch_fn(self.engine))
+            return
         if self.adaptive_inflight and device_s > 0:
             self._observe_overlap(wait_s, device_s)
         self.latency.observe(batch.key, batch.padded, cold=batch.cold,
@@ -383,6 +438,41 @@ class DispatchPipeline:
             if r.span_request >= 0:
                 tr.end(r.span_request,
                        args={"missed": now > r.deadline_s})
+
+    def _watch(self, batch: InflightBatch):
+        """Wait for the batch's readiness under the watchdog deadline.
+
+        Returns ``(timed_out, err)``. A batch still not ready at the
+        deadline is abandoned: completion is never attempted (on a real
+        device that would block forever), the fire is counted, and a
+        retryable `WatchdogTimeout` is handed to the failure path so
+        the members are re-dispatched instead of stranded. On a
+        `SimClock` the wait advances virtual time; on a real clock it
+        polls."""
+        wd = self.watchdog
+        deadline = wd.deadline_for(batch)
+        advance = getattr(self.clock, "advance", None)
+        while True:
+            try:
+                if batch.ready():
+                    return False, None
+            except Exception:          # noqa: BLE001 — complete() surfaces it
+                return False, None
+            now = self.clock()
+            if now >= deadline:
+                wd.record_fire()
+                self.stats.on_watchdog_fire()
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "watchdog_fire", "resilience",
+                        args={"reqs": [r.seq for r in batch.members],
+                              "deadline_s": deadline})
+                return True, WatchdogTimeout(batch.key, deadline, now)
+            step = min(1e-3, deadline - now)
+            if advance is not None:
+                advance(step)
+            else:
+                time.sleep(step)
 
     def _observe_overlap(self, wait_s: float, device_s: float) -> None:
         """Fold one batch's staging/device overlap into the live window.
@@ -435,6 +525,18 @@ class DispatchPipeline:
         """Batches enqueued to the device and not yet finished."""
         with self._lock:
             return len(self._inflight) + self._completing
+
+    def depth_inflight_foreign(self) -> int:
+        """Window work not owned by the calling thread: enqueued batches
+        plus completions in progress on OTHER threads. The `ReplicaSet`
+        eviction loop spins on this — the fault handler can run inside
+        `_finish` (a completion-hook fault, or a dispatch failure parked
+        into the window), so counting the caller's own in-progress
+        completion would deadlock it against itself."""
+        tid = threading.get_ident()
+        with self._lock:
+            own = self._completing_tids.get(tid, 0)
+            return len(self._inflight) + self._completing - own
 
     def depth(self) -> int:
         """Everything the pipeline still owes: queued plans, plans being

@@ -279,7 +279,9 @@ class ReplicaSet:
             # batch fails at completion and re-enters this handler, so
             # _rescued accumulates every stranded member; the global
             # seq sort below restores submit order before requeueing.
-            while replica.pipeline.depth_inflight() > 0:
+            # "foreign" depth: this handler can itself be running inside
+            # a batch completion, which must not count as evictable.
+            while replica.pipeline.depth_inflight_foreign() > 0:
                 if not replica.pipeline.drain_inflight():
                     time.sleep(0.0005)   # another thread mid-completion
         finally:

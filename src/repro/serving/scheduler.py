@@ -54,6 +54,11 @@ class PendingRequest:
     # thread-local context needed.
     span_request: int = -1     # root: submit -> future resolution
     span_queue: int = -1       # child: submit -> batch-plan close
+    # SLO class: guaranteed requests are exempt from brownout load
+    # shedding (repro.serving.resilience.BrownoutController).
+    guaranteed: bool = False
+    # dispatch attempts consumed by the resilience retry path
+    attempts: int = 0
 
     def slack(self, now: float) -> float:
         return self.deadline_s - now
@@ -90,10 +95,10 @@ class Scheduler:
 
     # ---------------------------------------------------------- intake ----
     def add(self, name: str, x, key: tuple, now: float, deadline_s: float,
-            future=None) -> PendingRequest:
+            future=None, guaranteed: bool = False) -> PendingRequest:
         req = PendingRequest(seq=next(self._seq), name=name, x=x, key=key,
                              submit_s=now, deadline_s=deadline_s,
-                             future=future)
+                             future=future, guaranteed=guaranteed)
         q = self._pending.get(key)
         if q is None:
             q = self._pending[key] = collections.deque()

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.obs.metrics import percentile
 
+from .chaos import NULL_INJECTOR, InjectedFault
 from .frontend import AdmissionError, AdmissionPolicy, RequestQueue
 from .replicas import ReplicaFault
 from .scheduler import pow2_ceil
@@ -222,6 +223,11 @@ class StubEngine:
         self._frontend = None
         self._lifecycle = None
         self.tracer = None     # set by attach_tracer (repro.obs)
+        # Chaos harness (repro.serving.chaos): the stub owns every
+        # injection site, including the "replica" kill the real Engine
+        # can't simulate. NULL_INJECTOR keeps the default path to one
+        # attribute check per dispatch.
+        self.injector = NULL_INJECTOR
 
     # ------------------------------------------------- replica surface ----
     @property
@@ -284,6 +290,12 @@ class StubEngine:
         against stub-driven simulations too."""
         self.tracer = tracer
 
+    def attach_injector(self, injector) -> None:
+        """Same duck-typed hook the real Engine exposes
+        (`repro.serving.chaos`): every replica view shares the one
+        injector, so site occurrence counters span the whole fleet."""
+        self.injector = injector
+
     # -------------------------------------------------------- online ----
     def group_key(self, name: str, x) -> tuple:
         h = self._graphs[name]
@@ -323,11 +335,29 @@ class StubEngine:
             raise ReplicaFault(
                 f"stub replica {replica} died on dispatch "
                 f"{rep.dispatches} (fault_after={rep.fault_after})")
+        inj = self.injector
+        if inj.enabled:
+            if inj.poll("replica", replica=replica) is not None:
+                rep.dead = True
+                raise ReplicaFault(
+                    f"stub replica {replica} killed by chaos injection")
+            spec = inj.poll("dispatch", replica=replica)
+            if spec is not None:
+                raise InjectedFault(
+                    "dispatch", transient=spec.mode == "transient",
+                    detail=f"stub dispatch on replica {replica}")
         key = self.group_key(requests[0][0], requests[0][1])
         bs = pow2_ceil(len(requests))
         exec_key = (key, bs)
         cold = False
         if exec_key not in rep.compiled:
+            if inj.enabled and inj.poll("compile", replica=replica) \
+                    is not None:
+                # the build never ran: the key stays cold, so a retry
+                # recompiles (miss counted, same as the real cache)
+                self.executors.stats.misses += 1
+                raise InjectedFault(
+                    "compile", detail=f"stub executor build bs={bs}")
             rep.compiled.add(exec_key)
             self.executors.stats.misses += 1
             self.clock.advance(self.compile_s)   # jit compiles host-side
@@ -335,13 +365,37 @@ class StubEngine:
         self.clock.advance(self.stage_s)         # pad/stack/enqueue
         start = max(self.clock(), rep.device_free_s)
         done = start + self.service_s(bs) / rep.speed
-        rep.device_free_s = done
+        hang = False
+        if inj.enabled:
+            spec = inj.poll("poison", replica=replica)
+            if spec is not None:
+                inj.mark_poisoned(requests[spec.member % len(requests)][0])
+            hang = inj.poll("hang", replica=replica) is not None
+        if not hang:
+            # a hung batch never occupied the device: its timeline must
+            # not delay subsequent dispatches on this replica
+            rep.device_free_s = done
         self.dispatches.append((key, len(requests)))
         sc = key[0]
         self._traffic[sc] = self._traffic.get(sc, 0) + 1
         # deterministic output the tests can verify end-to-end
         outs = [x * 2.0 for _, x in requests]
+        if inj.enabled and inj.poisoned_names():
+            outs = [np.full_like(np.asarray(y), np.nan)
+                    if inj.is_poisoned(nm) else y
+                    for (nm, _), y in zip(requests, outs)]
         clock = self.clock
+
+        if hang:
+            def ready_hung() -> bool:
+                return False
+
+            def complete_hung() -> None:
+                raise InjectedFault(
+                    "hang", detail="completion forced on a hung dispatch")
+
+            return outs, {"cold": cold, "ready": ready_hung,
+                          "complete": complete_hung, "done_s": done}
 
         def ready() -> bool:
             return rep.dead or clock() >= done - 1e-12
@@ -456,8 +510,8 @@ def attach_resolve_probe(queue, clock=None) -> dict:
     resolve_at: dict = {}
     orig_submit = queue.submit
 
-    def submit(name, x, deadline_ms=None):
-        fut = orig_submit(name, x, deadline_ms=deadline_ms)
+    def submit(name, x, deadline_ms=None, **kw):
+        fut = orig_submit(name, x, deadline_ms=deadline_ms, **kw)
         fut.add_done_callback(
             lambda f: resolve_at.__setitem__(id(f), clock()))
         return fut
@@ -958,8 +1012,8 @@ def _attach_order_probe(queue) -> list:
     order: list = []
     orig_submit = queue.submit
 
-    def submit(name, x, deadline_ms=None):
-        fut = orig_submit(name, x, deadline_ms=deadline_ms)
+    def submit(name, x, deadline_ms=None, **kw):
+        fut = orig_submit(name, x, deadline_ms=deadline_ms, **kw)
         fut.add_done_callback(lambda f: order.append(id(f)))
         return fut
 
@@ -1201,4 +1255,160 @@ def run_replica_fault_smoke(verbose: bool = True) -> dict:
               f"healthy {rs.healthy_count()}/3")
         print("[sim] replica fault smoke OK (zero stranded futures, "
               "admission capacity shrunk, real compiles: 0)")
+    return out
+
+
+def run_chaos_smoke(verbose: bool = True) -> dict:
+    """End-to-end failure containment under a seeded chaos schedule
+    (the ISSUE 10 contract; see docs/ROBUSTNESS.md).
+
+    A three-replica `StubEngine` world takes a bursty trace while a
+    `ChaosInjector` fires every site in the taxonomy at deterministic
+    occurrence indices: a transient dispatch raise (inline retry with
+    backoff), an injected compile failure (retry recompiles), a hung
+    device future (the dispatch watchdog converts it into a retryable
+    `WatchdogTimeout`), a poisoned member (quarantine bisection fails
+    exactly the offending request name with `PoisonedRequest`; its
+    batch-mates resolve bitwise-equal to the fault-free oracle), and a
+    replica kill (the PR 9 `ReplicaSet` rescue path). A second phase
+    floods the queue to trip the `BrownoutController`: best-effort
+    submissions shed deterministically while a guaranteed request is
+    admitted and served; draining the backlog recovers admission.
+
+    Asserts: zero stranded futures, every failed future carries
+    `PoisonedRequest` for the one poisoned name, every other output
+    bitwise-equal to ``x * 2.0``, per-key resolution order preserved,
+    the shed count exactly matches the deterministic expectation, and
+    all five sites actually fired. Zero real compiles.
+    """
+    from .chaos import SITES, ChaosInjector, FaultPlan, FaultSpec
+    from .resilience import BrownoutController, PoisonedRequest
+
+    clock = SimClock()
+    # Two shape classes over four names -> mixed-name batches inside
+    # each class, so quarantine bisection has innocent batch-mates to
+    # exonerate; two group keys keep two replica lanes busy.
+    names = ["cxa0", "cxa1", "cxb0", "cxb1"]
+    engine = StubEngine(clock, base_s=0.004, per_item_s=0.001,
+                        stage_s=0.002, compile_s=0.25, replicas=3,
+                        sclass_of=lambda name: name[:3])
+    for nm in names:
+        engine.register(nm)
+    xs = {nm: np.full((4, 3), float(i + 1), np.float32)
+          for i, nm in enumerate(names)}
+    # Warm class "cxa" on every replica; leave "cxb" cold so the
+    # injected compile failure has a real cold build to land on.
+    for i in range(3):
+        for bs in (1, 2, 4):
+            engine.serve_group([("cxa0", xs["cxa0"])] * bs, replica=i)
+
+    plan = FaultPlan((
+        FaultSpec(site="compile", at=0),             # first cold build fails
+        FaultSpec(site="dispatch", at=5),            # transient raise -> retry
+        FaultSpec(site="hang", at=12),               # watchdog must fire
+        FaultSpec(site="poison", at=18, member=1),   # one name goes toxic
+        FaultSpec(site="replica", at=30),            # a lane dies mid-trace
+        FaultSpec(site="dispatch", at=40),           # retry again, late
+    ))
+    injector = ChaosInjector(plan)
+    brownout = BrownoutController(high_depth=48, low_depth=8)
+    queue = RequestQueue(engine, target_batch=4,
+                         default_deadline_ms=2000.0, clock=clock,
+                         replicas=3, max_inflight=4,
+                         injector=injector, resilience=True,
+                         brownout=brownout)
+    order = _attach_order_probe(queue)
+
+    # Phase 1 — the chaos trace: every site fires while traffic flows.
+    trace = bursty_trace(20, 9, 0.010, names, seed=7)
+    t0 = clock()
+    trace = [Arrival(a.t_s + t0 + 0.05, a.name) for a in trace]
+    futs, rej = replay_trace(queue, trace, xs.__getitem__)
+    assert not any(rej), "phase 1 must not shed (depth stays under high)"
+    queue.drain()
+    assert queue.depth() == 0 and queue.inflight() == 0
+    assert all(f.done() for f in futs), "chaos stranded futures"
+
+    poisoned = injector.poisoned_names()
+    assert len(poisoned) == 1, f"exactly one name goes toxic: {poisoned}"
+    n_quarantined = 0
+    for arr, f in zip(trace, futs):
+        err = f.exception(timeout=0)
+        if err is not None:
+            assert isinstance(err, PoisonedRequest), \
+                f"only quarantine may fail a future: {err!r}"
+            assert arr.name in poisoned, \
+                f"innocent request {arr.name!r} quarantined"
+            n_quarantined += 1
+        else:
+            np.testing.assert_array_equal(f.result(timeout=0),
+                                          xs[arr.name] * 2.0)
+    assert n_quarantined >= 1, "the poison fault must quarantine someone"
+    _assert_key_order(trace, futs, order)
+
+    fired_sites = {s for s, _ in injector.fired()}
+    assert fired_sites == set(SITES), \
+        f"every site must fire: missing {set(SITES) - fired_sites}"
+    snap = queue.stats.snapshot()
+    res = snap["resilience"]
+    assert res["retries"] >= 1, res
+    assert res["quarantined"] == n_quarantined >= 1, res
+    assert res["watchdog_fires"] >= 1, res
+    assert queue.replica_set.healthy_count() == 2, \
+        "the injected replica kill must mark one lane unhealthy"
+    assert snap["replicas"]["requeued"] >= 1, snap["replicas"]
+
+    # Phase 2 — brownout: flood past the high watermark without
+    # pumping. Depth at submit i is exactly i, so submissions at depth
+    # >= high_depth shed deterministically, in submit order.
+    n_flood = 60
+    flood_futs = []
+    for i in range(n_flood):
+        try:
+            flood_futs.append(queue.submit(names[i % len(names)],
+                                           xs[names[i % len(names)]]))
+        except AdmissionError as e:
+            assert e.reason == "brownout", e
+    expect_shed = n_flood - brownout.high_depth
+    shed = queue.stats.snapshot()["resilience"]["shed"]
+    assert shed == expect_shed, \
+        f"shed count must be deterministic: {shed} != {expect_shed}"
+    assert brownout.active, "flood must trip the brownout"
+    g = queue.submit("cxa0", xs["cxa0"], guaranteed=True)
+    queue.drain()
+    assert g.done(), "guaranteed traffic must serve through brownout"
+    if g.exception(timeout=0) is None:
+        np.testing.assert_array_equal(g.result(timeout=0),
+                                      xs["cxa0"] * 2.0)
+    for f in flood_futs:
+        assert f.done(), "brownout stranded an admitted future"
+    # depth is back to zero: the next best-effort submit both recovers
+    # the controller (hysteresis low watermark) and is admitted
+    f2 = queue.submit("cxa0", xs["cxa0"])
+    assert not brownout.active, "drained queue must recover admission"
+    queue.drain()
+    assert f2.done()
+
+    rescued = queue._resilience.rescued
+    out = {"completed": queue.stats.snapshot()["completed"],
+           "requests": len(futs),
+           "chaos_rescued": rescued,
+           "chaos_shed": shed,
+           "quarantined": n_quarantined,
+           "retries": res["retries"],
+           "watchdog_fires": res["watchdog_fires"],
+           "faults_fired": len(injector.fired()),
+           "healthy": queue.replica_set.healthy_count()}
+    if verbose:
+        print(f"[sim] chaos: {len(injector.fired())} faults fired over "
+              f"{len(futs)} requests -> {rescued} rescued, "
+              f"{n_quarantined} quarantined ({sorted(poisoned)}), "
+              f"{res['retries']} retries, "
+              f"{res['watchdog_fires']} watchdog fires, "
+              f"healthy {queue.replica_set.healthy_count()}/3")
+        print(f"[sim] brownout: {shed} best-effort shed "
+              f"(deterministic), guaranteed request served, "
+              f"admission recovered after drain")
+        print("[sim] chaos smoke OK (zero stranded futures, quarantine "
+              "isolated the poisoned member, real compiles: 0)")
     return out

@@ -174,6 +174,13 @@ class ServerStats:
         self._replica_requeued = Counter("replicas.requeued", m)
         self._replica_dups = Counter("replicas.dup_suppressed", m)
         self._key_epochs = Counter("replicas.key_epochs", m)
+        # resilience telemetry (docs/ROBUSTNESS.md): recovery actions
+        # taken by the chaos/resilience layer — always present (zero)
+        # so snapshots stay shape-stable with resilience disabled
+        self._res_retries = Counter("resilience.retries", m)
+        self._res_quarantined = Counter("resilience.quarantined", m)
+        self._res_watchdog = Counter("resilience.watchdog_fires", m)
+        self._res_shed = Counter("resilience.shed", m)
 
     # ------------------------------------------------------------ hooks ----
     def on_arrival(self, now: float) -> None:
@@ -251,6 +258,24 @@ class ServerStats:
         """Requeue skipped a member whose future had already resolved —
         a duplicate dispatch suppressed."""
         self._replica_dups.inc(n)
+
+    # ------------------------------------------- resilience hooks ---------
+    def on_retry(self) -> None:
+        """One inline retry dispatch of a transiently failed batch."""
+        self._res_retries.inc()
+
+    def on_quarantined(self) -> None:
+        """One member failed with `PoisonedRequest` by bisection."""
+        self._res_quarantined.inc()
+
+    def on_watchdog_fire(self) -> None:
+        """One in-flight batch converted from a hang into a retryable
+        `WatchdogTimeout` by the dispatch watchdog."""
+        self._res_watchdog.inc()
+
+    def on_shed(self, n: int = 1) -> None:
+        """Best-effort submissions rejected by brownout load shedding."""
+        self._res_shed.inc(n)
 
     # ------------------------------------------- legacy attribute views ----
     @property
@@ -437,6 +462,12 @@ class ServerStats:
             "overlap_p50": self.overlap_percentile(50),
             "overlap_p90": self.overlap_percentile(90),
             "overlap_samples": self.overlap_samples,
+            "resilience": {
+                "retries": self._res_retries.value,
+                "quarantined": self._res_quarantined.value,
+                "watchdog_fires": self._res_watchdog.value,
+                "shed": self._res_shed.value,
+            },
         }
         # only multi-replica frontends grow the block: single-pipeline
         # snapshots stay byte-identical to the pre-replica format

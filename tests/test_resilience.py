@@ -1,0 +1,185 @@
+"""Failure-containment tests (ISSUE 10): arbitrary seeded chaos
+schedules must never strand a future, resolve one twice, corrupt an
+innocent request's output, or break per-key ordering. The property
+test runs under the deterministic hypothesis stub offline, so every
+example is a fixed, replayable schedule."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (BrownoutController, ChaosInjector, FaultPlan,
+                           FaultSpec, InjectedFault, PoisonedRequest,
+                           RequestQueue, RetryPolicy, SimClock, StubEngine,
+                           bursty_trace, replay_trace)
+from repro.serving.chaos import SITES
+from repro.serving.simulate import (Arrival, _assert_key_order,
+                                    _attach_order_probe)
+
+NAMES = ["pqa0", "pqa1", "pqb0", "pqb1"]
+
+
+def _world(plan, *, replicas=None, trace_seed=0, n_bursts=8, burst=6):
+    """A StubEngine world on SimClock with resilience installed: replay
+    a bursty trace under ``plan`` and drain. Returns everything the
+    invariant checks need."""
+    clock = SimClock()
+    engine = StubEngine(clock, base_s=0.004, per_item_s=0.001,
+                        stage_s=0.002, compile_s=0.25,
+                        replicas=replicas or 1,
+                        sclass_of=lambda name: name[:3])
+    for nm in NAMES:
+        engine.register(nm)
+    xs = {nm: np.full((4, 3), float(i + 1), np.float32)
+          for i, nm in enumerate(NAMES)}
+    injector = ChaosInjector(plan)
+    kw = {}
+    if replicas:
+        kw = {"replicas": replicas, "max_inflight": 4}
+    queue = RequestQueue(engine, target_batch=4, default_deadline_ms=2000.0,
+                        clock=clock, injector=injector, resilience=True, **kw)
+    order = _attach_order_probe(queue)
+    trace = bursty_trace(n_bursts, burst, 0.010, NAMES, seed=trace_seed)
+    t0 = clock()
+    trace = [Arrival(a.t_s + t0 + 0.05, a.name) for a in trace]
+    futs, rej = replay_trace(queue, trace, xs.__getitem__)
+    queue.drain()
+    return queue, injector, trace, futs, rej, order, xs
+
+
+def _check_invariants(injector, trace, futs, order, xs):
+    """The universal containment contract, independent of schedule:
+    exactly-once resolution, typed failures only, bitwise-equal
+    successes, per-key order among non-quarantined requests."""
+    admitted = [(a, f) for a, f in zip(trace, futs) if f is not None]
+    assert all(f.done() for _, f in admitted), "stranded futures"
+    # exactly once: the done-callback probe fires once per future
+    assert len(order) == len(set(order)) == len(admitted), \
+        "a future resolved zero or multiple times"
+    poisoned = injector.poisoned_names()
+    ok = []
+    for arr, f in zip(trace, futs):
+        if f is None:
+            continue
+        err = f.exception(timeout=0)
+        if err is None:
+            np.testing.assert_array_equal(f.result(timeout=0),
+                                          xs[arr.name] * 2.0)
+            ok.append((arr, f))
+        elif isinstance(err, PoisonedRequest):
+            assert arr.name in poisoned, \
+                f"innocent request {arr.name!r} quarantined"
+        else:
+            # only an exhausted permanent fault may surface raw
+            assert isinstance(err, InjectedFault) and not err.transient, \
+                f"unexpected failure type: {err!r}"
+    _assert_key_order([a for a, _ in ok], [f for _, f in ok], order)
+
+
+class TestChaosProperty:
+    @given(trace_seed=st.integers(0, 9999),
+           replicas=st.integers(2, 3),
+           faults=st.lists(st.tuples(st.sampled_from(SITES),
+                                     st.integers(0, 24),
+                                     st.booleans()),
+                           min_size=0, max_size=6),
+           member=st.integers(0, 7))
+    @settings(max_examples=8, deadline=None)
+    def test_property_containment_under_arbitrary_schedules(
+            self, trace_seed, replicas, faults, member):
+        specs, used, killed = [], set(), 0
+        for site, at, perm in faults:
+            if (site, at) in used:
+                continue
+            if site == "replica":
+                if killed:        # at most one lane dies: >=1 healthy
+                    continue
+                killed += 1
+            used.add((site, at))
+            mode = "permanent" if (perm and site == "dispatch") \
+                else "transient"
+            specs.append(FaultSpec(site=site, at=at, mode=mode,
+                                   member=member))
+        _, injector, trace, futs, _, order, xs = _world(
+            FaultPlan(tuple(specs)), replicas=replicas,
+            trace_seed=trace_seed)
+        _check_invariants(injector, trace, futs, order, xs)
+
+    def test_seeded_plan_replays_identically(self):
+        # Same seed -> same plan -> bitwise-identical outcome set.
+        def run():
+            plan = FaultPlan.seeded(seed=11, n_faults=5, horizon=30,
+                                    sites=("dispatch", "compile", "hang",
+                                           "poison"))
+            _, inj, trace, futs, _, _, _ = _world(plan, replicas=2,
+                                                  trace_seed=3)
+            outs = []
+            for a, f in zip(trace, futs):
+                err = f.exception(timeout=0) if f is not None else None
+                outs.append((a.name, type(err).__name__ if err else
+                             float(np.asarray(f.result(timeout=0)).sum())))
+            return inj.fired(), tuple(outs)
+        assert run() == run()
+
+
+class TestPermanentFault:
+    def test_permanent_dispatch_fault_fails_only_its_batch(self):
+        plan = FaultPlan((FaultSpec(site="dispatch", at=4,
+                                    mode="permanent"),))
+        _, injector, trace, futs, rej, order, xs = _world(plan, replicas=2)
+        assert not any(rej)
+        failed = [(a, f) for a, f in zip(trace, futs)
+                  if f.exception(timeout=0) is not None]
+        assert failed, "the permanent fault must surface to its members"
+        for _, f in failed:
+            err = f.exception(timeout=0)
+            assert isinstance(err, InjectedFault) and not err.transient
+        _check_invariants(injector, trace, futs, order, xs)
+
+
+class TestSerialPath:
+    def test_serial_retry_and_quarantine(self):
+        # No pipeline, no replicas: _dispatch_group's inline containment.
+        plan = FaultPlan((FaultSpec(site="dispatch", at=3),
+                          FaultSpec(site="hang", at=6),
+                          FaultSpec(site="poison", at=9, member=0)))
+        queue, injector, trace, futs, rej, order, xs = _world(plan)
+        assert not any(rej)
+        _check_invariants(injector, trace, futs, order, xs)
+        poisoned = injector.poisoned_names()
+        assert len(poisoned) == 1
+        n_failed = sum(1 for f in futs if f.exception(timeout=0) is not None)
+        res = queue.stats.snapshot()["resilience"]
+        assert res["retries"] >= 1, res
+        assert res["quarantined"] == n_failed >= 1, res
+        fired = {s for s, _ in injector.fired()}
+        assert fired == {"dispatch", "hang", "poison"}
+
+
+class TestUnits:
+    def test_retry_policy_deterministic_and_bounded(self):
+        p = RetryPolicy(max_attempts=3, backoff_base_s=1e-3, seed=42)
+        a = [p.backoff_s(i, token=7) for i in (1, 2, 3)]
+        b = [p.backoff_s(i, token=7) for i in (1, 2, 3)]
+        assert a == b, "backoff must be a pure function of (seed,token,i)"
+        assert a[0] < a[1] < a[2], "backoff must grow"
+        assert p.backoff_s(1, token=8) != a[0], "token decorrelates jitter"
+
+    def test_brownout_hysteresis(self):
+        b = BrownoutController(high_depth=10, low_depth=4)
+        assert not b.observe(9, now=0.0)
+        assert b.observe(10, now=0.1), "high watermark trips"
+        assert b.observe(5, now=0.2), "stays active above low watermark"
+        assert not b.observe(4, now=0.3), "recovers at low watermark"
+        assert not b.observe(9, now=0.4), "re-arms only at high"
+
+    def test_null_injector_is_inert(self):
+        from repro.serving import NULL_INJECTOR
+        assert not NULL_INJECTOR.enabled
+        assert not NULL_INJECTOR.is_poisoned("anything")
+
+    def test_injector_replica_filter(self):
+        plan = FaultPlan((FaultSpec(site="dispatch", at=0, replica=1),))
+        inj = ChaosInjector(plan)
+        assert inj.poll("dispatch", replica=0) is None  # wrong lane
+        inj2 = ChaosInjector(plan)
+        assert inj2.poll("dispatch", replica=1) is not None

@@ -357,6 +357,52 @@ class TestConcurrencyPass:
         assert "field-race" in _rules(findings)
         assert any("Router.depth" in f.message for f in errs)
 
+    def test_resilience_files_in_default_scope(self):
+        from repro.analysis.static.concurrency_pass import (LOCK_ORDER,
+                                                            SCOPE_DIRS)
+        assert "src/repro/serving/chaos.py" in SCOPE_DIRS
+        assert "src/repro/serving/resilience.py" in SCOPE_DIRS
+        # The coordinator's handler runs from the pipeline's failure
+        # path, so its lock nests inside the pipeline's; the injector
+        # is polled inside the executor-cache miss path.
+        assert (LOCK_ORDER.index("DispatchPipeline._lock")
+                < LOCK_ORDER.index("ResilienceCoordinator._lock"))
+        assert (LOCK_ORDER.index("ExecutorCache._lock")
+                < LOCK_ORDER.index("ChaosInjector._lock"))
+        for name in ("ResilienceCoordinator._lock", "DispatchWatchdog._lock",
+                     "BrownoutController._lock", "ChaosInjector._lock"):
+            for leaf in ("Counter._lock", "Histogram._lock"):
+                assert LOCK_ORDER.index(name) < LOCK_ORDER.index(leaf)
+
+    def test_unlocked_retry_counter_caught(self, tmp_path):
+        # Known-bad resilience fixture: a retry loop bumps its attempt
+        # counter lock-free while the public snapshot reads it under
+        # the lock — the shape of bug ResilienceCoordinator avoids by
+        # counting retries through the locked ServerStats hooks.
+        mod = tmp_path / "res.py"
+        mod.write_text(textwrap.dedent("""\
+            import threading
+
+            class Coordinator:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.retries = 0
+                    self._t = threading.Thread(target=self._retry_loop,
+                                               daemon=True)
+
+                def _retry_loop(self):
+                    while True:
+                        self.retries += 1
+
+                def snapshot(self):
+                    with self._lock:
+                        return {"retries": self.retries}
+        """))
+        findings = analyze_paths([mod], entry_classes={"Coordinator"})
+        errs = _errors(findings)
+        assert "field-race" in _rules(findings)
+        assert any("Coordinator.retries" in f.message for f in errs)
+
 
 # -------------------------------------------------------------- bench -----
 
